@@ -1,0 +1,59 @@
+"""Shared benchmark harness.
+
+The paper's datasets are MF embeddings (d=200) of Amazon-K / MovieLens /
+Netflix; the container is offline, so each benchmark runs a REDUCED-SCALE
+replica with the same Gaussian-norm profile (paper Fig. 2) and the same
+n:m aspect ratio. Full-scale shapes are exercised by the dry-run
+(`python -m repro.launch.dryrun --engine`). Timings below are CPU trends,
+not TPU wall-clock — §Roofline covers the TPU story.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import synthetic_embeddings
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchDataset:
+    name: str
+    n: int
+    m: int
+    d: int = 200
+
+
+# reduced replicas, n:m ratios ≈ paper's (3.3:1, 2.8:1, 27:1)
+BENCH_DATASETS = (
+    BenchDataset("amazon-k/64", 21_983, 6_727),
+    BenchDataset("movielens/16", 10_158, 3_690),
+    BenchDataset("netflix/32", 15_005, 555),
+)
+
+
+def load(ds: BenchDataset, seed: int = 0):
+    users, items = synthetic_embeddings(jax.random.PRNGKey(seed), ds.n,
+                                        ds.m, ds.d)
+    return users, items
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall seconds per call (blocking on the result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    print(row)
+    return row

@@ -1,0 +1,61 @@
+"""Table 3 — decomposed query time: step 1 (u·q + bound lookup), step 2
+(R↓_k/R↑_k + Lemma-1 masks), step 3 (selection fill). The paper's claim —
+step 1 dominates, steps 2-3 are negligible — is the invariant checked
+here. Steps are jitted separately, so boundaries are coarser than the
+paper's C++ timers but the ordering is the same."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import BENCH_DATASETS, csv_row, load, timeit
+from repro.core.query import lookup_bounds, select_topk
+from repro.core.rank_table import build_rank_table
+from repro.core.types import RankTableConfig, kth_smallest
+
+K, C = 10, 2.0
+
+
+def run(quick: bool = False) -> list[str]:
+    rows = []
+    datasets = BENCH_DATASETS[:1] if quick else BENCH_DATASETS
+    for ds in datasets:
+        users, items = load(ds)
+        cfg = RankTableConfig(tau=500, omega=10, s=64)
+        rt = build_rank_table(users, items, cfg, jax.random.PRNGKey(0))
+        q = items[3]
+
+        @jax.jit
+        def step1(qq):
+            uq = (users @ qq).astype(jnp.float32)
+            return lookup_bounds(rt, uq)
+
+        r_lo, r_up, est = step1(q)
+
+        @jax.jit
+        def step2(r_lo, r_up):
+            Rl, Ru = kth_smallest(r_lo, K), kth_smallest(r_up, K)
+            return Rl, Ru, r_up <= C * Rl, r_lo > Ru
+
+        @jax.jit
+        def step3(r_lo, r_up, est):
+            return select_topk(r_lo, r_up, est, k=K, c=C,
+                               m_items=rt.m).indices
+
+        t1 = timeit(step1, q)
+        t2 = timeit(step2, r_lo, r_up)
+        t3 = timeit(step3, r_lo, r_up, est)
+        rows.append(csv_row(f"table3/{ds.name}/step1", t1 * 1e6,
+                            f"sec={t1:.2e}"))
+        rows.append(csv_row(f"table3/{ds.name}/step2", t2 * 1e6,
+                            f"sec={t2:.2e}"))
+        rows.append(csv_row(f"table3/{ds.name}/step3", t3 * 1e6,
+                            f"sec={t3:.2e};step1_share="
+                            f"{t1/(t1+t2+t3):.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

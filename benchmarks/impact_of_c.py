@@ -1,0 +1,60 @@
+"""Figure 4 — impact of c: time / accuracy / overall ratio for Ours vs
+QSRP with c ∈ {1.5, 2.0, 2.5, 3.0}, k = 10. Ours must be c-insensitive
+(step 1 dominates and ignores c); QSRP refines less as c grows."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import BENCH_DATASETS, csv_row, load, timeit
+from repro.core import ReverseKRanksEngine, metrics
+from repro.core.exact import exact_ranks, reverse_k_ranks
+from repro.core.qsrp import build_qsrp_index, qsrp_query
+from repro.core.types import RankTableConfig
+
+K = 10
+CS = (1.5, 2.0, 2.5, 3.0)
+N_EVAL = 6
+
+
+def run(quick: bool = False) -> list[str]:
+    rows = []
+    datasets = BENCH_DATASETS[:1] if quick else BENCH_DATASETS[:2]
+    cs = CS[:2] if quick else CS
+    for ds in datasets:
+        users, items = load(ds)
+        cfg = RankTableConfig(tau=500, omega=10, s=64)
+        eng = ReverseKRanksEngine.build(users, items, cfg,
+                                        jax.random.PRNGKey(1))
+        qsrp_idx = build_qsrp_index(users, items, levels=1000)
+        for c in cs:
+            accs, ratios, qrefined = [], [], []
+            t_q = timeit(lambda qq: eng.query(qq, k=K, c=c).indices,
+                         items[11], iters=3)
+            t_qsrp_tot = 0.0
+            for qi in range(N_EVAL):
+                q = items[qi * 53]
+                truth = np.asarray(exact_ranks(users, items, q))
+                ex_idx, _ = reverse_k_ranks(users, items, q, K)
+                r = eng.query(q, k=K, c=c)
+                accs.append(metrics.accuracy(np.asarray(r.indices),
+                                             np.asarray(ex_idx), truth, c))
+                ratios.append(metrics.overall_ratio(
+                    np.asarray(r.indices), np.asarray(ex_idx), truth))
+                t0 = time.perf_counter()
+                _, _, nref = qsrp_query(qsrp_idx, users, items, q, K, c)
+                t_qsrp_tot += time.perf_counter() - t0
+                qrefined.append(nref)
+            rows.append(csv_row(
+                f"fig4/{ds.name}/c{c}/ours", t_q * 1e6,
+                f"acc={np.mean(accs):.3f};ratio={np.mean(ratios):.3f}"))
+            rows.append(csv_row(
+                f"fig4/{ds.name}/c{c}/qsrp", t_qsrp_tot / N_EVAL * 1e6,
+                f"refined={np.mean(qrefined):.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

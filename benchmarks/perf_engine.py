@@ -1,0 +1,116 @@
+"""§Perf H4 — engine-query hillclimb harness.
+
+Part A (dry-run, 512 host devices): lowers the sharded query for each
+(τ, storage_dtype) variant at full Amazon-K scale and reports the
+three roofline terms. Run with:
+    PYTHONPATH=src python -m benchmarks.perf_engine --roofline
+
+Part B (CPU, real execution): measures accuracy / overall-ratio of the
+same variants on a reduced replica, proving the memory-term optimizations
+don't cost quality. Run with:
+    PYTHONPATH=src python -m benchmarks.perf_engine --quality
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+VARIANTS = [
+    ("baseline_tau500_f32", dict(tau=500, storage_dtype="float32")),
+    ("tau128_f32", dict(tau=128, storage_dtype="float32")),
+    ("tau500_bf16", dict(tau=500, storage_dtype="bfloat16")),
+    ("tau128_bf16", dict(tau=128, storage_dtype="bfloat16")),
+]
+
+
+def roofline_mode():
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.paper_engine import AMAZON_K, DEFAULT_TABLE
+    from repro.core import distributed as D
+    from repro.core.types import RankTable, RankTableConfig
+    from repro.launch import roofline as RL
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = D.flat_mesh(make_production_mesh(multi_pod=True))
+    chips = mesh.devices.size
+    n = -(-AMAZON_K.n_users // chips) * chips
+    d = AMAZON_K.d
+    users_sds = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    q_sds = jax.ShapeDtypeStruct((d,), jnp.float32)
+    print(f"amazon-k query on flat{chips}: n={n:,} d={d}")
+    for name, kw in VARIANTS:
+        cfg = dataclasses.replace(DEFAULT_TABLE, **kw)
+        st = jnp.dtype(cfg.storage_dtype)
+        rt_sds = RankTable(
+            thresholds=jax.ShapeDtypeStruct((n, cfg.tau), st),
+            table=jax.ShapeDtypeStruct((n, cfg.tau), st),
+            m=jax.ShapeDtypeStruct((), jnp.int32))
+        qfn = D.make_query_fn(mesh, k=10, n=n, c=2.0)
+        compiled = jax.jit(qfn).lower(rt_sds, users_sds, q_sds).compile()
+        roof = RL.analyze(compiled, chips=chips, model_flops=2.0 * n * d)
+        print(f"{name:22s} mem={roof.memory_s*1e6:7.1f}µs "
+              f"comp={roof.compute_s*1e6:6.1f}µs "
+              f"coll={roof.collective_s*1e6:6.1f}µs "
+              f"hbm/dev={roof.hbm_bytes/2**20:7.1f}MiB "
+              f"→ {roof.bottleneck}")
+
+    # §Perf H6: batched queries amortize the (users + table) stream
+    for b in (16, 64):
+        cfg = dataclasses.replace(DEFAULT_TABLE, tau=128)
+        rt_sds = RankTable(
+            thresholds=jax.ShapeDtypeStruct((n, cfg.tau), jnp.float32),
+            table=jax.ShapeDtypeStruct((n, cfg.tau), jnp.float32),
+            m=jax.ShapeDtypeStruct((), jnp.int32))
+        qs_sds = jax.ShapeDtypeStruct((b, d), jnp.float32)
+        bq = D.make_batch_query_fn(mesh, k=10, n=n, c=2.0, q_batch=b)
+        compiled = jax.jit(bq).lower(rt_sds, users_sds, qs_sds).compile()
+        roof = RL.analyze(compiled, chips=chips,
+                          model_flops=2.0 * n * d * b)
+        print(f"tau128_batch{b:<3d}        mem={roof.memory_s/b*1e6:7.1f}µs"
+              f"/q comp={roof.compute_s/b*1e6:5.1f}µs/q "
+              f"coll={roof.collective_s/b*1e6:5.1f}µs/q "
+              f"hbm/dev={roof.hbm_bytes/2**20:7.1f}MiB "
+              f"→ {roof.bottleneck} (batch of {b})")
+
+
+def quality_mode():
+    import jax
+    import numpy as np
+    from repro.core import ReverseKRanksEngine, metrics
+    from repro.core.exact import exact_ranks, reverse_k_ranks
+    from repro.core.types import RankTableConfig
+    from repro.data.pipeline import synthetic_embeddings
+
+    users, items = synthetic_embeddings(jax.random.PRNGKey(0), 20_000,
+                                        8_000, 200)
+    for name, kw in VARIANTS:
+        cfg = RankTableConfig(omega=10, s=64, **kw)
+        eng = ReverseKRanksEngine.build(users, items, cfg,
+                                        jax.random.PRNGKey(1))
+        accs, ratios = [], []
+        for qi in range(12):
+            q = items[qi * 71]
+            truth = np.asarray(exact_ranks(users, items, q))
+            ex_idx, _ = reverse_k_ranks(users, items, q, 10)
+            r = eng.query(q, k=10, c=2.0)
+            accs.append(metrics.accuracy(np.asarray(r.indices),
+                                         np.asarray(ex_idx), truth, 2.0))
+            ratios.append(metrics.overall_ratio(
+                np.asarray(r.indices), np.asarray(ex_idx), truth))
+        print(f"{name:22s} acc={np.mean(accs):.4f} "
+              f"ratio={np.mean(ratios):.4f} "
+              f"index={eng.memory_bytes()/2**20:.1f}MiB")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--roofline", action="store_true")
+    ap.add_argument("--quality", action="store_true")
+    args = ap.parse_args()
+    if args.roofline:
+        roofline_mode()
+    if args.quality:
+        quality_mode()

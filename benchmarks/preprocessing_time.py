@@ -1,0 +1,42 @@
+"""Table 2 — pre-processing time: Ours (Algorithm 1) vs QSRP's all-pairs
+summarization, per dataset replica. The paper's headline asymmetry
+(O((n+m)d + m log m) vs Ω(nmd)) shows directly at reduced scale."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import BENCH_DATASETS, csv_row, load
+from repro.core.qsrp import build_qsrp_index
+from repro.core.rank_table import build_rank_table
+from repro.core.types import RankTableConfig
+
+
+def run(quick: bool = False) -> list[str]:
+    rows = []
+    datasets = BENCH_DATASETS[:1] if quick else BENCH_DATASETS
+    for ds in datasets:
+        users, items = load(ds)
+        cfg = RankTableConfig(tau=500, omega=10, s=64)
+
+        t0 = time.perf_counter()
+        rt = build_rank_table(users, items, cfg, jax.random.PRNGKey(0))
+        jax.block_until_ready(rt.table)
+        ours = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        qi = build_qsrp_index(users, items, levels=1000,
+                              block=512 if quick else 1024)
+        jax.block_until_ready(qi.quantile_scores)
+        qsrp = time.perf_counter() - t0
+
+        rows.append(csv_row(f"table2/{ds.name}/ours", ours * 1e6,
+                            f"seconds={ours:.3f}"))
+        rows.append(csv_row(f"table2/{ds.name}/qsrp", qsrp * 1e6,
+                            f"seconds={qsrp:.3f};speedup={qsrp/ours:.1f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Benchmark driver: one function per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]``
+
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract). The
+roofline table is produced separately from the dry-run artifacts
+(``python -m repro.launch.dryrun --all --both-meshes``; summarized by
+``python -m benchmarks.roofline_report``).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (decomposed_time, impact_of_c, impact_of_k,
+                        impact_of_tau, kernel_bench, preprocessing_time)
+
+SUITES = {
+    "table1_impact_of_tau": impact_of_tau.run,
+    "table2_preprocessing": preprocessing_time.run,
+    "table3_decomposed": decomposed_time.run,
+    "fig3_impact_of_k": impact_of_k.run,
+    "fig4_impact_of_c": impact_of_c.run,
+    "kernel_paths": kernel_bench.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweeps (CI-speed)")
+    ap.add_argument("--only", default=None, choices=list(SUITES))
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = []
+    for name, fn in SUITES.items():
+        if args.only and name != args.only:
+            continue
+        print(f"# --- {name} ---")
+        try:
+            fn(quick=args.quick)
+        except Exception as e:               # keep the suite running
+            failures.append((name, repr(e)))
+            print(f"# {name} FAILED: {e!r}", file=sys.stderr)
+    print(f"# total {time.time()-t0:.1f}s")
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

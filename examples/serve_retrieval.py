@@ -1,0 +1,80 @@
+"""Item-centric retrieval serving (deliverable b): the full paper pipeline
+— ratings → JAX matrix factorization → rank-table index → batched
+c-approximate reverse k-ranks queries → §5 metrics, plus backbone-encoded
+embeddings to show the engine composes with the assigned architectures.
+
+    PYTHONPATH=src python examples/serve_retrieval.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core import ReverseKRanksEngine, RankTableConfig, metrics
+from repro.core.exact import exact_ranks, reverse_k_ranks
+from repro.data.mf import MFConfig, embeddings, train_mf
+from repro.data.pipeline import synthetic_ratings
+from repro.models.model import Model
+from repro.models import transformer as T
+
+N_USERS, N_ITEMS, K, C = 6_000, 2_500, 10, 2.0
+
+# --- 1. ratings → MF embeddings (the paper's LIBMF step, in JAX) ----------
+key = jax.random.PRNGKey(0)
+ii, jj, rr = synthetic_ratings(key, N_USERS, N_ITEMS, n_obs=300_000)
+state, losses = train_mf(key, N_USERS, N_ITEMS, ii, jj, rr,
+                         MFConfig(d=64, epochs=8, lr=1.0))
+users, items = embeddings(state)
+print(f"MF: rmse-ish loss {losses[0]:.4f} → {losses[-1]:.4f}, "
+      f"embeddings d={users.shape[1]}")
+
+# --- 2. offline index ------------------------------------------------------
+eng = ReverseKRanksEngine.build(users, items,
+                                RankTableConfig(tau=500, omega=10, s=64),
+                                jax.random.PRNGKey(1))
+
+# --- 3. batched online queries --------------------------------------------
+qidx = jax.random.randint(jax.random.PRNGKey(2), (16,), 0, N_ITEMS)
+qs = items[qidx]
+t0 = time.time()
+res = eng.query_batch(qs, k=K, c=C)
+jax.block_until_ready(res.indices)
+print(f"batched queries: {(time.time()-t0)/16*1e3:.2f} ms/query "
+      f"(batch of 16)")
+
+accs, ratios = [], []
+for b in range(8):
+    q = qs[b]
+    truth = np.asarray(exact_ranks(users, items, q))
+    ex_idx, _ = reverse_k_ranks(users, items, q, K)
+    accs.append(metrics.accuracy(np.asarray(res.indices[b]),
+                                 np.asarray(ex_idx), truth, C))
+    ratios.append(metrics.overall_ratio(np.asarray(res.indices[b]),
+                                        np.asarray(ex_idx), truth))
+print(f"accuracy {np.mean(accs):.3f}  overall-ratio {np.mean(ratios):.3f}")
+
+# --- 4. backbone-encoded embeddings (engine ∘ assigned architecture) ------
+cfg = reduced(get_config("gemma-2b"))
+model = Model(cfg)
+params = model.init_params(jax.random.PRNGKey(3))
+tok_u = jax.random.randint(jax.random.PRNGKey(4), (256, 16), 0, cfg.vocab)
+tok_i = jax.random.randint(jax.random.PRNGKey(5), (128, 16), 0, cfg.vocab)
+
+
+def encode(tokens):
+    x = T._embed(params, tokens, cfg)
+    x = T._apply_segments(params["segments"], cfg.segments(), x, cfg,
+                          jnp.arange(tokens.shape[1]))
+    return x.mean(axis=1).astype(jnp.float32)       # mean-pooled d_model
+
+
+u_emb, i_emb = encode(tok_u), encode(tok_i)
+eng2 = ReverseKRanksEngine.build(u_emb, i_emb,
+                                 RankTableConfig(tau=64, omega=4, s=16),
+                                 jax.random.PRNGKey(6))
+r2 = eng2.query(i_emb[7], k=5, c=2.0)
+print(f"backbone-embedded reverse 5-ranks for item 7 → users "
+      f"{np.asarray(r2.indices).tolist()} (engine composes with any arch)")

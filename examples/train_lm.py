@@ -1,0 +1,51 @@
+"""End-to-end training driver (deliverable b): train a ~100M-parameter
+dense LM for a few hundred steps on the deterministic synthetic pipeline,
+with checkpointing and resume.
+
+    PYTHONPATH=src python examples/train_lm.py            # ~100M, 200 steps
+    PYTHONPATH=src python examples/train_lm.py --tiny     # CI-speed
+
+The same run_training() drives the full configs on real accelerators via
+`python -m repro.launch.train --arch <id> --full-config`.
+"""
+import argparse
+import dataclasses
+import tempfile
+
+from repro.configs import get_config
+from repro.launch.train import run_training
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true", help="CI-speed run")
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+
+    base = get_config("granite-3-8b")
+    if args.tiny:
+        cfg = dataclasses.replace(
+            base, n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+            head_dim=32, d_ff=512, vocab=2048, remat="none")
+        steps, gb, seq = args.steps or 30, 4, 64
+    else:
+        # ~100M params: 12L × d512 (GQA 8/2) × ff2048, 32k vocab
+        cfg = dataclasses.replace(
+            base, n_layers=12, d_model=512, n_heads=8, n_kv_heads=2,
+            head_dim=64, d_ff=2048, vocab=32_768, remat="none")
+        steps, gb, seq = args.steps or 200, 8, 256
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        _, losses = run_training(cfg, steps=steps, global_batch=gb,
+                                 seq_len=seq, ckpt_dir=ckpt_dir,
+                                 ckpt_every=max(steps // 4, 10), lr=1e-3,
+                                 log_every=max(steps // 20, 1))
+    drop = losses[0] - losses[-1]
+    print(f"\nloss {losses[0]:.3f} → {losses[-1]:.3f} "
+          f"(drop {drop:.3f} over {steps} steps)")
+    assert drop > 0.3, "training did not learn — investigate"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""gemma-2b — GeGLU, head_dim=256, MQA. [arXiv:2403.08295; hf]
+18L d_model=2048 8H (kv=1) d_ff=16384 vocab=256000."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-2b",
+    family="dense",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=16_384,
+    vocab=256_000,
+    act="geglu",
+    tie_embeddings=True,
+)

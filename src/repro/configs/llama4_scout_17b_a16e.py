@@ -1,0 +1,20 @@
+"""llama4-scout-17b-a16e — MoE, early fusion.
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048, MoE 16e top-1."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab=202_048,
+    act="swiglu",
+    n_experts=16,
+    experts_per_tok=1,
+    moe_d_ff=8192,
+)

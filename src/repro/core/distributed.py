@@ -1,0 +1,258 @@
+"""Multi-pod sharded reverse k-ranks: the engine at 512-chip scale.
+
+Layout (see DESIGN.md §3):
+  * users + rank-table rows are ROW-SHARDED over a flat 1-D view of the
+    mesh ("shard" = pod×data×model flattened) — n/512 users per chip;
+  * items are sharded the same way for the build's norm pass and for exact
+    refinement; stratified samples are small and replicated;
+  * a query vector is replicated; step 1 (u·q + table lookup) is fully
+    local; the global top-k runs as a TREE MERGE: per-shard top-k
+    (k values) → gather of k·P candidates (not n) → re-top-k.
+
+Collective budget per query: one gather of O(k·P) floats plus the final
+selection — O(k·P) bytes on the wire instead of O(n); per-chip compute is
+O(nd/P + kP). The build's only collective is the O(m)-scalar norm gather
+for the global sort (item vectors never gather).
+
+Functions take the production mesh; internally the engine re-views its
+devices as a 1-D "shard" mesh, which is the natural layout for an index
+that has no tensor dimension to model-parallelize.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import rank_table as rt_mod
+from repro.core.query import lookup_bounds
+from repro.core.types import QueryResult, RankTable, RankTableConfig
+
+AXIS = "shard"
+
+
+def flat_mesh(mesh_or_devices) -> Mesh:
+    """1-D engine view of a (possibly multi-axis) mesh's devices."""
+    import numpy as np
+    if isinstance(mesh_or_devices, Mesh):
+        devs = mesh_or_devices.devices.reshape(-1)
+    else:
+        devs = np.asarray(mesh_or_devices).reshape(-1)
+    return Mesh(devs, (AXIS,))
+
+
+def user_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P(AXIS, None))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+# ------------------------------------------------------------------- build
+def build_sharded(users: jax.Array, items: jax.Array, cfg: RankTableConfig,
+                  key: jax.Array, mesh: Mesh) -> RankTable:
+    """Algorithm 1 on a flat mesh.
+
+    Norm pass is item-sharded (O(md/P) per chip); the global norm-sort
+    runs on the m gathered SCALARS; the per-user table build is
+    embarrassingly row-parallel (zero collectives).
+    """
+    m = items.shape[0]
+
+    norms_local = jax.shard_map(
+        lambda it: jnp.linalg.norm(it.astype(jnp.float32), axis=1),
+        mesh=mesh, in_specs=P(AXIS, None), out_specs=P(AXIS))
+    norms = norms_local(items)
+    order = jnp.argsort(-norms)                    # m scalars: cheap, global
+
+    positions, weights = rt_mod.stratified_sample_indices(key, m, cfg)
+    samples = items[order[positions]]              # (ω·s, d) — replicated
+    max_norm = norms[order[0]]
+
+    def local_build(u_shard, smp, w, mx):
+        scores = (u_shard @ smp.T).astype(jnp.float32)
+        if cfg.threshold_mode == "norm_bound":
+            bound = jnp.linalg.norm(u_shard.astype(jnp.float32),
+                                    axis=1) * mx
+            smin, smax = -bound, bound
+        else:
+            smin = scores.min(axis=1)
+            smax = scores.max(axis=1)
+            pad = cfg.range_pad * jnp.maximum(smax - smin, 1e-6)
+            smin, smax = smin - pad, smax + pad
+        thr = rt_mod.threshold_grid(smin, smax, cfg.tau)
+        table = rt_mod.estimate_table_rows(scores, w, thr)
+        st = jnp.dtype(cfg.storage_dtype)
+        return thr.astype(st), table.astype(st)
+
+    thr, table = jax.shard_map(
+        local_build, mesh=mesh,
+        in_specs=(P(AXIS, None), P(None, None), P(None), P()),
+        out_specs=(P(AXIS, None), P(AXIS, None)))(
+            users, samples, weights, max_norm)
+    return RankTable(thresholds=thr, table=table,
+                     m=jnp.asarray(m, jnp.int32))
+
+
+# ------------------------------------------------------------------- query
+def make_query_fn(mesh: Mesh, k: int, n: int, c: float):
+    """Builds the jit'd sharded query: (rank_table, users, q) → QueryResult.
+
+    Stage 1 (shard_map): local u·q + table lookup + per-shard top-k; the
+    out_specs stack each shard's k candidates into a global (k·P) set —
+    the tree-merge gather.
+    Stage 2 (plain jit): O(k·P) global selection with the §4.3 Lemma-1
+    masks; GSPMD replicates it after an all-gather of k·P floats.
+    """
+    nshards = mesh.devices.size
+    shard_n = n // nshards
+
+    def local_part(thr, tab, m_items, u_shard, q):
+        uq = (u_shard @ q).astype(jnp.float32)
+        r_lo, r_up, est = lookup_bounds(RankTable(thr, tab, m_items), uq)
+        neg_lo, _ = jax.lax.top_k(-r_lo, k)        # k smallest lower bounds
+        neg_up, _ = jax.lax.top_k(-r_up, k)
+        neg_est, cand = jax.lax.top_k(-est, k)     # k best candidates
+        shard_id = jax.lax.axis_index(AXIS)
+        gidx = cand.astype(jnp.int32) + shard_id * shard_n
+        payload = jnp.stack(
+            [-neg_est, r_lo[cand], r_up[cand]], axis=1)        # (k, 3)
+        return -neg_lo, -neg_up, payload, gidx
+
+    sharded = jax.shard_map(
+        local_part, mesh=mesh,
+        in_specs=(P(AXIS, None), P(AXIS, None), P(), P(AXIS, None), P()),
+        out_specs=(P(AXIS), P(AXIS), P(AXIS, None), P(AXIS)))
+
+    @jax.jit
+    def query_fn(rt: RankTable, users: jax.Array, q: jax.Array
+                 ) -> QueryResult:
+        all_lo, all_up, payload, gidx = sharded(
+            rt.thresholds, rt.table, rt.m, users, q)           # (k·P, …)
+        est, r_lo, r_up = payload[:, 0], payload[:, 1], payload[:, 2]
+        neg, _ = jax.lax.top_k(-all_lo, k)
+        R_lo_k = -neg[k - 1]
+        neg, _ = jax.lax.top_k(-all_up, k)
+        R_up_k = -neg[k - 1]
+        guaranteed = c * R_lo_k >= R_up_k
+        accepted = r_up <= c * R_lo_k
+        pruned = r_lo > R_up_k
+        prio = jnp.where(accepted, 0.0, jnp.where(pruned, 2.0, 1.0))
+        big = (rt.m + 2).astype(jnp.float32)
+        key_val = jnp.where(guaranteed, est, prio * big + est)
+        _, sel = jax.lax.top_k(-key_val, k)
+        return QueryResult(
+            indices=gidx[sel].astype(jnp.int32),
+            est_rank=est[sel],
+            r_lo=r_lo, r_up=r_up,              # candidate-set bounds (k·P)
+            R_lo_k=R_lo_k, R_up_k=R_up_k,
+            guaranteed=guaranteed,
+            n_accepted=jnp.sum(accepted).astype(jnp.int32),
+            n_pruned=jnp.sum(pruned).astype(jnp.int32),
+        )
+
+    return query_fn
+
+
+def make_batch_query_fn(mesh: Mesh, k: int, n: int, c: float, q_batch: int):
+    """§Perf H6 — batched sharded queries: (rank_table, users, Q (b, d)) →
+    QueryResult with leading batch axis.
+
+    The paper (and `make_query_fn`) process queries one at a time: every
+    query re-streams the user matrix and table rows (memory-bound matvec).
+    Batching b queries turns step 1 into one U_shard @ Qᵀ MATMUL — the
+    n·(d+2τ) byte stream is read ONCE for all b queries, so the per-query
+    memory term drops ~b× while compute (still tiny) grows b×. This is the
+    arithmetic-intensity lever the roofline demands for the engine.
+    """
+    nshards = mesh.devices.size
+    shard_n = n // nshards
+
+    def local_part(thr, tab, m_items, u_shard, qs):
+        scores = (u_shard @ qs.T).astype(jnp.float32)       # (n_loc, b) MXU
+        rt_local = RankTable(thr, tab, m_items)
+
+        def per_query(uq):
+            r_lo, r_up, est = lookup_bounds(rt_local, uq)
+            neg_lo, _ = jax.lax.top_k(-r_lo, k)
+            neg_up, _ = jax.lax.top_k(-r_up, k)
+            neg_est, cand = jax.lax.top_k(-est, k)
+            payload = jnp.stack([-neg_est, r_lo[cand], r_up[cand]], axis=1)
+            return -neg_lo, -neg_up, payload, cand.astype(jnp.int32)
+
+        lo, up, payload, cand = jax.vmap(per_query)(scores.T)   # (b, k, …)
+        shard_id = jax.lax.axis_index(AXIS)
+        gidx = cand + shard_id * shard_n
+        return lo, up, payload, gidx
+
+    sharded = jax.shard_map(
+        local_part, mesh=mesh,
+        in_specs=(P(AXIS, None), P(AXIS, None), P(), P(AXIS, None),
+                  P(None, None)),
+        out_specs=(P(None, AXIS), P(None, AXIS), P(None, AXIS, None),
+                   P(None, AXIS)))
+
+    @jax.jit
+    def batch_query_fn(rt: RankTable, users: jax.Array, qs: jax.Array
+                       ) -> QueryResult:
+        all_lo, all_up, payload, gidx = sharded(
+            rt.thresholds, rt.table, rt.m, users, qs)       # (b, k·P, …)
+
+        def select(lo_b, up_b, payload_b, gidx_b):
+            est, r_lo, r_up = (payload_b[:, 0], payload_b[:, 1],
+                               payload_b[:, 2])
+            neg, _ = jax.lax.top_k(-lo_b, k)
+            R_lo_k = -neg[k - 1]
+            neg, _ = jax.lax.top_k(-up_b, k)
+            R_up_k = -neg[k - 1]
+            guaranteed = c * R_lo_k >= R_up_k
+            accepted = r_up <= c * R_lo_k
+            pruned = r_lo > R_up_k
+            prio = jnp.where(accepted, 0.0, jnp.where(pruned, 2.0, 1.0))
+            big = (rt.m + 2).astype(jnp.float32)
+            key_val = jnp.where(guaranteed, est, prio * big + est)
+            _, sel = jax.lax.top_k(-key_val, k)
+            return QueryResult(
+                indices=gidx_b[sel], est_rank=est[sel],
+                r_lo=r_lo, r_up=r_up, R_lo_k=R_lo_k, R_up_k=R_up_k,
+                guaranteed=guaranteed,
+                n_accepted=jnp.sum(accepted).astype(jnp.int32),
+                n_pruned=jnp.sum(pruned).astype(jnp.int32))
+
+        return jax.vmap(select)(all_lo, all_up, payload, gidx)
+
+    return batch_query_fn
+
+
+# -------------------------------------------------------------- refinement
+def ring_exact_ranks(users: jax.Array, items: jax.Array, q: jax.Array,
+                     mesh: Mesh) -> jax.Array:
+    """Exact Definition-1 ranks with BOTH users and items sharded: item
+    shards rotate around a ring (collective_permute) while every user
+    shard accumulates counts — compute/comm overlap with items never
+    materializing unsharded. Used for boundary-user refinement and as the
+    at-scale exact baseline."""
+    nshards = mesh.devices.size
+    perm = [(i, (i + 1) % nshards) for i in range(nshards)]
+
+    def local(u_shard, it_shard, qv):
+        uq = (u_shard @ qv).astype(jnp.float32)
+
+        def body(_, carry):
+            counts, blk = carry
+            scores = (u_shard @ blk.T).astype(jnp.float32)
+            counts = counts + jnp.sum(scores > uq[:, None], axis=1)
+            blk = jax.lax.ppermute(blk, AXIS, perm)
+            return counts, blk
+
+        counts, _ = jax.lax.fori_loop(
+            0, nshards, body, (jnp.zeros_like(uq), it_shard))
+        return 1.0 + counts
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(AXIS, None), P(AXIS, None), P()),
+        out_specs=P(AXIS))(users, items, q)

@@ -1,0 +1,68 @@
+"""ReverseKRanksEngine — the public, composable API for the paper's system.
+
+Wraps Algorithm 1 (build) + the §4.3 query into one object that owns the
+user matrix and rank table, with single-device and mesh-sharded execution
+(see `repro.core.distributed` for the multi-pod path and
+`repro.kernels` for the fused TPU hot loops).
+
+Typical use::
+
+    eng = ReverseKRanksEngine.build(users, items, RankTableConfig(), key)
+    res = eng.query(q, k=10, c=2.0)            # QueryResult
+    res = eng.query_batch(qs, k=10, c=2.0)     # vmapped over queries
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import query as query_mod
+from repro.core import rank_table as rt_mod
+from repro.core.types import QueryResult, RankTable, RankTableConfig
+
+
+@dataclasses.dataclass
+class ReverseKRanksEngine:
+    users: jax.Array          # (n, d)
+    rank_table: RankTable     # thresholds/table: (n, tau)
+    config: RankTableConfig
+    use_kernels: bool = False  # route step 1 through the Pallas fused kernel
+
+    @classmethod
+    def build(cls, users: jax.Array, items: jax.Array, cfg: RankTableConfig,
+              key: jax.Array, use_kernels: bool = False
+              ) -> "ReverseKRanksEngine":
+        """Run Algorithm 1 and return a query-ready engine."""
+        rt = rt_mod.build_rank_table(users, items, cfg, key)
+        return cls(users=users, rank_table=rt, config=cfg,
+                   use_kernels=use_kernels)
+
+    def query(self, q: jax.Array, k: int, c: float) -> QueryResult:
+        if self.use_kernels:
+            from repro.kernels import ops as kops
+            return kops.query_fused(self.rank_table, self.users, q, k, c)
+        return query_mod.query(self.rank_table, self.users, q, k, c)
+
+    def query_batch(self, qs: jax.Array, k: int, c: float) -> QueryResult:
+        if self.use_kernels:
+            from repro.kernels import ops as kops
+            return jax.vmap(
+                lambda q: kops.query_fused(self.rank_table, self.users, q,
+                                           k, c))(qs)
+        return query_mod.query_batch(self.rank_table, self.users, qs, k, c)
+
+    @property
+    def n(self) -> int:
+        return self.users.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.users.shape[1]
+
+    def memory_bytes(self) -> int:
+        """Index footprint (thresholds + table), per §4.2's O(n) claim."""
+        rt = self.rank_table
+        return int(rt.thresholds.size * rt.thresholds.dtype.itemsize
+                   + rt.table.size * rt.table.dtype.itemsize)

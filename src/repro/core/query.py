@@ -1,0 +1,153 @@
+"""c-approximate reverse k-ranks query processing — §4.3 of the paper.
+
+Three steps, all shape-stable (no data-dependent branches, so the whole
+query jits into one XLA program and the Lemma-1 cases become masks):
+
+  1. u·q for every user (the only O(nd) stage) + rank-table lookup →
+     per-user bound ranks (r↓, r↑) and an interpolated estimate;
+  2. R↓_k / R↑_k via top-k, Lemma-1 accept/prune masks;
+  3. a single composite-key top-k realizes the paper's insertion order:
+     in the guaranteed case (c·R↓_k ≥ R↑_k) users are ranked purely by the
+     interpolated estimate; otherwise Lemma-1-accepted users come first,
+     undetermined users (U_temp) fill by estimate, pruned users are pushed
+     past every admissible key.
+
+Total O(nd) — matching the paper's complexity claim; steps 2-3 are O(n).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import QueryResult, RankTable, kth_smallest
+
+# §Perf H4b (REFUTED): a gather-based bisection was hypothesized to touch
+# only ~log2(τ)·n elements instead of streaming the full (n, τ) rows.
+# XLA's cost model (and TPU HBM reality — gathers are line-quantized)
+# charges each gather round at full-operand bytes, making bisect ~3×
+# WORSE than the vectorized searchsorted. Kept as an option for the
+# record; the winning lever is τ itself (see EXPERIMENTS.md §Perf H4).
+LOOKUP = "searchsorted"
+
+
+def _bucketize(thresholds: jax.Array, uq: jax.Array) -> jax.Array:
+    """idx = #{j : t_j ≤ uq} per row, for ascending per-row thresholds."""
+    n, tau = thresholds.shape
+    if LOOKUP == "searchsorted":
+        return jax.vmap(functools.partial(jnp.searchsorted, side="right"))(
+            thresholds, uq.astype(thresholds.dtype))
+    rows = jnp.arange(n)
+    uq_c = uq.astype(thresholds.dtype)
+    lo = jnp.zeros((n,), jnp.int32)
+    hi = jnp.full((n,), tau, jnp.int32)
+    for _ in range(int(math.ceil(math.log2(max(tau, 2)))) + 1):
+        mid = (lo + hi) // 2
+        v = thresholds[rows, jnp.clip(mid, 0, tau - 1)]
+        go_right = (v <= uq_c) & (mid < hi)
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right, hi, mid)
+    return lo
+
+
+def lookup_bounds(rt: RankTable, uq: jax.Array
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Rank-table lookup (§4.3 step 1) for scores uq = u·q, all users.
+
+    With ascending thresholds t_1..t_τ and non-increasing table T_1..T_τ:
+      t_j ≤ u·q ≤ t_{j+1}  ⇒  T_{j+1} ≤ r(q,u,P) ≤ T_j.
+    Out-of-range: u·q < t_1 ⇒ (r↓, r↑) = (T_1, m+1);
+                  u·q ≥ t_τ ⇒ (r↓, r↑) = (1, T_τ).
+
+    Returns (r_lo, r_up, est) — bounds plus the §4.3-step-3 linear
+    interpolation of the rank at u·q's position between its two thresholds.
+    """
+    n, tau = rt.thresholds.shape
+    # _bucketize compares in the table's storage dtype: promotion to f32
+    # would materialize a full-size HBM copy of a bf16 table, erasing the
+    # §Perf-H4 bandwidth win (refuted-hypothesis lesson).
+    idx = _bucketize(rt.thresholds, uq)                     # (n,) in [0, τ]
+    rows = jnp.arange(n)
+    m_plus_1 = (rt.m + 1).astype(jnp.float32)
+    t_up = rt.table[rows, jnp.clip(idx - 1, 0, tau - 1)].astype(jnp.float32)
+    t_lo = rt.table[rows, jnp.clip(idx, 0, tau - 1)].astype(jnp.float32)
+    r_up = jnp.where(idx == 0, m_plus_1, t_up)               # T_j (j = idx)
+    r_lo = jnp.where(idx == tau, 1.0, t_lo)                  # T_{j+1}
+
+    # Linear interpolation between the bracketing thresholds (step 3).
+    lo_thr = rt.thresholds[rows, jnp.clip(idx - 1, 0, tau - 1)].astype(
+        jnp.float32)
+    hi_thr = rt.thresholds[rows, jnp.clip(idx, 0, tau - 1)].astype(
+        jnp.float32)
+    span = jnp.maximum(hi_thr - lo_thr, 1e-12)
+    frac = jnp.clip((uq - lo_thr) / span, 0.0, 1.0)
+    interior = (idx > 0) & (idx < tau)
+    est_in = r_up + (r_lo - r_up) * frac
+    # Out-of-range scores (beyond-paper refinement): the paper's midpoint
+    # collapses every above-range user to the same estimate, making the
+    # final top-k an arbitrary tie-break (hurts popular-item queries where
+    # many users exceed t_τ). Decay the estimate with the score's margin
+    # beyond the range instead — monotone, consistent at the boundary
+    # (margin 0 ⇒ the bound), and still within [r↓, r↑].
+    t_lo_edge = rt.thresholds[:, 0].astype(jnp.float32)
+    t_hi_edge = rt.thresholds[:, tau - 1].astype(jnp.float32)
+    rng = jnp.maximum(t_hi_edge - t_lo_edge, 1e-12)
+    m_above = jnp.maximum(uq - t_hi_edge, 0.0) / rng
+    m_below = jnp.maximum(t_lo_edge - uq, 0.0) / rng
+    est_above = 1.0 + (r_up - 1.0) / (1.0 + tau * m_above)
+    est_below = m_plus_1 - (m_plus_1 - r_lo) * jnp.exp(-tau * m_below)
+    est = jnp.where(interior, est_in,
+                    jnp.where(idx == tau, est_above, est_below))
+    est = jnp.clip(est, r_lo, r_up)
+    # Sub-unit tie-break: when the top table entry is already rank 1, every
+    # above-range user collapses to est = 1; order them by how far their
+    # score clears the threshold range (larger margin ⇒ fewer items can
+    # still beat q for that user). Stays within (est-0.5, est], so it never
+    # reorders users whose estimates differ by ≥ 1 rank.
+    return r_lo, r_up, est - 0.5 * m_above / (1.0 + m_above)
+
+
+def select_topk(r_lo: jax.Array, r_up: jax.Array, est: jax.Array, *, k: int,
+                c: float, m_items: jax.Array) -> QueryResult:
+    """Steps 2-3 of §4.3 given per-user bounds — shared by the pure-jnp
+    path (`query`) and the Pallas fused path (`kernels.ops.query_fused`)."""
+    R_lo_k = kth_smallest(r_lo, k)                          # step 2: O(n)
+    R_up_k = kth_smallest(r_up, k)
+    guaranteed = c * R_lo_k >= R_up_k
+    accepted = r_up <= c * R_lo_k                           # Lemma 1 (1)
+    pruned = r_lo > R_up_k                                  # Lemma 1 (2)
+
+    # step 3 as one top-k over a composite key. Priorities only apply in the
+    # non-guaranteed case; `m + 2` strictly dominates any est ∈ [1, m+1].
+    prio = jnp.where(accepted, 0.0, jnp.where(pruned, 2.0, 1.0))
+    big = (m_items + 2).astype(jnp.float32)
+    key_val = jnp.where(guaranteed, est, prio * big + est)
+    _, indices = jax.lax.top_k(-key_val, k)
+
+    return QueryResult(
+        indices=indices.astype(jnp.int32),
+        est_rank=est[indices],
+        r_lo=r_lo, r_up=r_up,
+        R_lo_k=R_lo_k, R_up_k=R_up_k,
+        guaranteed=guaranteed,
+        n_accepted=jnp.sum(accepted).astype(jnp.int32),
+        n_pruned=jnp.sum(pruned).astype(jnp.int32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def query(rt: RankTable, users: jax.Array, q: jax.Array, k: int,
+          c: float) -> QueryResult:
+    """One c-approximate reverse k-ranks query (Definition 3, §4.3)."""
+    uq = (users @ q).astype(jnp.float32)                    # step 1: O(nd)
+    r_lo, r_up, est = lookup_bounds(rt, uq)
+    return select_topk(r_lo, r_up, est, k=k, c=c, m_items=rt.m)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def query_batch(rt: RankTable, users: jax.Array, qs: jax.Array, k: int,
+                c: float) -> QueryResult:
+    """Vectorized queries: qs is (b, d); every field gains a leading b axis."""
+    return jax.vmap(lambda q: query(rt, users, q, k, c))(qs)

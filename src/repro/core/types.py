@@ -1,0 +1,124 @@
+"""Core data types for the c-approximate reverse k-ranks engine.
+
+All types are JAX pytrees (NamedTuples of arrays) or static dataclass
+configs, so they flow through jit / shard_map / checkpointing unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class RankTableConfig:
+    """Static configuration for Algorithm 1 (pre-processing).
+
+    Attributes:
+      tau:   number of inner-product thresholds per user (table columns).
+             Paper default 500 (Table 1 tunes 100/500/1000).
+      omega: number of norm-stratified partitions of P (Alg. 1 input).
+      s:     number of random samples per partition (Alg. 1 input).
+      threshold_mode: how f_min/f_max (threshold range per user) is obtained:
+        * "sampled"    — min/max of u·p over the stratified sample, widened
+                         by `range_pad` of the sampled range. O(ω·s·d)/user,
+                         consistent with the paper's O(d) claim for
+                         ω,s = O(1); the default.
+        * "norm_bound" — ±‖u‖·max‖p‖ (the paper's footnote-1 "domain value"
+                         O(1) variant).
+        * "exact"      — true f_min/f_max via a full U·Pᵀ pass, O(nmd).
+                         Only for small oracle tests.
+      range_pad: fractional widening of the sampled threshold range.
+      sample_with_replacement: stratified sampling mode; False matches the
+        paper ("s random samples in P_l"), True is used when s > |P_l|.
+    """
+
+    tau: int = 500
+    omega: int = 10
+    s: int = 64
+    threshold_mode: str = "sampled"
+    range_pad: float = 0.05
+    sample_with_replacement: bool = False
+    # Storage dtype for thresholds+table (§Perf H4): "bfloat16" halves the
+    # dominant HBM stream of the query at a bounded rank-quantization cost
+    # (≤ 2^-8 relative — smaller than Eq. 1's sampling noise at s = 64).
+    storage_dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.tau < 2:
+            raise ValueError(f"tau must be >= 2, got {self.tau}")
+        if self.omega < 1:
+            raise ValueError(f"omega must be >= 1, got {self.omega}")
+        if self.s < 1:
+            raise ValueError(f"s must be >= 1, got {self.s}")
+        if self.threshold_mode not in ("sampled", "norm_bound", "exact"):
+            raise ValueError(f"unknown threshold_mode {self.threshold_mode!r}")
+        if self.storage_dtype not in ("float32", "bfloat16"):
+            raise ValueError(f"unknown storage_dtype {self.storage_dtype!r}")
+
+
+class RankTable(NamedTuple):
+    """The paper's rank table T (§4.1) plus its per-user thresholds.
+
+    thresholds: (n, tau) float32, ascending along axis 1 — t_{u_i, j}.
+    table:      (n, tau) float32, non-increasing along axis 1 — estimated
+                rank of an item p for u_i when u_i·p = t_{u_i,j}  (Eq. 1).
+    m:          () int32 — |P|, needed for the out-of-range upper bound m+1.
+    """
+
+    thresholds: jax.Array
+    table: jax.Array
+    m: jax.Array
+
+    @property
+    def n(self) -> int:
+        return self.thresholds.shape[0]
+
+    @property
+    def tau(self) -> int:
+        return self.thresholds.shape[1]
+
+
+class QueryResult(NamedTuple):
+    """Output of one c-approximate reverse k-ranks query (§4.3).
+
+    indices:   (k,) int32 — selected user indices (U_c), best-first.
+    est_rank:  (k,) float32 — interpolated rank estimates for the selection.
+    r_lo:      (n,) float32 — per-user lower-bound rank r↓.
+    r_up:      (n,) float32 — per-user upper-bound rank r↑.
+    R_lo_k:    () float32 — k-th smallest lower bound (R↓_k).
+    R_up_k:    () float32 — k-th smallest upper bound (R↑_k).
+    guaranteed:() bool    — Lemma-1 case: c·R↓_k ≥ R↑_k (search closed in
+                step 2; no interpolation fill needed).
+    n_accepted:() int32   — #users with r↑ ≤ c·R↓_k (Lemma 1 (1)).
+    n_pruned:  () int32   — #users with r↓ > R↑_k  (Lemma 1 (2)).
+    """
+
+    indices: jax.Array
+    est_rank: jax.Array
+    r_lo: jax.Array
+    r_up: jax.Array
+    R_lo_k: jax.Array
+    R_up_k: jax.Array
+    guaranteed: jax.Array
+    n_accepted: jax.Array
+    n_pruned: jax.Array
+
+
+def kth_smallest(x: jax.Array, k: int) -> jax.Array:
+    """k-th smallest value of a 1-D array (k is 1-indexed, static)."""
+    neg_topk, _ = jax.lax.top_k(-x, k)
+    return -neg_topk[k - 1]
+
+
+def partition_sizes(m: int, omega: int) -> tuple[int, ...]:
+    """Sizes of the ω norm-descending partitions of P (Alg. 1 line 3).
+
+    Equal sizes when ω | m; otherwise the first (m mod ω) buckets carry one
+    extra item so every item is covered exactly once.
+    """
+    base = m // omega
+    extra = m % omega
+    return tuple(base + (1 if l < extra else 0) for l in range(omega))

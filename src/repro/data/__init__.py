@@ -1,0 +1,3 @@
+"""Data substrate: deterministic token pipeline, synthetic embedding /
+ratings generators, and the JAX matrix-factorization trainer (the paper's
+LIBMF step)."""

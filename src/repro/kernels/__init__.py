@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Layout per kernel: <name>.py (pl.pallas_call + BlockSpec tiling),
+ops.py (jit'd public wrappers), ref.py (pure-jnp oracles).
+
+  user_scores — fused U·q matvec + rank-table bucketize (§4.3 step 1,
+                the O(nd) query hot loop; memory-bound, lookup rides free)
+  table_build — fused U·Samplesᵀ + stratified weighted histogram (Eq. 1,
+                Algorithm 1's per-user hot loop)
+  exact_rank  — streaming Definition-1 counts (refinement / oracle;
+                compute-bound item streaming)
+
+Kernels run with interpret=True on CPU (this container) and compile
+natively on TPU via `repro.kernels.ops.INTERPRET = False`.
+"""

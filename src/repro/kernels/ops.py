@@ -1,0 +1,107 @@
+"""jit'd public wrappers around the Pallas kernels (padding + reduction).
+
+These are the entry points the engine uses; each pads inputs to kernel
+tile multiples, invokes the raw pallas_call, and undoes the padding.
+`interpret=True` everywhere in this container (CPU); on TPU the same
+code path runs compiled by flipping `repro.kernels.INTERPRET`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import QueryResult, RankTable
+from repro.kernels import exact_rank as _er
+from repro.kernels import table_build as _tb
+from repro.kernels import user_scores as _us
+
+# Flipped to False on real TPU backends; interpret=True executes the same
+# kernel bodies in Python on CPU for validation.
+INTERPRET = True
+
+_LANE = 128     # TPU lane width: pad τ and other minor dims to multiples.
+
+
+def _pad_rows(x: jax.Array, mult: int, value: float = 0.0) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    width = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, width, constant_values=value)
+
+
+def _pad_cols_edge(x: jax.Array, mult: int) -> jax.Array:
+    pad = (-x.shape[1]) % mult
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (0, pad)), mode="edge")
+
+
+@functools.partial(jax.jit, static_argnames=("m", "block_n"))
+def bound_ranks(users: jax.Array, q: jax.Array, thresholds: jax.Array,
+                table: jax.Array, *, m: int, block_n: int = 256
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused u·q + rank-table lookup for all users → (r↓, r↑, est)."""
+    n, tau = thresholds.shape[0], thresholds.shape[1]
+    up = _pad_rows(users.astype(jnp.float32), block_n)
+    # Padded user rows read padded threshold rows; edge-padding keeps them
+    # ascending so the kernel math stays well-defined (results sliced off).
+    tp = _pad_cols_edge(_pad_rows(thresholds, block_n, value=0.0), _LANE)
+    bp = _pad_cols_edge(_pad_rows(table, block_n, value=1.0), _LANE)
+    r_lo, r_up, est = _us.bound_ranks_kernel_call(
+        up, q.astype(jnp.float32), tp, bp, m=m, tau_valid=tau,
+        block_n=block_n, interpret=INTERPRET)
+    return r_lo[:n], r_up[:n], est[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def build_table_rows(users: jax.Array, samples: jax.Array,
+                     weights: jax.Array, thresholds: jax.Array, *,
+                     block_n: int = 128) -> jax.Array:
+    """Eq. (1) table rows for all users (fused matmul + weighted counts)."""
+    n, tau = thresholds.shape
+    up = _pad_rows(users.astype(jnp.float32), block_n)
+    tp = _pad_cols_edge(_pad_rows(thresholds, block_n), _LANE)
+    # Padded samples carry weight 0 ⇒ contribute nothing to Eq. (1).
+    sp = _pad_rows(samples.astype(jnp.float32), 8)
+    wp = _pad_rows(weights.astype(jnp.float32), 8, value=0.0)
+    out = _tb.table_build_kernel_call(up, sp, wp, tp, tau_valid=tau,
+                                      block_n=block_n, interpret=INTERPRET)
+    return out[:n, :tau]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m"))
+def exact_ranks(users: jax.Array, items: jax.Array, q: jax.Array, *,
+                block_n: int = 256, block_m: int = 512) -> jax.Array:
+    """Definition-1 ranks via the streaming kernel. Returns (n,) float32."""
+    n, m = users.shape[0], items.shape[0]
+    up = _pad_rows(users.astype(jnp.float32), block_n)
+    # P pads with zero rows: a padded item contributes I[0 > u·q], which is
+    # subtracted exactly below (same f32 dot as the kernel's score_q).
+    ip = _pad_rows(items.astype(jnp.float32), block_m)
+    m_pad = ip.shape[0] - m
+    partial = _er.exact_counts_kernel_call(up, ip, q.astype(jnp.float32),
+                                           block_n=block_n, block_m=block_m,
+                                           interpret=INTERPRET)
+    counts = partial.sum(axis=1)[:n]
+    if m_pad:
+        uq = jax.lax.dot_general(
+            up[:n], q.astype(jnp.float32)[:, None],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[:, 0]
+        counts = counts - m_pad * (0.0 > uq).astype(jnp.float32)
+    return 1.0 + counts
+
+
+def query_fused(rt: RankTable, users: jax.Array, q: jax.Array, k: int,
+                c: float) -> QueryResult:
+    """§4.3 query with step 1 on the fused Pallas kernel; steps 2-3 (O(n)
+    top-k/filter tail) in plain jnp — identical selection semantics to
+    repro.core.query.query."""
+    from repro.core.query import select_topk
+    m = int(rt.m)
+    r_lo, r_up, est = bound_ranks(users, q, rt.thresholds, rt.table, m=m)
+    return select_topk(r_lo, r_up, est, k=k, c=c, m_items=rt.m)

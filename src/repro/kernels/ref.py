@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each `ref_*` matches the corresponding kernel bit-for-bit in exact
+arithmetic (float32 accumulation); tests sweep shapes/dtypes and
+assert_allclose kernel-vs-ref.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_bound_ranks(users: jax.Array, q: jax.Array, thresholds: jax.Array,
+                    table: jax.Array, m: int
+                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for kernels.user_scores: fused u·q + rank-table lookup.
+
+    Returns (r_lo, r_up, est), each (n,) float32 — identical semantics to
+    repro.core.query.lookup_bounds but with the count-based bucketize the
+    kernel uses (idx = Σ_j I[t_j ≤ score], equivalent to searchsorted
+    side='right' on ascending thresholds).
+    """
+    n, tau = thresholds.shape
+    score = (users.astype(jnp.float32) @ q.astype(jnp.float32))
+    idx = jnp.sum(thresholds <= score[:, None], axis=1)      # (n,) in [0,τ]
+    rows = jnp.arange(n)
+    t_up = table[rows, jnp.clip(idx - 1, 0, tau - 1)]
+    t_lo = table[rows, jnp.clip(idx, 0, tau - 1)]
+    r_up = jnp.where(idx == 0, float(m + 1), t_up)
+    r_lo = jnp.where(idx == tau, 1.0, t_lo)
+    lo_thr = thresholds[rows, jnp.clip(idx - 1, 0, tau - 1)]
+    hi_thr = thresholds[rows, jnp.clip(idx, 0, tau - 1)]
+    span = jnp.maximum(hi_thr - lo_thr, 1e-12)
+    frac = jnp.clip((score - lo_thr) / span, 0.0, 1.0)
+    interior = (idx > 0) & (idx < tau)
+    est_in = r_up + (r_lo - r_up) * frac
+    # margin-decayed out-of-range estimate (matches core.query.lookup_bounds)
+    t_lo_edge = thresholds[:, 0]
+    t_hi_edge = thresholds[:, tau - 1]
+    rng = jnp.maximum(t_hi_edge - t_lo_edge, 1e-12)
+    m_above = jnp.maximum(score - t_hi_edge, 0.0) / rng
+    m_below = jnp.maximum(t_lo_edge - score, 0.0) / rng
+    m1 = float(m + 1)
+    est_above = 1.0 + (r_up - 1.0) / (1.0 + tau * m_above)
+    est_below = m1 - (m1 - r_lo) * jnp.exp(-tau * m_below)
+    est = jnp.where(interior, est_in,
+                    jnp.where(idx == tau, est_above, est_below))
+    est = jnp.clip(est, r_lo, r_up)
+    # sub-unit margin tie-break (matches core.query.lookup_bounds)
+    return r_lo, r_up, est - 0.5 * m_above / (1.0 + m_above)
+
+
+def ref_table_rows(users: jax.Array, samples: jax.Array, weights: jax.Array,
+                   thresholds: jax.Array) -> jax.Array:
+    """Oracle for kernels.table_build: Eq. (1) by direct comparison.
+
+    users (n,d), samples (S,d), weights (S,), thresholds (n,τ) →
+    table (n,τ):  1 + Σ_s w_s · I[u·p_s > t_j].
+    """
+    scores = users.astype(jnp.float32) @ samples.astype(jnp.float32).T
+    # (n, S, τ) would blow memory at scale; the oracle runs on test sizes.
+    gt = scores[:, :, None] > thresholds[:, None, :]
+    return 1.0 + jnp.einsum("nst,s->nt", gt.astype(jnp.float32),
+                            weights.astype(jnp.float32))
+
+
+def ref_exact_counts(users: jax.Array, items: jax.Array, q: jax.Array
+                     ) -> jax.Array:
+    """Oracle for kernels.exact_rank: #{p : u·p > u·q} per user, float32."""
+    uf = users.astype(jnp.float32)
+    score_q = uf @ q.astype(jnp.float32)
+    up = uf @ items.astype(jnp.float32).T
+    return jnp.sum((up > score_q[:, None]).astype(jnp.float32), axis=1)

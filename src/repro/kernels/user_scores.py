@@ -1,0 +1,109 @@
+"""Fused bound-rank kernel — the query's O(nd) hot loop (§4.3 step 1).
+
+One pass over the user matrix produces (r↓, r↑, est) directly:
+
+    HBM                          VMEM (per grid step i)
+    U[i·B : (i+1)·B, :]   ──►    (B, d) user tile         ─┐
+    q                     ──►    (d,)  query vector        ├─ MXU matvec
+    thresholds[i·B:…, :]  ──►    (B, τ) ascending grid     │  (B,) scores
+    table[i·B:…, :]       ──►    (B, τ) rank estimates    ─┘
+                                  VPU: count-bucketize + gather + lerp
+    r_lo/r_up/est[i·B:…]  ◄──    three (B,) outputs
+
+The (n,) score vector never round-trips to HBM — on TPU the plain
+matvec is memory-bound (~1 FLOP/byte), so the bucketize+lookup ride along
+under the same HBM bytes. Block sizes: B = block_n users/step (multiple of
+8 sublanes; τ and d land on 128-lane tiles after padding by ops.py).
+
+The bucketize is branch-free: idx = Σ_j I[t_j ≤ s AND j < τ_valid], which
+equals searchsorted(side='right') for ascending thresholds; padded τ
+columns are masked via the `tau_valid` scalar so ops.py can pad τ to a
+lane multiple without changing semantics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bound_rank_kernel(u_ref, q_ref, thr_ref, tab_ref, rlo_ref, rup_ref,
+                       est_ref, *, m: int, tau_valid: int):
+    u = u_ref[...].astype(jnp.float32)                    # (B, d)
+    q = q_ref[...].astype(jnp.float32)                    # (d,)
+    thr = thr_ref[...]                                    # (B, τp)
+    tab = tab_ref[...]                                    # (B, τp)
+    taup = thr.shape[1]
+
+    score = jax.lax.dot_general(
+        u, q[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[:, 0]         # (B,) MXU matvec
+
+    col = jax.lax.broadcasted_iota(jnp.int32, thr.shape, 1)
+    valid = col < tau_valid
+    le = (thr <= score[:, None]) & valid
+    idx = jnp.sum(le.astype(jnp.int32), axis=1)           # (B,) ∈ [0, τ]
+
+    up_col = jnp.clip(idx - 1, 0, taup - 1)[:, None]
+    lo_col = jnp.clip(idx, 0, tau_valid - 1)[:, None]
+    t_up = jnp.take_along_axis(tab, up_col, axis=1)[:, 0]
+    t_lo = jnp.take_along_axis(tab, lo_col, axis=1)[:, 0]
+    r_up = jnp.where(idx == 0, float(m + 1), t_up)
+    r_lo = jnp.where(idx == tau_valid, 1.0, t_lo)
+
+    lo_thr = jnp.take_along_axis(thr, up_col, axis=1)[:, 0]
+    hi_thr = jnp.take_along_axis(thr, lo_col, axis=1)[:, 0]
+    span = jnp.maximum(hi_thr - lo_thr, 1e-12)
+    frac = jnp.clip((score - lo_thr) / span, 0.0, 1.0)
+    interior = (idx > 0) & (idx < tau_valid)
+    est_in = r_up + (r_lo - r_up) * frac
+    # margin-decayed out-of-range estimate (matches ref_bound_ranks)
+    t_lo_edge = thr[:, 0]
+    t_hi_edge = jnp.take_along_axis(
+        thr, jnp.full((thr.shape[0], 1), tau_valid - 1, jnp.int32),
+        axis=1)[:, 0]
+    rng = jnp.maximum(t_hi_edge - t_lo_edge, 1e-12)
+    m_above = jnp.maximum(score - t_hi_edge, 0.0) / rng
+    m_below = jnp.maximum(t_lo_edge - score, 0.0) / rng
+    est_above = 1.0 + (r_up - 1.0) / (1.0 + tau_valid * m_above)
+    est_below = float(m + 1) - (float(m + 1) - r_lo) * jnp.exp(
+        -tau_valid * m_below)
+    est = jnp.where(interior, est_in,
+                    jnp.where(idx == tau_valid, est_above, est_below))
+
+    rlo_ref[...] = r_lo
+    rup_ref[...] = r_up
+    # sub-unit margin tie-break (matches ref_bound_ranks)
+    est_ref[...] = jnp.clip(est, r_lo, r_up) - 0.5 * m_above / (1.0 + m_above)
+
+
+def bound_ranks_kernel_call(users: jax.Array, q: jax.Array,
+                            thresholds: jax.Array, table: jax.Array, *,
+                            m: int, tau_valid: int, block_n: int = 256,
+                            interpret: bool = True
+                            ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Raw pallas_call; inputs must be pre-padded (see ops.bound_ranks).
+
+    users (n, d) [n % block_n == 0], q (d,), thresholds/table (n, τp) f32.
+    """
+    n, d = users.shape
+    taup = thresholds.shape[1]
+    nb = n // block_n
+    kern = functools.partial(_bound_rank_kernel, m=m, tau_valid=tau_valid)
+    out_shape = [jax.ShapeDtypeStruct((n,), jnp.float32)] * 3
+    vec_spec = pl.BlockSpec((block_n,), lambda i: (i,))
+    return pl.pallas_call(
+        kern,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),   # U tile
+            pl.BlockSpec((d,), lambda i: (0,)),             # q (replicated)
+            pl.BlockSpec((block_n, taup), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, taup), lambda i: (i, 0)),
+        ],
+        out_specs=[vec_spec, vec_spec, vec_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(users, q, thresholds, table)

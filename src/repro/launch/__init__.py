@@ -1,0 +1,2 @@
+"""Launchers: production mesh, multi-pod dry-run, training and serving
+drivers, roofline extraction."""

@@ -1,0 +1,124 @@
+"""Training driver: `python -m repro.launch.train --arch <id> [...]`.
+
+Production path: builds the mesh, shards params/optimizer with the model's
+sharding rules, runs the pjit train step with checkpoint cadence,
+preemption-safe resume, and a heartbeat/straggler log. On this CPU
+container it runs reduced configs end-to-end (examples/train_lm.py) —
+the full configs go through dryrun.py.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.models.model import Model
+from repro.models.sharding import rules_for
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import AdamWConfig, adamw_init, cosine_schedule
+from repro.train.trainer import make_train_step
+
+
+def run_training(cfg, *, steps: int, global_batch: int, seq_len: int,
+                 ckpt_dir: str | None = None, ckpt_every: int = 50,
+                 mesh=None, microbatches: int = 1, lr: float = 3e-4,
+                 log_every: int = 10, seed: int = 0):
+    model = Model(cfg)
+    rules = rules_for(cfg, mesh, batch_size=global_batch) if mesh else None
+    opt = AdamWConfig(lr=lr)
+    sched = lambda s: cosine_schedule(s, warmup=max(steps // 20, 10),
+                                      total=steps)
+    pipe = TokenPipeline(PipelineConfig(vocab=cfg.vocab, seq_len=seq_len,
+                                        global_batch=global_batch,
+                                        seed=seed))
+    step_fn = make_train_step(model, opt, rules, microbatches=microbatches,
+                              schedule=sched)
+
+    params = model.init_params(jax.random.PRNGKey(seed))
+    opt_state = adamw_init(params)
+    start = 0
+    if ckpt_dir and ckpt.latest_step(ckpt_dir) is not None:
+        tpl = {"params": model.abstract_params(),
+               "opt": jax.eval_shape(adamw_init, model.abstract_params())}
+        state, start, _ = ckpt.restore(ckpt_dir, tpl)
+        params, opt_state = state["params"], state["opt"]
+        print(f"resumed from step {start}")
+
+    if mesh is not None:
+        pshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                              model.param_specs(rules))
+        oshard = type(opt_state)(mu=pshard, nu=pshard,
+                                 step=NamedSharding(mesh, P()))
+        step_fn = jax.jit(step_fn, in_shardings=(pshard, oshard, None),
+                          out_shardings=(pshard, oshard, None),
+                          donate_argnums=(0, 1))
+        params = jax.device_put(params, pshard)
+        opt_state = jax.device_put(opt_state, oshard)
+    else:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    losses, step_times = [], []
+    for step in range(start, steps):
+        t0 = time.time()
+        batch = pipe.batch_at(step)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        dt = time.time() - t0
+        step_times.append(dt)
+        if step % log_every == 0 or step == steps - 1:
+            print(f"step {step:5d}  loss {losses[-1]:.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"{dt*1e3:.0f} ms/step")
+        # straggler heartbeat: a step >5× the running median is flagged
+        # (on a real cluster this triggers the preemption/replace path)
+        if len(step_times) > 5 and dt > 5 * float(
+                np.median(step_times[-50:])):
+            print(f"[heartbeat] straggler step {step}: {dt:.2f}s vs "
+                  f"median {np.median(step_times[-50:]):.2f}s")
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            ckpt.save(ckpt_dir, step + 1,
+                      {"params": params, "opt": opt_state})
+            ckpt.prune_old(ckpt_dir, keep=3)
+    if ckpt_dir:
+        ckpt.save(ckpt_dir, steps, {"params": params, "opt": opt_state})
+    return params, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the published config (needs real accelerators)")
+    ap.add_argument("--d-model", type=int, default=256,
+                    help="reduced-config width override")
+    ap.add_argument("--layers", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = reduced(cfg, layers=args.layers)
+        cfg = dataclasses.replace(
+            cfg, d_model=args.d_model, d_ff=args.d_model * 4,
+            vocab=min(cfg.vocab, 8192))
+    _, losses = run_training(
+        cfg, steps=args.steps, global_batch=args.global_batch,
+        seq_len=args.seq_len, ckpt_dir=args.ckpt_dir, lr=args.lr,
+        microbatches=args.microbatches)
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Model facade: ties a ModelConfig to init / loss / decode functions plus
+the sharding specs the launcher needs (param, cache, batch PartitionSpecs).
+
+Spec resolution is path-pattern based: every parameter path maps to logical
+axes, resolved against an AxisRules (mesh-specific) table. Stacked segment
+leaves get a leading None (the scan axis is never sharded).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, ShapeCell
+from repro.models.sharding import AxisRules
+
+# (path regex, logical axes per dim) — first match wins. Paths are
+# "/"-joined key sequences, e.g. "segments/0/b0/attn/wq".
+_PARAM_RULES = [
+    (r"embed/tok$",            ("vocab", None)),
+    (r"lm_head/w$",            (None, "vocab")),
+    (r"enc_in/w$",             (None, None)),
+    (r"(attn|xattn)/wq$",      (None, "qdim")),
+    (r"(attn|xattn)/w[kv]$",   (None, "kv_dim")),
+    (r"(attn|xattn)/wo$",      ("qdim", None)),
+    (r"mlp/w_(gate|up)$",      (None, "hidden")),
+    (r"mlp/w_down$",           ("hidden", None)),
+    (r"moe/router$",           (None, "experts")),
+    (r"moe/w_(gate|up)$",      ("experts", "fsdp", None)),
+    (r"moe/w_down$",           ("experts", None, "fsdp")),
+    (r"rglru/w_(x|gate)$",     (None, "rnn")),
+    (r"rglru/w_out$",          ("rnn", None)),
+    (r"rglru/conv_w$",         (None, "rnn")),
+    (r"rglru/(conv_b|b_a|b_i|lam)$", ("rnn",)),
+    (r"rglru/w_[ai]$",         (None, "rnn")),
+    (r"tmix/w_[rkvg]$",        (None, "qdim")),
+    (r"tmix/w_o$",             ("qdim", None)),
+    (r"tmix/lora_[ab]$",       (None, None)),
+    (r"cmix/w_k$",             (None, "hidden")),
+    (r"cmix/w_v$",             ("hidden", None)),
+    (r"cmix/w_r$",             (None, "qdim")),
+]
+
+_CACHE_RULES = [
+    (r"/x?[kv]$",              ("batch", "kv_seq", "kv", None)),
+    (r"/s$",                   ("batch", "heads", None, None)),
+    (r"/(xt|xc)$",             ("batch", None)),
+    (r"/h$",                   ("batch", "rnn")),
+    (r"/conv$",                ("batch", None, "rnn")),
+    (r"len$",                  ()),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _spec_tree(tree, rules_table, ax: AxisRules, stacked_prefixes=()):
+    def leaf_spec(path, leaf):
+        s = _path_str(path)
+        for pat, axes in rules_table:
+            if re.search(pat, s):
+                spec = ax.spec(*axes)
+                if leaf.ndim == len(axes) + 1 and any(
+                        s.startswith(p) for p in stacked_prefixes):
+                    spec = P(None, *spec)       # leading scan-stack axis
+                elif leaf.ndim != len(axes) and not any(
+                        s.startswith(p) for p in stacked_prefixes):
+                    return P()                  # rank mismatch → replicate
+                return spec
+        return P(*([None] * 0))                # default: fully replicated
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, tree)
+
+
+class Model:
+    """Facade over the functional transformer API for one architecture."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- params
+    def init_params(self, key) -> dict:
+        return T.init_params(key, self.cfg)
+
+    def abstract_params(self) -> dict:
+        return T.abstract_params(self.cfg)
+
+    def param_specs(self, ax: AxisRules):
+        return _spec_tree(self.abstract_params(), _PARAM_RULES, ax,
+                          stacked_prefixes=("segments", "enc_segments"))
+
+    # --------------------------------------------------------------- loss
+    def loss_fn(self, params, batch) -> jax.Array:
+        return T.lm_loss(params, batch, self.cfg)
+
+    def forward_logits(self, params, tokens, frames=None):
+        return T.forward_logits(params, tokens, self.cfg, frames=frames)
+
+    # ------------------------------------------------------------- decode
+    def init_cache(self, batch: int, cache_len: int) -> dict:
+        return T.init_cache(self.cfg, batch, cache_len)
+
+    def abstract_cache(self, batch: int, cache_len: int) -> dict:
+        return jax.eval_shape(lambda: T.init_cache(self.cfg, batch,
+                                                   cache_len))
+
+    def cache_specs(self, ax: AxisRules, batch: int, cache_len: int):
+        return _spec_tree(self.abstract_cache(batch, cache_len),
+                          _CACHE_RULES, ax, stacked_prefixes=("segments",))
+
+    def decode_step(self, params, cache, tokens):
+        return T.decode_step(params, cache, tokens, self.cfg)
+
+    # -------------------------------------------------------------- shapes
+    def input_specs(self, cell: ShapeCell) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of a cell."""
+        cfg = self.cfg
+        B, S = cell.global_batch, cell.seq_len
+        i32 = jnp.int32
+        if cell.kind == "train":
+            batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                     "labels": jax.ShapeDtypeStruct((B, S), i32)}
+            if cfg.family == "encdec":
+                batch["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.enc_seq, cfg.d_model), jnp.float32)
+            return batch
+        if cell.kind == "prefill":
+            batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+            if cfg.family == "encdec":
+                batch["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.enc_seq, cfg.d_model), jnp.float32)
+            return batch
+        # decode: one new token against a cache holding S-1 tokens
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+
+    def batch_specs(self, ax: AxisRules, cell: ShapeCell):
+        spec3 = ax.spec("batch", None, None)
+        spec2 = ax.spec("batch", None)
+        out = {}
+        for name, sds in self.input_specs(cell).items():
+            out[name] = spec3 if len(sds.shape) == 3 else spec2
+        return out

@@ -1,0 +1,293 @@
+"""Recurrent mixers: RG-LRU (RecurrentGemma/Griffin) and RWKV-6 (Finch).
+
+TPU adaptation notes (see DESIGN.md §3/§4):
+  * RG-LRU's linear recurrence h_t = a_t·h_{t-1} + b_t runs as a
+    jax.lax.associative_scan (log-depth, parallel) for train/prefill and a
+    single fused step for decode. Gate projections are dense (R, R) rather
+    than Griffin's block-diagonal — noted adaptation.
+  * RWKV-6's data-dependent-decay WKV runs CHUNKED (GLA-style): intra-chunk
+    pairwise decays are exact in log space (all exponents ≤ 0 ⇒ stable),
+    inter-chunk state flows through a lax.scan over chunks. Decode is the
+    exact O(1) recurrence. The sequential-scan reference lives in
+    tests/test_models.py and must match to float tolerance.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_norm, rms_norm
+from repro.models.sharding import shard
+
+
+# ------------------------------------------------------------------- RG-LRU
+_RG_C = 8.0     # Griffin's fixed temperature on the recurrence gate
+
+
+def init_rglru_block(key, cfg) -> dict:
+    d, r, cw = cfg.d_model, cfg.lru_width, cfg.conv_width
+    ks = jax.random.split(key, 7)
+    si, sr = d ** -0.5, r ** -0.5
+    return {
+        "w_x": jax.random.normal(ks[0], (d, r), jnp.float32) * si,
+        "w_gate": jax.random.normal(ks[1], (d, r), jnp.float32) * si,
+        "w_out": jax.random.normal(ks[2], (r, d), jnp.float32) * sr
+                 / max(2 * cfg.n_layers, 1) ** 0.5,
+        "conv_w": jax.random.normal(ks[3], (cw, r), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((r,), jnp.float32),
+        "w_a": jax.random.normal(ks[4], (r, r), jnp.float32) * sr,
+        "b_a": jnp.zeros((r,), jnp.float32),
+        "w_i": jax.random.normal(ks[5], (r, r), jnp.float32) * sr,
+        "b_i": jnp.zeros((r,), jnp.float32),
+        # Λ init so σ(Λ) ∈ ~(0.9, 0.999): a stable long-memory band.
+        "lam": jax.random.uniform(ks[6], (r,), jnp.float32, 2.0, 6.0),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. u (B,S,R), w (cw,R)."""
+    cw = w.shape[0]
+    upad = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(cw):                      # cw = 4: unrolled taps
+        out = out + upad[:, i:i + u.shape[1], :] * w[cw - 1 - i]
+    return out + b
+
+
+def _rglru_coeffs(p: dict, u: jax.Array, dt):
+    """Per-step (a_t, b_t) of the RG-LRU recurrence (float32)."""
+    uf = u.astype(jnp.float32)
+    rec_gate = jax.nn.sigmoid(uf @ p["w_a"] + p["b_a"])
+    in_gate = jax.nn.sigmoid(uf @ p["w_i"] + p["b_i"])
+    log_a = -_RG_C * jax.nn.softplus(p["lam"]) * rec_gate     # ≤ 0
+    a = jnp.exp(log_a)
+    # sqrt(1 - a²) via expm1 for precision near a ≈ 1
+    scale = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    b = scale * (in_gate * uf)
+    return a, b
+
+
+def rglru_block(p: dict, x: jax.Array, cfg) -> jax.Array:
+    """Full-sequence RG-LRU block (train/prefill). x: (B,S,D)."""
+    dt = x.dtype
+    u = x @ p["w_x"].astype(dt)
+    u = shard(u, "batch", None, "rnn")
+    u = _causal_conv(u, p["conv_w"].astype(dt), p["conv_b"].astype(dt))
+    a, b = _rglru_coeffs(p, u, dt)
+
+    def op(ca, cb):
+        (a1, b1), (a2, b2) = ca, cb
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(op, (a, b), axis=1)       # (B,S,R) f32
+    gate = jax.nn.gelu((x @ p["w_gate"].astype(dt)).astype(jnp.float32),
+                       approximate=True)
+    y = (h * gate).astype(dt)
+    y = shard(y, "batch", None, "rnn")
+    return y @ p["w_out"].astype(dt)
+
+
+def rglru_decode(p: dict, x: jax.Array, cfg, state: dict
+                 ) -> Tuple[jax.Array, dict]:
+    """One-token step. x: (B,1,D); state: {h: (B,R) f32, conv: (B,cw-1,R)}."""
+    dt = x.dtype
+    cw = cfg.conv_width
+    u = (x @ p["w_x"].astype(dt))[:, 0]                       # (B,R)
+    hist = jnp.concatenate([state["conv"], u[:, None]], axis=1)  # (B,cw,R)
+    # _causal_conv convention: out[t] = Σ_j u[t-j]·w[j], i.e. w[0] applies
+    # to the CURRENT token. hist is oldest-first, so flip the taps.
+    w = p["conv_w"].astype(dt)[::-1]
+    conv = jnp.einsum("bcr,cr->br", hist, w) + p["conv_b"].astype(dt)
+    a, b = _rglru_coeffs(p, conv[:, None], dt)
+    h = a[:, 0] * state["h"] + b[:, 0]                        # (B,R) f32
+    gate = jax.nn.gelu((x[:, 0] @ p["w_gate"].astype(dt)).astype(
+        jnp.float32), approximate=True)
+    y = ((h * gate).astype(dt) @ p["w_out"].astype(dt))[:, None]
+    return y, {"h": h, "conv": hist[:, 1:]}
+
+
+def init_rglru_state(batch: int, cfg, dtype=jnp.bfloat16) -> dict:
+    r, cw = cfg.lru_width, cfg.conv_width
+    return {"h": jnp.zeros((batch, r), jnp.float32),
+            "conv": jnp.zeros((batch, cw - 1, r), dtype)}
+
+
+# -------------------------------------------------------------------- RWKV-6
+def init_rwkv_tmix(key, cfg) -> dict:
+    d, lora = cfg.d_model, cfg.rwkv_lora_dim
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    p = {
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_v": jnp.full((d,), 0.5, jnp.float32),
+        "mu_g": jnp.full((d,), 0.5, jnp.float32),
+        "mu_w": jnp.full((d,), 0.5, jnp.float32),
+        "w0": jnp.full((d,), -1.0, jnp.float32),   # base decay logits
+        "u": jax.random.normal(ks[0], (d,), jnp.float32) * 0.3,  # bonus
+        "lora_a": jax.random.normal(ks[1], (d, lora), jnp.float32) * s,
+        "lora_b": jax.random.normal(ks[2], (lora, d), jnp.float32) * 0.01,
+        "w_r": jax.random.normal(ks[3], (d, d), jnp.float32) * s,
+        "w_k": jax.random.normal(ks[4], (d, d), jnp.float32) * s,
+        "w_v": jax.random.normal(ks[5], (d, d), jnp.float32) * s,
+        "w_g": jax.random.normal(ks[6], (d, d), jnp.float32) * s,
+        "w_o": jax.random.normal(ks[7], (d, d), jnp.float32) * s
+               / max(2 * cfg.n_layers, 1) ** 0.5,
+        "ln_out": init_norm(d),
+    }
+    return p
+
+
+def init_rwkv_cmix(key, cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "w_k": jax.random.normal(k1, (d, f), jnp.float32) * d ** -0.5,
+        "w_v": jax.random.normal(k2, (f, d), jnp.float32) * f ** -0.5
+               / max(2 * cfg.n_layers, 1) ** 0.5,
+        "w_r": jax.random.normal(k3, (d, d), jnp.float32) * d ** -0.5,
+    }
+
+
+def _shift(x: jax.Array) -> jax.Array:
+    """Token shift: x_{t-1} (zeros at t=0). x: (B,S,D)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def _head_group_norm(scale: jax.Array, y: jax.Array, H: int, eps: float
+                     ) -> jax.Array:
+    """RWKV's GroupNorm(H groups): RMS-normalize each head's hd channels,
+    then apply the per-channel (d,) scale. y: (..., d)."""
+    shp = y.shape
+    yh = y.reshape(*shp[:-1], H, shp[-1] // H).astype(jnp.float32)
+    var = jnp.mean(yh * yh, axis=-1, keepdims=True)
+    yh = yh * jax.lax.rsqrt(var + eps)
+    return (yh.reshape(shp) * scale).astype(y.dtype)
+
+
+def _tmix_inputs(p: dict, x: jax.Array, xx: jax.Array, cfg):
+    """r,k,v,g projections + per-step log-decay (B,S,H,hd) from ddlerp."""
+    dt = x.dtype
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    mix = lambda mu: x + (xx - x) * mu.astype(dt)
+    r = (mix(p["mu_r"]) @ p["w_r"].astype(dt)).reshape(B, S, H, hd)
+    k = (mix(p["mu_k"]) @ p["w_k"].astype(dt)).reshape(B, S, H, hd)
+    v = (mix(p["mu_v"]) @ p["w_v"].astype(dt)).reshape(B, S, H, hd)
+    g = jax.nn.silu(mix(p["mu_g"]) @ p["w_g"].astype(dt))
+    xw = mix(p["mu_w"]).astype(jnp.float32)
+    dlog = jnp.tanh(xw @ p["lora_a"]) @ p["lora_b"]           # (B,S,d)
+    logw = -jnp.exp(p["w0"] + dlog)                            # ≤ 0, f32
+    logw = logw.reshape(B, S, H, hd)
+    return r, k, v, g, logw
+
+
+def _wkv_chunk(r, k, v, logw, u, s0):
+    """Exact WKV for one chunk, log-space-stable.
+
+    r,k,v: (B,H,L,hd) f32; logw: (B,H,L,hd) ≤ 0; u: (H,hd); s0: (B,H,hd,hd).
+    Returns (y (B,H,L,hd), s_new). All pairwise decay exponents are ≤ 0.
+    """
+    B, H, L, hd = r.shape
+    cum = jnp.cumsum(logw, axis=2)                             # (B,H,L,hd)
+    cum_prev = cum - logw                                      # Σ_{j<t}
+    # inter-chunk: y += (r_t ⊙ exp(cum_{t-1})) · S0
+    rdec = r * jnp.exp(cum_prev)
+    y = jnp.einsum("bhld,bhde->bhle", rdec, s0)
+    # intra-chunk: scores_ts = Σ_d r_td k_sd exp(cum_{t-1,d} − cum_{s,d}), s<t
+    expo = cum_prev[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,H,L,L,hd)
+    tril = jnp.tril(jnp.ones((L, L), bool), k=-1)
+    dec = jnp.where(tril[None, None, :, :, None], jnp.exp(
+        jnp.minimum(expo, 0.0)), 0.0)
+    scores = jnp.einsum("bhtd,bhsd,bhtsd->bhts", r, k, dec)
+    y = y + jnp.einsum("bhts,bhse->bhte", scores, v)
+    # current-token bonus: (r_t ⊙ u ⊙ k_t) · v_t
+    bonus = jnp.sum(r * u[None, :, None, :] * k, axis=-1, keepdims=True)
+    y = y + bonus * v
+    # state: S_L = diag(exp(cum_L)) S0 + Σ_s (k_s ⊙ exp(cum_L − cum_s)) v_sᵀ
+    kdec = k * jnp.exp(cum[:, :, -1:, :] - cum)
+    s_new = jnp.exp(cum[:, :, -1, :, None]) * s0 + jnp.einsum(
+        "bhsd,bhse->bhde", kdec, v)
+    return y, s_new
+
+
+def wkv_chunked(r, k, v, logw, u, s0, chunk: int = 64):
+    """(B,H,S,hd) inputs → (y, s_final); scans over S/chunk chunks."""
+    B, H, S, hd = r.shape
+    L = min(chunk, S)
+    nc = S // L
+    assert S % L == 0, f"seq {S} not divisible by chunk {L}"
+    reshape = lambda t: t.reshape(B, H, nc, L, hd).transpose(2, 0, 1, 3, 4)
+    rc, kc, vc, wc = map(reshape, (r, k, v, logw))
+
+    def step(s, xs):
+        rb, kb, vb, wb = xs
+        y, s_new = _wkv_chunk(rb, kb, vb, wb, u, s)
+        return s_new, y
+
+    s_fin, ys = jax.lax.scan(step, s0, (rc, kc, vc, wc))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(B, H, S, hd)
+    return y, s_fin
+
+
+def rwkv_tmix(p: dict, x: jax.Array, cfg, chunk: int = 64) -> jax.Array:
+    """Full-sequence RWKV-6 time mix. x: (B,S,D)."""
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    dt = x.dtype
+    r, k, v, g, logw = _tmix_inputs(p, x, _shift(x), cfg)
+    tr = lambda t: t.transpose(0, 2, 1, 3).astype(jnp.float32)
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    y, _ = wkv_chunked(tr(r), tr(k), tr(v), tr(logw),
+                       p["u"].reshape(H, hd), s0, chunk)
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, d)               # (B,S,D)
+    y = _head_group_norm(p["ln_out"]["scale"], y, H, cfg.norm_eps)
+    return (y.astype(dt) * g) @ p["w_o"].astype(dt)
+
+
+def rwkv_tmix_decode(p: dict, x: jax.Array, cfg, s: jax.Array,
+                     x_prev: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token RWKV-6 step — the exact O(1) recurrence.
+
+    x: (B,1,D); s: (B,H,hd,hd) f32 WKV state; x_prev: (B,D) token shift.
+    Returns (out, s_new, x_new).
+    """
+    B, _, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    xx = x_prev[:, None, :].astype(x.dtype)
+    r, k, v, g, logw = _tmix_inputs(p, x, xx, cfg)
+    rf, kf, vf = (t[:, 0].reshape(B, H, hd).astype(jnp.float32)
+                  for t in (r, k, v))
+    w = jnp.exp(logw[:, 0].reshape(B, H, hd))                  # decay (0,1)
+    u = p["u"].reshape(H, hd)
+    kv = kf[..., :, None] * vf[..., None, :]                   # (B,H,hd,hd)
+    y = jnp.einsum("bhd,bhde->bhe", rf, s + u[None, :, :, None] * kv)
+    s_new = w[..., None] * s + kv
+    y = _head_group_norm(p["ln_out"]["scale"], y.reshape(B, 1, d), H,
+                         cfg.norm_eps)
+    out = (y.astype(x.dtype) * g) @ p["w_o"].astype(x.dtype)
+    return out, s_new, x[:, 0]
+
+
+def rwkv_cmix(p: dict, x: jax.Array, cfg,
+              x_prev: Optional[jax.Array] = None):
+    """Channel mix. Full-seq when x_prev is None, else one-token decode."""
+    dt = x.dtype
+    xx = _shift(x) if x_prev is None else x_prev[:, None, :].astype(dt)
+    mix = lambda mu: x + (xx - x) * mu.astype(dt)
+    kk = jnp.square(jax.nn.relu(mix(p["mu_k"]) @ p["w_k"].astype(dt)))
+    kk = shard(kk, "batch", None, "hidden")
+    rr = jax.nn.sigmoid(mix(p["mu_r"]) @ p["w_r"].astype(dt))
+    return rr * (kk @ p["w_v"].astype(dt))
+
+
+def init_rwkv_state(batch: int, cfg, dtype=jnp.bfloat16) -> dict:
+    H, hd, d = cfg.n_heads, cfg.hd, cfg.d_model
+    return {"s": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "x_prev_t": jnp.zeros((batch, d), dtype),
+            "x_prev_c": jnp.zeros((batch, d), dtype)}

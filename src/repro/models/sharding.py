@@ -1,0 +1,121 @@
+"""Logical-axis sharding: one place that maps model-internal axis names to
+mesh axes, so layer code stays mesh-agnostic.
+
+Layer code calls `shard(x, "batch", None, "hidden")`; under an active
+`axis_rules` context this becomes `with_sharding_constraint` with the
+resolved PartitionSpec, outside it (CPU unit tests) it is the identity.
+
+Rules are computed per (ModelConfig, mesh) by `rules_for`: tensor-parallel
+axes fall back to replication when a dimension is not divisible by the
+mesh axis (e.g. gemma-2b's 8 heads on a 16-way model axis) — the roofline
+then shows the resharding cost and the hillclimb log records the fix.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+class AxisRules:
+    """mesh + {logical axis name -> mesh axis (possibly a tuple) or None}."""
+
+    def __init__(self, mesh: Mesh, table: dict):
+        self.mesh = mesh
+        self.table = dict(table)
+
+    def spec(self, *axes) -> P:
+        return P(*[self.table.get(a) if a else None for a in axes])
+
+    def sharding(self, *axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*axes))
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Optional[AxisRules]):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = rules
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def shard(x: jax.Array, *axes) -> jax.Array:
+    """Constrain x's sharding by logical axis names (None = replicated dim)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.sharding(*axes))
+
+
+def _divisible(n: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    names = axis if isinstance(axis, tuple) else (axis,)
+    size = 1
+    for a in names:
+        size *= mesh.shape[a]
+    return n % size == 0
+
+
+def rules_for(cfg, mesh: Mesh, *, data_axes=("pod", "data"),
+              model_axis="model", batch_size: Optional[int] = None,
+              fsdp: bool = True) -> AxisRules:
+    """Resolve logical axes for a ModelConfig on a mesh.
+
+    Logical axes:
+      batch   — DP over pod×data
+      seq     — sequence sharding (off by default; hillclimb flag)
+      embed   — d_model (replicated)
+      hidden  — FFN hidden / fused q-dim (TP)
+      heads   — attention head axis (TP when divisible)
+      kv      — KV head axis (TP when divisible)
+      vocab   — embedding/logits vocab dim (TP)
+      experts — MoE expert dim (EP on the model axis)
+      rnn     — RG-LRU / state width (TP when divisible)
+    """
+    present = set(mesh.axis_names)
+    data = tuple(a for a in (data_axes if isinstance(data_axes, tuple)
+                             else (data_axes,)) if a in present)
+    model = model_axis if model_axis in present else None
+    tp = (lambda n: model if (model and _divisible(n, mesh, model)) else None)
+    if batch_size is not None and data and not _divisible(
+            batch_size, mesh, data):
+        data = ()    # e.g. long_500k's global_batch=1: replicate batch
+    table = {
+        "batch": data if data else None,
+        "seq": None,
+        "embed": None,
+        "hidden": tp(cfg.d_ff) if cfg.d_ff else None,
+        "qdim": tp(cfg.q_dim),
+        "heads": tp(cfg.n_heads),
+        "kv": tp(cfg.n_kv_heads),
+        "kv_dim": tp(cfg.kv_dim),
+        "vocab": tp(cfg.vocab),
+        "experts": tp(cfg.n_experts) if cfg.n_experts else None,
+        "moe_hidden": tp(cfg.moe_d_ff) if cfg.moe_d_ff else None,
+        "rnn": tp(cfg.lru_width) if cfg.family == "hybrid" else None,
+        # ZeRO/FSDP axis for the huge expert weights: shard d_model over the
+        # data axes so params+AdamW state fit HBM (109B-param MoE needs it);
+        # GSPMD all-gathers per layer per step — visible in §Roofline.
+        "fsdp": (data if (fsdp and data and _divisible(cfg.d_model, mesh,
+                                                       data)) else None),
+        # Decode-cache sequence sharding (§Perf H1): every dense arch here
+        # has n_kv_heads < 16, so head-TP can't shard the KV cache — the
+        # baseline replicated it over `model` (≥100 GiB gathers per step).
+        # Shard the cache TIME axis over `model` instead; attention over a
+        # sharded T reduces via small all-reduces (flash-decode style).
+        "kv_seq": (model if (model and not _divisible(cfg.n_kv_heads, mesh,
+                                                      model)) else None),
+    }
+    return AxisRules(mesh, table)

@@ -1,0 +1,432 @@
+"""Backbone assembly: scanned layer stacks for all 10 architectures.
+
+Parameters, caches and activations are plain dict pytrees. Layers are
+stacked per `cfg.segments()` (see ModelConfig): each segment holds its
+pattern's blocks with a leading `repeats` axis and is applied with
+jax.lax.scan, so traced HLO size is O(#segments), not O(n_layers) — this
+is what keeps 512-device dry-run compiles tractable.
+
+Public surface:
+  init_params / abstract_params      — real or ShapeDtypeStruct pytrees
+  forward_logits(params, tokens)     — train/prefill logits
+  lm_loss(params, batch)             — masked CE (+ optional z-loss)
+  init_cache / decode_step           — one-token serving with caches
+  encode(params, frames)             — enc-dec encoder (whisper stub input)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import recurrent as R
+from repro.models.config import ModelConfig
+from repro.models.sharding import shard
+
+
+# ------------------------------------------------------------------ blocks
+def _init_block(block: str, key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    if block == "attn_mlp":
+        return {"ln1": L.init_norm(cfg.d_model),
+                "attn": L.init_attention(ks[0], cfg),
+                "ln2": L.init_norm(cfg.d_model),
+                "mlp": L.init_mlp(ks[1], cfg)}
+    if block == "attn_moe":
+        return {"ln1": L.init_norm(cfg.d_model),
+                "attn": L.init_attention(ks[0], cfg),
+                "ln2": L.init_norm(cfg.d_model),
+                "moe": L.init_moe(ks[1], cfg)}
+    if block == "rwkv":
+        return {"ln1": L.init_norm(cfg.d_model),
+                "tmix": R.init_rwkv_tmix(ks[0], cfg),
+                "ln2": L.init_norm(cfg.d_model),
+                "cmix": R.init_rwkv_cmix(ks[1], cfg)}
+    if block == "rglru":
+        return {"ln1": L.init_norm(cfg.d_model),
+                "rglru": R.init_rglru_block(ks[0], cfg),
+                "ln2": L.init_norm(cfg.d_model),
+                "mlp": L.init_mlp(ks[1], cfg)}
+    if block == "local_attn":
+        return {"ln1": L.init_norm(cfg.d_model),
+                "attn": L.init_attention(ks[0], cfg),
+                "ln2": L.init_norm(cfg.d_model),
+                "mlp": L.init_mlp(ks[1], cfg)}
+    if block == "enc_block":
+        return {"ln1": L.init_norm(cfg.d_model),
+                "attn": L.init_attention(ks[0], cfg),
+                "ln2": L.init_norm(cfg.d_model),
+                "mlp": L.init_mlp(ks[1], cfg)}
+    if block == "dec_block":
+        return {"ln1": L.init_norm(cfg.d_model),
+                "attn": L.init_attention(ks[0], cfg),
+                "lnx": L.init_norm(cfg.d_model),
+                "xattn": L.init_cross_attention(ks[1], cfg),
+                "ln2": L.init_norm(cfg.d_model),
+                "mlp": L.init_mlp(ks[2], cfg)}
+    raise ValueError(f"unknown block {block!r}")
+
+
+def _apply_block(block: str, p: dict, x: jax.Array, cfg: ModelConfig,
+                 positions, *, enc_kv=None) -> jax.Array:
+    """Full-sequence (train/prefill) application of one block."""
+    norm = L.layer_norm if cfg.family == "encdec" else L.rms_norm
+    if block in ("attn_mlp", "attn_moe", "local_attn"):
+        window = cfg.local_window if block == "local_attn" else None
+        x = x + L.attention(p["attn"], norm(p["ln1"], x, cfg.norm_eps), cfg,
+                            positions, causal=True, window=window)
+        h = norm(p["ln2"], x, cfg.norm_eps)
+        ff = L.moe(p["moe"], h, cfg) if block == "attn_moe" else \
+            L.mlp(p["mlp"], h, cfg)
+        return x + ff
+    if block == "rwkv":
+        x = x + R.rwkv_tmix(p["tmix"], norm(p["ln1"], x, cfg.norm_eps), cfg)
+        return x + R.rwkv_cmix(p["cmix"], norm(p["ln2"], x, cfg.norm_eps),
+                               cfg)
+    if block == "rglru":
+        x = x + R.rglru_block(p["rglru"], norm(p["ln1"], x, cfg.norm_eps),
+                              cfg)
+        return x + L.mlp(p["mlp"], norm(p["ln2"], x, cfg.norm_eps), cfg)
+    if block == "enc_block":
+        x = x + L.attention(p["attn"], norm(p["ln1"], x, cfg.norm_eps), cfg,
+                            None, causal=False, use_rope=False)
+        return x + L.mlp(p["mlp"], norm(p["ln2"], x, cfg.norm_eps), cfg)
+    if block == "dec_block":
+        x = x + L.attention(p["attn"], norm(p["ln1"], x, cfg.norm_eps), cfg,
+                            None, causal=True, use_rope=False)
+        # enc_kv carries the raw encoder output; each decoder layer projects
+        # it with its own wk/wv (whisper-style per-layer cross attention).
+        ek, ev = L.encoder_kv(p["xattn"], enc_kv, cfg)
+        x = x + L.cross_attention(p["xattn"], norm(p["lnx"], x,
+                                                   cfg.norm_eps), cfg, ek, ev)
+        return x + L.mlp(p["mlp"], norm(p["ln2"], x, cfg.norm_eps), cfg)
+    raise ValueError(f"unknown block {block!r}")
+
+
+# ---------------------------------------------------------------- stacking
+def _init_segment(key, pattern, repeats, cfg) -> dict:
+    keys = jax.random.split(key, repeats)
+
+    def one(k):
+        sub = jax.random.split(k, len(pattern))
+        return {f"b{i}": _init_block(b, sub[i], cfg)
+                for i, b in enumerate(pattern)}
+
+    return jax.vmap(one)(keys)
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.nothing_saveable
+              if cfg.remat == "nothing"
+              else jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _apply_segments(params_segs, segments, x, cfg, positions, *,
+                    enc_kv=None) -> jax.Array:
+    for seg_params, (pattern, repeats) in zip(params_segs, segments):
+        def body(h, layer_p, pattern=pattern):
+            for i, b in enumerate(pattern):
+                h = _apply_block(b, layer_p[f"b{i}"], h, cfg, positions,
+                                 enc_kv=enc_kv)
+            return h, None
+
+        body = _remat(body, cfg)
+        x, _ = jax.lax.scan(body, x, seg_params)
+    return x
+
+
+# ------------------------------------------------------------------ params
+def init_params(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    p = {"embed": {"tok": jax.random.normal(
+        ks[0], (cfg.vocab, cfg.d_model), jnp.float32) * 0.02}}
+    p["segments"] = [
+        _init_segment(jax.random.fold_in(ks[1], i), pattern, repeats, cfg)
+        for i, (pattern, repeats) in enumerate(cfg.segments())]
+    p["final_norm"] = L.init_norm(cfg.d_model)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = {"w": jax.random.normal(
+            ks[2], (cfg.d_model, cfg.vocab), jnp.float32)
+            * cfg.d_model ** -0.5}
+    if cfg.family == "encdec":
+        p["enc_in"] = {"w": jax.random.normal(
+            ks[3], (cfg.d_model, cfg.d_model), jnp.float32)
+            * cfg.d_model ** -0.5}
+        p["enc_segments"] = [
+            _init_segment(jax.random.fold_in(ks[4], i), pattern, repeats,
+                          cfg)
+            for i, (pattern, repeats) in enumerate(cfg.enc_segments())]
+        p["enc_norm"] = L.init_norm(cfg.d_model)
+    return p
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+    return jax.eval_shape(
+        lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+# ----------------------------------------------------------------- forward
+def encode(params: dict, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Whisper encoder over stub frame embeddings (B, enc_seq, D)."""
+    dt = L.cdtype(cfg)
+    x = frames.astype(dt) @ params["enc_in"]["w"].astype(dt)
+    x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model).astype(dt)
+    x = _apply_segments(params["enc_segments"], cfg.enc_segments(), x, cfg,
+                        None)
+    return L.layer_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _embed(params, tokens, cfg, pos_offset=0) -> jax.Array:
+    dt = L.cdtype(cfg)
+    x = params["embed"]["tok"].astype(dt)[tokens]
+    if cfg.family == "encdec":
+        # absolute (sinusoidal) decoder positions; decode offsets by the
+        # cache length so step t uses position t, not 0.
+        S = tokens.shape[1]
+        pos = pos_offset + jnp.arange(S)
+        half = cfg.d_model // 2
+        dim = jnp.arange(half, dtype=jnp.float32)[None, :]
+        ang = pos[:, None].astype(jnp.float32) / (10_000.0 ** (2 * dim /
+                                                               cfg.d_model))
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+        x = x + pe.astype(dt)
+    return shard(x, "batch", None, None)
+
+
+def _logits(params, x, cfg) -> jax.Array:
+    dt = x.dtype
+    head = params["embed"]["tok"].T if cfg.tie_embeddings else \
+        params["lm_head"]["w"]
+    logits = x @ head.astype(dt)
+    return shard(logits, "batch", None, "vocab")
+
+
+def forward_hidden(params: dict, tokens: jax.Array, cfg: ModelConfig, *,
+                   frames: Optional[jax.Array] = None) -> jax.Array:
+    """Final normed hidden states (B, S, D)."""
+    x = _embed(params, tokens, cfg)
+    positions = jnp.arange(tokens.shape[1])
+    enc_kv = None
+    if cfg.family == "encdec":
+        # raw encoder output; each decoder block projects it with its own
+        # wk/wv (whisper-style per-layer cross attention)
+        enc_kv = encode(params, frames, cfg)
+    x = _apply_segments(params["segments"], cfg.segments(), x, cfg,
+                        positions, enc_kv=enc_kv)
+    return (L.layer_norm if cfg.family == "encdec" else L.rms_norm)(
+        params["final_norm"], x, cfg.norm_eps)
+
+
+def forward_logits(params: dict, tokens: jax.Array, cfg: ModelConfig, *,
+                   frames: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence logits (training / prefill). tokens: (B, S) int32."""
+    return _logits(params, forward_hidden(params, tokens, cfg,
+                                          frames=frames), cfg)
+
+
+def _chunked_ce(x: jax.Array, head: jax.Array, labels: jax.Array,
+                n_chunks: int) -> tuple[jax.Array, jax.Array]:
+    """Online-logsumexp cross-entropy over vocab chunks (§Perf H5).
+
+    Never materializes the full (B, S, V) f32 logits: each chunk's
+    (B, S, V/n) logits are folded into running (max, sumexp, label-logit)
+    reductions and freed. Returns (lse, label_logit), both (B, S) f32.
+    """
+    D, V = head.shape
+    Vc = V // n_chunks
+    hc = head.T.reshape(n_chunks, Vc, D)                     # (n, Vc, D)
+
+    def step(carry, xs):
+        m, se, ll = carry
+        h_chunk, ci = xs
+        logits = jax.lax.dot_general(
+            x, h_chunk, (((2,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)              # (B, S, Vc)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        se = se * jnp.exp(m - m_new) + jnp.exp(
+            logits - m_new[..., None]).sum(axis=-1)
+        local = labels - ci * Vc
+        inside = (local >= 0) & (local < Vc)
+        picked = jnp.take_along_axis(
+            logits, jnp.clip(local, 0, Vc - 1)[..., None], axis=-1)[..., 0]
+        ll = ll + jnp.where(inside, picked, 0.0)
+        return (m_new, se, ll), None
+
+    B, S = labels.shape
+    init = (jnp.full((B, S), -1e30, jnp.float32),
+            jnp.zeros((B, S), jnp.float32),
+            jnp.zeros((B, S), jnp.float32))
+    (m, se, ll), _ = jax.lax.scan(step, init,
+                                  (hc, jnp.arange(n_chunks)))
+    return m + jnp.log(jnp.maximum(se, 1e-30)), ll
+
+
+def lm_loss(params: dict, batch: dict, cfg: ModelConfig,
+            z_loss: float = 1e-4) -> jax.Array:
+    """Masked next-token cross-entropy. batch: tokens/labels (B,S) int32,
+    labels < 0 are masked; encdec adds frames (B,enc_seq,D). With
+    cfg.vocab_chunks > 1 the (B,S,V) f32 logits never materialize."""
+    x = forward_hidden(params, batch["tokens"], cfg,
+                       frames=batch.get("frames"))
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    head = (params["embed"]["tok"].T if cfg.tie_embeddings
+            else params["lm_head"]["w"])
+    if cfg.vocab_chunks > 1 and cfg.vocab % cfg.vocab_chunks == 0:
+        lse, ll = _chunked_ce(x.astype(jnp.bfloat16),
+                              head.astype(jnp.bfloat16), safe,
+                              cfg.vocab_chunks)
+    else:
+        logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+        logits = shard(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    loss = nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    if z_loss:
+        loss = loss + z_loss * ((lse * mask) ** 2).sum() / \
+            jnp.maximum(mask.sum(), 1.0)
+    return loss
+
+
+# ------------------------------------------------------------------ decode
+def _init_block_cache(block: str, batch: int, cache_len: int,
+                      cfg: ModelConfig, dt) -> dict:
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    if block in ("attn_mlp", "attn_moe", "enc_block"):
+        T = cache_len
+        return {"k": jnp.zeros((batch, T, kv, hd), dt),
+                "v": jnp.zeros((batch, T, kv, hd), dt)}
+    if block == "dec_block":
+        # self-attn KV plus per-layer cross-attention KV over encoder frames
+        T = cache_len
+        return {"k": jnp.zeros((batch, T, kv, hd), dt),
+                "v": jnp.zeros((batch, T, kv, hd), dt),
+                "xk": jnp.zeros((batch, cfg.enc_seq, kv, hd), dt),
+                "xv": jnp.zeros((batch, cfg.enc_seq, kv, hd), dt)}
+    if block == "local_attn":
+        T = min(cache_len, cfg.local_window)
+        return {"k": jnp.zeros((batch, T, kv, hd), dt),
+                "v": jnp.zeros((batch, T, kv, hd), dt)}
+    if block == "rwkv":
+        return {"s": jnp.zeros((batch, cfg.n_heads, hd, hd), jnp.float32),
+                "xt": jnp.zeros((batch, cfg.d_model), dt),
+                "xc": jnp.zeros((batch, cfg.d_model), dt)}
+    if block == "rglru":
+        return {"h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.conv_width - 1,
+                                   cfg.lru_width), dt)}
+    raise ValueError(block)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    """Decode cache pytree mirroring the segment structure, plus scalars."""
+    dt = L.cdtype(cfg)
+    segs = []
+    for pattern, repeats in cfg.segments():
+        one = {f"b{i}": _init_block_cache(b, batch, cache_len, cfg, dt)
+               for i, b in enumerate(pattern)}
+        segs.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (repeats,) + x.shape), one))
+    return {"segments": segs, "len": jnp.zeros((), jnp.int32)}
+
+
+def fill_cross_kv(params: dict, cache: dict, enc_out: jax.Array,
+                  cfg: ModelConfig) -> dict:
+    """Project encoder output into every decoder layer's cross-KV cache
+    (run once per request before decoding)."""
+    new_segs = []
+    for seg_params, seg_cache, (pattern, _) in zip(
+            params["segments"], cache["segments"], cfg.segments()):
+        def per_layer(layer_p, layer_c, pattern=pattern):
+            out = dict(layer_c)
+            for i, b in enumerate(pattern):
+                if b == "dec_block":
+                    k, v = L.encoder_kv(layer_p[f"b{i}"]["xattn"], enc_out,
+                                        cfg)
+                    out[f"b{i}"] = dict(layer_c[f"b{i}"],
+                                        xk=k.astype(cache_dtype(layer_c)),
+                                        xv=v.astype(cache_dtype(layer_c)))
+            return out
+
+        new_segs.append(jax.vmap(per_layer)(seg_params, seg_cache))
+    return dict(cache, segments=new_segs)
+
+
+def cache_dtype(layer_c) -> jnp.dtype:
+    leaves = jax.tree.leaves(layer_c)
+    return leaves[0].dtype if leaves else jnp.bfloat16
+
+
+def _decode_block(block: str, p: dict, x: jax.Array, cfg, cache: dict,
+                  cache_len, enc_kv):
+    norm = L.layer_norm if cfg.family == "encdec" else L.rms_norm
+    if block in ("attn_mlp", "attn_moe", "local_attn", "dec_block"):
+        h = norm(p["ln1"], x, cfg.norm_eps)
+        out, nk, nv = L.attention_decode(
+            p["attn"], h, cfg, cache["k"], cache["v"], cache_len,
+            use_rope=(cfg.family != "encdec"))
+        x = x + out
+        new_cache = dict(cache, k=nk, v=nv)
+        if block == "dec_block":
+            x = x + L.cross_attention(
+                p["xattn"], norm(p["lnx"], x, cfg.norm_eps), cfg,
+                cache["xk"], cache["xv"])
+        h2 = norm(p["ln2"], x, cfg.norm_eps)
+        ff = L.moe(p["moe"], h2, cfg) if block == "attn_moe" else \
+            L.mlp(p["mlp"], h2, cfg)
+        return x + ff, new_cache
+    if block == "rwkv":
+        h = norm(p["ln1"], x, cfg.norm_eps)
+        out, s_new, xt_new = R.rwkv_tmix_decode(p["tmix"], h, cfg,
+                                                cache["s"], cache["xt"])
+        x = x + out
+        h2 = norm(p["ln2"], x, cfg.norm_eps)
+        out2 = R.rwkv_cmix(p["cmix"], h2, cfg, x_prev=cache["xc"])
+        return x + out2, dict(cache, s=s_new, xt=xt_new, xc=h2[:, 0])
+    if block == "rglru":
+        h = norm(p["ln1"], x, cfg.norm_eps)
+        out, st = R.rglru_decode(p["rglru"], h, cfg, cache)
+        x = x + out
+        x = x + L.mlp(p["mlp"], norm(p["ln2"], x, cfg.norm_eps), cfg)
+        return x, dict(cache, **st)
+    raise ValueError(block)
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array,
+                cfg: ModelConfig):
+    """One serving step: tokens (B, 1) int32 → (logits (B,1,V), new cache).
+
+    The per-segment scan threads each layer's cache slice alongside its
+    stacked params, so decode HLO is also O(#segments).
+    """
+    cache_len = cache["len"]
+    x = _embed(params, tokens, cfg, pos_offset=cache_len)
+    enc_kv = None       # cross-KV lives per-layer in the cache (fill_cross_kv)
+    new_segs = []
+    for seg_params, seg_cache, (pattern, _) in zip(
+            params["segments"], cache["segments"], cfg.segments()):
+        def body(h, xs, pattern=pattern):
+            layer_p, layer_c = xs
+            new_c = {}
+            for i, b in enumerate(pattern):
+                h, new_c[f"b{i}"] = _decode_block(
+                    b, layer_p[f"b{i}"], h, cfg, layer_c[f"b{i}"],
+                    cache_len, enc_kv)
+            return h, new_c
+
+        x, seg_cache_new = jax.lax.scan(body, x, (seg_params, seg_cache))
+        new_segs.append(seg_cache_new)
+    x = (L.layer_norm if cfg.family == "encdec" else L.rms_norm)(
+        params["final_norm"], x, cfg.norm_eps)
+    logits = _logits(params, x, cfg)
+    new_cache = dict(cache, segments=new_segs, len=cache_len + 1)
+    return logits, new_cache

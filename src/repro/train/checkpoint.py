@@ -1,0 +1,129 @@
+"""Fault-tolerant checkpointing: atomic, step-tagged, elastic-reshardable.
+
+Layout:  <dir>/step_<N>/
+           manifest.json      — paths, shapes, dtypes, step, user metadata
+           arrays.npz         — flattened leaves keyed by escaped path
+         <dir>/LATEST         — atomically updated pointer file
+
+Guarantees (tested in tests/test_checkpoint.py):
+  * atomicity — a checkpoint is visible only after os.replace of its
+    directory and the LATEST pointer; a killed writer leaves no partial
+    step visible;
+  * resume-exactness — restore() + the counter-based data pipeline replay
+    reproduce the uninterrupted run bitwise (tests/dist kill/resume test);
+  * elasticity — restore(shardings=...) device_puts every leaf to a NEW
+    mesh layout, so a job can come back on a different topology.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree, metadata: Optional[dict] = None
+         ) -> str:
+    """Write one checkpoint atomically; returns its final path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=f".tmp_step_{step}_")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k.replace("/", "|"): v for k, v in flat.items()})
+        manifest = {
+            "step": int(step),
+            "keys": sorted(flat.keys()),
+            "shapes": {k: list(v.shape) for k, v in flat.items()},
+            "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+            "metadata": metadata or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)                      # atomic publish
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    # atomic LATEST pointer
+    ptr_tmp = os.path.join(ckpt_dir, ".LATEST.tmp")
+    with open(ptr_tmp, "w") as f:
+        f.write(f"step_{step:08d}")
+    os.replace(ptr_tmp, os.path.join(ckpt_dir, "LATEST"))
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    ptr = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        name = f.read().strip()
+    path = os.path.join(ckpt_dir, name)
+    if not os.path.exists(os.path.join(path, "manifest.json")):
+        return None                                  # torn pointer: ignore
+    return int(name.split("_")[1])
+
+
+def restore(ckpt_dir: str, template, step: Optional[int] = None,
+            shardings=None) -> tuple[Any, int, dict]:
+    """Load a checkpoint into `template`'s structure.
+
+    shardings: optional pytree (same structure) of jax.sharding.Sharding —
+    every leaf is device_put to it, enabling elastic mesh-shape changes.
+    Returns (tree, step, metadata).
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    npz = np.load(os.path.join(path, "arrays.npz"))
+    flat = {k.replace("|", "/"): npz[k.replace("/", "|")]
+            for k in manifest["keys"]}
+
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(leaves_paths))
+    out = []
+    for (path_t, leaf), shd in zip(leaves_paths, shard_leaves):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_t)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        want_shape = tuple(leaf.shape)
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(f"shape mismatch for {key}: ckpt "
+                             f"{arr.shape} vs template {want_shape}")
+        arr = arr.astype(leaf.dtype)
+        out.append(jax.device_put(arr, shd) if shd is not None
+                   else jax.numpy.asarray(arr))
+    return (jax.tree_util.tree_unflatten(treedef, out), step,
+            manifest["metadata"])
+
+
+def prune_old(ckpt_dir: str, keep: int = 3) -> None:
+    """Keep the newest `keep` checkpoints (preemption-safe GC)."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)

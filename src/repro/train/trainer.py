@@ -1,0 +1,114 @@
+"""Training step assembly: loss → grads → AdamW, with microbatch gradient
+accumulation and the model's sharding rules applied at trace time.
+
+`make_train_step` returns the exact function the launcher pjit-compiles for
+the dry-run and that examples/train_lm.py runs for real on CPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.models.sharding import AxisRules, axis_rules
+from repro.train.optimizer import (AdamWConfig, OptState, adamw_init,
+                                   adamw_update, cosine_schedule)
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    rules: Optional[AxisRules] = None,
+                    microbatches: int = 1,
+                    schedule: Optional[Callable] = None,
+                    bf16_compute_params: bool = True):
+    """Returns train_step(params, opt_state, batch) → (params, opt_state,
+    metrics). Microbatches split the global batch's leading dim and
+    accumulate grads in a lax.scan (sequential, remat-friendly).
+
+    bf16_compute_params (§Perf H3): cast f32 master weights to a bf16
+    compute copy ONCE, constrained to the same (FSDP) sharding — GSPMD's
+    per-layer weight all-gathers then move half the bytes. Grads flow back
+    through the cast in f32; AdamW state stays f32 (mixed precision with
+    master weights)."""
+    specs = model.param_specs(rules) if rules is not None else None
+
+    def _compute_params(params):
+        if not bf16_compute_params:
+            return params
+
+        def cast(p, spec):
+            if p.dtype != jnp.float32 or p.ndim < 2:
+                return p                    # 1-D scales stay f32
+            pc = p.astype(jnp.bfloat16)
+            if rules is not None:
+                pc = jax.lax.with_sharding_constraint(
+                    pc, jax.NamedSharding(rules.mesh, spec))
+            return pc
+
+        if specs is None:
+            return jax.tree.map(lambda p: cast(p, None), params)
+        return jax.tree.map(cast, params, specs)
+
+    def loss_fn(params, batch):
+        return model.loss_fn(_compute_params(params), batch)
+
+    def train_step(params, opt_state: OptState, batch: dict):
+        with axis_rules(rules):
+            if microbatches == 1:
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            else:
+                def split(x):
+                    b = x.shape[0]
+                    return x.reshape(microbatches, b // microbatches,
+                                     *x.shape[1:])
+
+                mb = jax.tree.map(split, batch)
+
+                def acc(carry, mbatch):
+                    l, g = jax.value_and_grad(loss_fn)(params, mbatch)
+                    return (carry[0] + l,
+                            jax.tree.map(jnp.add, carry[1], g)), None
+
+                zero = (jnp.zeros(()),
+                        jax.tree.map(lambda p: jnp.zeros(p.shape,
+                                                         jnp.float32),
+                                     params))
+                (loss, grads), _ = jax.lax.scan(acc, zero, mb)
+                loss = loss / microbatches
+                grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+            lr_scale = schedule(opt_state.step) if schedule else 1.0
+            params, opt_state, om = adamw_update(opt_cfg, grads, opt_state,
+                                                 params, lr_scale)
+        return params, opt_state, {"loss": loss, **om}
+
+    return train_step
+
+
+def make_serve_step(model: Model, rules: Optional[AxisRules] = None):
+    """Returns serve_step(params, cache, tokens) → (logits, cache): one
+    batched decode step — the function the decode cells lower."""
+
+    def serve_step(params, cache, tokens):
+        with axis_rules(rules):
+            return model.decode_step(params, cache, tokens)
+
+    return serve_step
+
+
+def make_prefill_step(model: Model, rules: Optional[AxisRules] = None):
+    """Returns prefill(params, batch) → logits over the full sequence."""
+
+    def prefill(params, batch):
+        with axis_rules(rules):
+            return model.forward_logits(params, batch["tokens"],
+                                        frames=batch.get("frames"))
+
+    return prefill
+
+
+def init_train_state(model: Model, key) -> tuple[dict, OptState]:
+    params = model.init_params(key)
+    return params, adamw_init(params)

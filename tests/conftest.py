@@ -1,0 +1,33 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS device forcing here — smoke
+tests and benches must see the single real CPU device. Multi-device tests
+run in subprocesses (see tests/dist/)."""
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_problem(key, n, m, d, norm_spread=0.3, dtype="float32"):
+    """Random (users, items) with Gaussian norms per Fig. 2 of the paper."""
+    import jax.numpy as jnp
+    ku, ki, ks = jax.random.split(key, 3)
+    users = jax.random.normal(ku, (n, d), dtype=jnp.float32)
+    scale = 1.0 + norm_spread * jax.random.normal(ks, (m, 1), jnp.float32)
+    items = jax.random.normal(ki, (m, d), jnp.float32) * jnp.abs(scale)
+    return users.astype(dtype), items.astype(dtype)
+
+
+@pytest.fixture
+def small_problem():
+    return make_problem(jax.random.PRNGKey(42), n=512, m=400, d=16)
+
+
+@pytest.fixture
+def medium_problem():
+    return make_problem(jax.random.PRNGKey(7), n=2048, m=1024, d=32)

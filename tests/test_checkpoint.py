@@ -1,0 +1,76 @@
+"""Checkpoint substrate: atomicity, LATEST pointer, pruning, dtype/shape
+validation, torn-writer behavior."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as ckpt
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (4, 8)),
+            "nested": {"b": jnp.arange(6, dtype=jnp.int32),
+                       "c": [jnp.ones((2,)), jnp.zeros((3, 3))]},
+            "scalar": jnp.asarray(3, jnp.int32)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 7, t, metadata={"note": "x"})
+    restored, step, meta = ckpt.restore(str(tmp_path), jax.eval_shape(
+        lambda: t))
+    assert step == 7 and meta == {"note": "x"}
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_pointer_and_prune(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, t)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    ckpt.prune_old(str(tmp_path), keep=2)
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert dirs == ["step_00000004", "step_00000005"]
+    _, step, _ = ckpt.restore(str(tmp_path), jax.eval_shape(lambda: t))
+    assert step == 5
+
+
+def test_restore_specific_step(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"v": jnp.asarray(1.0)})
+    ckpt.save(str(tmp_path), 2, {"v": jnp.asarray(2.0)})
+    restored, step, _ = ckpt.restore(
+        str(tmp_path), {"v": jnp.asarray(0.0)}, step=1)
+    assert step == 1 and float(restored["v"]) == 1.0
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"v": jnp.ones((4,))})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        ckpt.restore(str(tmp_path), {"v": jnp.ones((5,))})
+
+
+def test_missing_leaf_rejected(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"v": jnp.ones((4,))})
+    with pytest.raises(KeyError):
+        ckpt.restore(str(tmp_path), {"v": jnp.ones((4,)),
+                                     "w": jnp.ones((1,))})
+
+
+def test_torn_writer_leaves_no_partial_step(tmp_path):
+    """A crashed writer (simulated tmp dir) must be invisible to readers."""
+    ckpt.save(str(tmp_path), 1, {"v": jnp.asarray(1.0)})
+    os.makedirs(tmp_path / ".tmp_step_9_dead")      # torn write remains
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    _, step, _ = ckpt.restore(str(tmp_path), {"v": jnp.asarray(0.0)})
+    assert step == 1
+
+
+def test_empty_dir(tmp_path):
+    assert ckpt.latest_step(str(tmp_path)) is None
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(str(tmp_path), {"v": jnp.asarray(0.0)})

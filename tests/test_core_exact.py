@@ -1,0 +1,85 @@
+"""Oracle tests: repro.core.exact vs literal numpy Definition 1/2.
+
+Ranks are tie-sensitive: when q ∈ P, u·q mathematically ties u·p for p = q,
+and float32 matmuls in XLA vs numpy round differently. The reference is
+therefore a band [rank_strict, rank_with_ties] computed in float64 with an
+epsilon window; the JAX rank must fall inside the band.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.exact import exact_rank_single, exact_ranks, reverse_k_ranks
+from tests.conftest import make_problem
+
+EPS = 1e-4
+
+
+def np_rank_band(users, items, q):
+    users = np.asarray(users, np.float64)
+    items = np.asarray(items, np.float64)
+    q = np.asarray(q, np.float64)
+    uq = users @ q
+    up = users @ items.T
+    scale = np.abs(up).max()
+    lo = 1 + (up > uq[:, None] + EPS * scale).sum(axis=1)
+    hi = 1 + (up > uq[:, None] - EPS * scale).sum(axis=1)
+    return lo, hi
+
+
+def assert_in_band(got, lo, hi):
+    got = np.asarray(got)
+    ok = (lo <= got) & (got <= hi)
+    assert ok.all(), f"out of band at {np.where(~ok)[0][:10]}"
+
+
+@pytest.mark.parametrize("n,m,d", [(64, 50, 8), (257, 129, 16), (1000, 333, 64)])
+def test_exact_ranks_matches_numpy(n, m, d):
+    users, items = make_problem(jax.random.PRNGKey(n + m), n, m, d)
+    q = items[3]
+    got = np.asarray(exact_ranks(users, items, q, block=128))
+    lo, hi = np_rank_band(users, items, q)
+    assert_in_band(got, lo, hi)
+
+
+def test_block_size_invariance(small_problem):
+    users, items = small_problem
+    q = items[0]
+    a = np.asarray(exact_ranks(users, items, q, block=32))
+    b = np.asarray(exact_ranks(users, items, q, block=4096))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_reverse_k_ranks_is_k_smallest(small_problem):
+    users, items = small_problem
+    q = items[11]
+    k = 17
+    idx, ranks = reverse_k_ranks(users, items, q, k)
+    ranks, idx = np.asarray(ranks), np.asarray(idx)
+    full = np.asarray(exact_ranks(users, items, q))
+    assert len(set(idx.tolist())) == k
+    np.testing.assert_array_equal(ranks, full[idx])
+    # rank-ascending and no better user left out (vs the same rank vector)
+    assert np.all(np.diff(ranks) >= 0)
+    assert ranks[-1] <= np.partition(full, k - 1)[k - 1]
+
+
+def test_single_user_rank_matches(small_problem):
+    users, items = small_problem
+    q = items[5]
+    lo, hi = np_rank_band(users, items, q)
+    for i in [0, 7, 511]:
+        got = int(exact_rank_single(users[i], items, q))
+        assert lo[i] <= got <= hi[i]
+
+
+def test_rank_one_for_best_user(small_problem):
+    """A user whose strictly-best item is q has rank 1 (Definition 1 counts
+    strictly greater items only). Ties with q allow rank 2 under float
+    rounding, hence the ≤ 2 band for the self-tie."""
+    users, items = small_problem
+    q = items[9]
+    ranks = np.asarray(exact_ranks(users, items, q))
+    best = np.asarray(np.asarray(users, np.float64)
+                      @ np.asarray(items, np.float64).T).argmax(axis=1)
+    assert np.all(ranks[best == 9] <= 2)

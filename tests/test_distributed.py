@@ -1,0 +1,46 @@
+"""Multi-device integration tests. Each scenario runs in a SUBPROCESS with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 so the main pytest
+process keeps its single real CPU device (per the dry-run isolation rule).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_DIST = os.path.join(os.path.dirname(__file__), "dist")
+_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _run(script: str, timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)        # the script sets its own device count
+    proc = subprocess.run(
+        [sys.executable, os.path.join(_DIST, script)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert proc.returncode == 0, \
+        f"{script} failed:\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert "ALL_OK" in proc.stdout, proc.stdout
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_engine_distributed():
+    out = _run("engine_dist.py")
+    for marker in ("BUILD_PARITY_OK", "QUERY_PARITY_OK", "BATCH_QUERY_OK",
+                   "RING_OK", "SCHEDULE_OK"):
+        assert marker in out
+
+
+@pytest.mark.slow
+def test_train_distributed():
+    out = _run("train_dist.py")
+    for marker in ("PARITY_OK", "SHARDED_OK", "ELASTIC_OK"):
+        assert marker in out
+
+
+@pytest.mark.slow
+def test_kill_resume_bitwise():
+    out = _run("resume_dist.py")
+    assert "BITWISE_RESUME_OK" in out

@@ -1,0 +1,82 @@
+"""QSRP baseline tests: exact bounds, accuracy-1 guarantee, c behaviour."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import metrics
+from repro.core.exact import exact_ranks, reverse_k_ranks
+from repro.core.qsrp import (QSRPIndex, _bounds_from_summary,
+                             build_qsrp_index, qsrp_query)
+from tests.conftest import make_problem
+
+
+@pytest.fixture(scope="module")
+def problem():
+    users, items = make_problem(jax.random.PRNGKey(33), n=600, m=500, d=24)
+    idx = build_qsrp_index(users, items, levels=100, block=256)
+    return users, items, idx
+
+
+def test_qsrp_bounds_always_valid(problem):
+    """Quantile summaries are true order statistics ⇒ bounds are EXACT
+    (unlike the rank table's estimates)."""
+    users, items, idx = problem
+    for qi in [0, 10, 499]:
+        q = items[qi]
+        uq = np.asarray(users @ q)
+        r_lo, r_up = map(np.asarray,
+                         _bounds_from_summary(idx, jax.numpy.asarray(uq)))
+        truth = np.asarray(exact_ranks(users, items, q))
+        assert np.all(r_lo <= truth)
+        assert np.all(truth <= r_up)
+        assert np.all(r_up - r_lo <= np.ceil(500 / 99) + 1)
+
+
+@pytest.mark.parametrize("c", [1.0, 2.0, 4.0])
+def test_qsrp_accuracy_always_one(problem, c):
+    """QSRP's guarantee holds up to float-tie noise: two different matmul
+    schedules can flip a strict `>` at a mathematical tie, shifting a rank
+    by ±1; we therefore assert the Def.-3 inequality with a 1-rank slack."""
+    users, items, idx = problem
+    for qi in [3, 77]:
+        q = items[qi]
+        truth = np.asarray(exact_ranks(users, items, q))
+        ex_idx, _ = reverse_k_ranks(users, items, q, 10)
+        got_idx, got_ranks, _ = qsrp_query(idx, users, items, q, 10, c)
+        ours = np.sort(truth[got_idx]).astype(np.float64)
+        exact = np.sort(truth[np.asarray(ex_idx)]).astype(np.float64)
+        assert np.all(ours <= c * exact + 1)
+        np.testing.assert_allclose(got_ranks, truth[got_idx], atol=2)
+
+
+def test_qsrp_c1_equals_exact(problem):
+    """c = 1 degenerates to the exact reverse k-ranks answer (rank-wise,
+    modulo float-tie ±1)."""
+    users, items, idx = problem
+    q = items[42]
+    truth = np.asarray(exact_ranks(users, items, q))
+    ex_idx, ex_ranks = reverse_k_ranks(users, items, q, 15)
+    got_idx, got_ranks, _ = qsrp_query(idx, users, items, q, 15, 1.0)
+    np.testing.assert_allclose(np.sort(truth[got_idx]),
+                               np.sort(np.asarray(ex_ranks)), atol=1)
+
+
+def test_larger_c_refines_no_more(problem):
+    """Higher c accepts more users via Lemma 1(1) ⇒ refinement work cannot
+    grow with c (the Fig. 4 trend)."""
+    users, items, idx = problem
+    q = items[8]
+    refined = [qsrp_query(idx, users, items, q, 10, c)[2]
+               for c in (1.0, 2.0, 4.0, 8.0)]
+    assert all(a >= b for a, b in zip(refined, refined[1:]))
+
+
+def test_metrics_definitions():
+    true_ranks = np.array([5, 1, 10, 100, 3])
+    exact_idx = np.array([1, 4, 0])           # ranks 1, 3, 5
+    ours_idx = np.array([1, 0, 2])            # ranks 1, 5, 10
+    acc = metrics.accuracy(ours_idx, exact_idx, true_ranks, c=2.0)
+    # pairs: (1,1) ok, (5,3) 5<=6 ok, (10,5) 10<=10 ok  → 1.0
+    assert acc == 1.0
+    ratio = metrics.overall_ratio(ours_idx, exact_idx, true_ranks)
+    np.testing.assert_allclose(ratio, np.mean([1 / 1, 5 / 3, 10 / 5]))

@@ -1,0 +1,142 @@
+"""Algorithm 1 tests: stratified sampling, threshold grids, Eq. (1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rank_table import (build_rank_table, estimate_table_rows,
+                                   sort_items_by_norm,
+                                   stratified_sample_indices, threshold_grid)
+from repro.core.types import RankTableConfig, partition_sizes
+from tests.conftest import make_problem
+
+
+@given(m=st.integers(1, 10_000), omega=st.integers(1, 64))
+@settings(max_examples=50, deadline=None)
+def test_partition_sizes_cover_and_balance(m, omega):
+    sizes = partition_sizes(m, omega)
+    assert sum(sizes) == m
+    assert len(sizes) == omega
+    assert max(sizes) - min(sizes) <= 1
+
+
+def test_stratified_samples_stay_in_their_bucket():
+    cfg = RankTableConfig(tau=10, omega=4, s=8)
+    m = 103
+    pos, w = stratified_sample_indices(jax.random.PRNGKey(0), m, cfg)
+    sizes = partition_sizes(m, cfg.omega)
+    starts = np.cumsum([0] + list(sizes))
+    pos, w = np.asarray(pos), np.asarray(w)
+    for l in range(cfg.omega):
+        sl = pos[l * cfg.s:(l + 1) * cfg.s]
+        assert np.all((sl >= starts[l]) & (sl < starts[l + 1]))
+        # Eq. (1) stratum weight |P_l| / s
+        np.testing.assert_allclose(w[l * cfg.s:(l + 1) * cfg.s],
+                                   sizes[l] / cfg.s)
+        # without replacement: all distinct (s=8 <= bucket sizes ~25)
+        assert len(set(sl.tolist())) == cfg.s
+
+
+def test_threshold_grid_uniform_and_ascending():
+    smin = jnp.array([0.0, -2.0])
+    smax = jnp.array([1.0, 2.0])
+    t = np.asarray(threshold_grid(smin, smax, 5))
+    np.testing.assert_allclose(t[0], [0, 0.25, 0.5, 0.75, 1.0], atol=1e-6)
+    np.testing.assert_allclose(t[1], [-2, -1, 0, 1, 2], atol=1e-6)
+
+
+def test_estimate_table_rows_matches_naive_loop():
+    rng = np.random.default_rng(1)
+    n, ns, tau = 5, 40, 7
+    scores = rng.normal(size=(n, ns)).astype(np.float32)
+    weights = rng.uniform(0.5, 2.0, size=(ns,)).astype(np.float32)
+    thresholds = np.sort(rng.normal(size=(n, tau)).astype(np.float32), axis=1)
+    got = np.asarray(estimate_table_rows(jnp.asarray(scores),
+                                         jnp.asarray(weights),
+                                         jnp.asarray(thresholds)))
+    want = np.zeros((n, tau), np.float64)
+    for i in range(n):
+        for j in range(tau):
+            want[i, j] = 1 + weights[(scores[i] > thresholds[i, j])].sum()
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_sort_items_by_norm_descending(small_problem):
+    _, items = small_problem
+    items_sorted, order = sort_items_by_norm(items)
+    norms = np.linalg.norm(np.asarray(items_sorted), axis=1)
+    assert np.all(np.diff(norms) <= 1e-5)
+    np.testing.assert_allclose(np.asarray(items)[np.asarray(order)],
+                               np.asarray(items_sorted))
+
+
+def test_table_rows_non_increasing(medium_problem):
+    users, items = medium_problem
+    cfg = RankTableConfig(tau=64, omega=8, s=16)
+    rt = build_rank_table(users, items, cfg, jax.random.PRNGKey(3))
+    table = np.asarray(rt.table)
+    assert np.all(np.diff(table, axis=1) <= 1e-4)
+    assert table.min() >= 1.0
+    assert table.max() <= items.shape[0] + 1 + 1e-4
+    assert int(rt.m) == items.shape[0]
+
+
+def test_full_sampling_gives_exact_table(small_problem):
+    """When s = |P_l| (sample everything, no replacement), Eq. (1) becomes
+    the exact count: the table must equal true ranks at each threshold."""
+    users, items = small_problem
+    users, items = users[:64], items[:100]
+    omega = 4
+    cfg = RankTableConfig(tau=33, omega=omega, s=items.shape[0] // omega,
+                          threshold_mode="exact")
+    rt = build_rank_table(users, items, cfg, jax.random.PRNGKey(5))
+    U = np.asarray(users, np.float64)
+    P = np.asarray(items, np.float64)
+    thr = np.asarray(rt.thresholds, np.float64)
+    scores = np.einsum("nd,md->nm", U, P)[:, None, :]
+    # f_min/f_max thresholds EQUAL extreme scores; strict `>` at a float32
+    # tie can flip vs float64 — compare against the [lo, hi] tie band.
+    eps = 1e-4 * np.abs(scores).max()
+    lo = 1 + (scores > thr[:, :, None] + eps).sum(axis=2)
+    hi = 1 + (scores > thr[:, :, None] - eps).sum(axis=2)
+    got = np.asarray(rt.table)
+    assert np.all((lo - 1e-5 <= got) & (got <= hi + 1e-5))
+
+
+def test_estimator_is_unbiased(small_problem):
+    """E[T̂] = T over sampling keys (Eq. 1's unbiasedness claim)."""
+    users, items = small_problem
+    users, items = users[:8], items[:200]
+    cfg = RankTableConfig(tau=9, omega=5, s=8, threshold_mode="norm_bound")
+    tables = []
+    for seed in range(200):
+        rt = build_rank_table(users, items, cfg, jax.random.PRNGKey(seed))
+        tables.append(np.asarray(rt.table))
+    mean_table = np.mean(tables, axis=0)
+    exact_cfg = RankTableConfig(tau=9, omega=5, s=40,
+                                threshold_mode="norm_bound")
+    # exact table: full sampling per bucket
+    rt_exact = build_rank_table(users, items, exact_cfg,
+                                jax.random.PRNGKey(0))
+    np.testing.assert_allclose(mean_table, np.asarray(rt_exact.table),
+                               atol=3.0)  # 3 ranks of 200 ≈ 1.5 %
+
+
+@pytest.mark.parametrize("mode", ["sampled", "norm_bound", "exact"])
+def test_threshold_modes_all_build(small_problem, mode):
+    users, items = small_problem
+    cfg = RankTableConfig(tau=16, omega=4, s=8, threshold_mode=mode)
+    rt = build_rank_table(users, items, cfg, jax.random.PRNGKey(1))
+    thr = np.asarray(rt.thresholds)
+    assert np.all(np.diff(thr, axis=1) > 0)
+    assert rt.table.shape == (users.shape[0], 16)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        RankTableConfig(tau=1)
+    with pytest.raises(ValueError):
+        RankTableConfig(omega=0)
+    with pytest.raises(ValueError):
+        RankTableConfig(threshold_mode="bogus")

@@ -1,0 +1,92 @@
+"""Chunked-vs-sequential references for the recurrent mixers: the GLA-style
+chunked WKV and the associative-scan RG-LRU must match step-by-step
+recurrences to float tolerance (the TPU-adaptation correctness proof)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.recurrent import (_rglru_coeffs, init_rglru_block,
+                                    init_rwkv_tmix, wkv_chunked)
+from repro.configs import get_config, reduced
+
+
+def seq_wkv(r, k, v, logw, u, s0):
+    """Literal per-step recurrence: S_t = diag(w_t)S_{t-1} + k_t v_tᵀ,
+    y_t = r_t(S_{t-1} + diag(u) k_t v_tᵀ)."""
+    B, H, S, hd = r.shape
+    s = np.asarray(s0, np.float64)
+    ys = []
+    rr, kk, vv = (np.asarray(t, np.float64) for t in (r, k, v))
+    ww = np.exp(np.asarray(logw, np.float64))
+    uu = np.asarray(u, np.float64)
+    for t in range(S):
+        kv = kk[:, :, t, :, None] * vv[:, :, t, None, :]
+        y = np.einsum("bhd,bhde->bhe", rr[:, :, t],
+                      s + uu[None, :, :, None] * kv)
+        ys.append(y)
+        s = ww[:, :, t][..., None] * s + kv
+    return np.stack(ys, axis=2), s
+
+
+@pytest.mark.parametrize("S,chunk", [(16, 4), (64, 64), (96, 32), (33, 33)])
+def test_wkv_chunked_matches_sequential(S, chunk):
+    B, H, hd = 2, 3, 8
+    key = jax.random.PRNGKey(S)
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (B, H, S, hd))
+    k = jax.random.normal(ks[1], (B, H, S, hd))
+    v = jax.random.normal(ks[2], (B, H, S, hd))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, H, S, hd)) * 0.5)
+    u = jax.random.normal(ks[4], (H, hd)) * 0.3
+    s0 = jnp.zeros((B, H, hd, hd))
+    y, s_fin = wkv_chunked(r, k, v, logw, u, s0, chunk=chunk)
+    y_ref, s_ref = seq_wkv(r, k, v, logw, u, s0)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_fin), s_ref, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_wkv_carries_state_across_chunks():
+    """Nonzero s0 must influence every chunk's output (inter-chunk path)."""
+    B, H, S, hd = 1, 1, 8, 4
+    key = jax.random.PRNGKey(0)
+    r = jnp.ones((B, H, S, hd))
+    k = jnp.zeros((B, H, S, hd))          # no new writes
+    v = jnp.zeros((B, H, S, hd))
+    logw = jnp.zeros((B, H, S, hd))       # decay = 1 (no forgetting)
+    u = jnp.zeros((H, hd))
+    s0 = jnp.eye(hd)[None, None] * 2.0
+    y, s_fin = wkv_chunked(r, k, v, logw, u, s0, chunk=4)
+    np.testing.assert_allclose(np.asarray(y), 2.0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(s_fin), np.asarray(s0), rtol=1e-6)
+
+
+def test_rglru_assoc_scan_matches_stepwise():
+    cfg = reduced(get_config("recurrentgemma-9b"))
+    p = init_rglru_block(jax.random.PRNGKey(1), cfg)
+    B, S = 2, 12
+    u = jax.random.normal(jax.random.PRNGKey(2), (B, S, cfg.lru_width))
+    a, b = _rglru_coeffs(p, u, jnp.float32)
+
+    def op(ca, cb):
+        (a1, b1), (a2, b2) = ca, cb
+        return a1 * a2, b1 * a2 + b2
+
+    _, h_scan = jax.lax.associative_scan(op, (a, b), axis=1)
+    h = np.zeros((B, cfg.lru_width))
+    a_np, b_np = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    for t in range(S):
+        h = a_np[:, t] * h + b_np[:, t]
+        np.testing.assert_allclose(np.asarray(h_scan[:, t]), h, rtol=1e-4,
+                                   atol=1e-5)
+
+
+def test_rglru_decay_in_unit_interval():
+    cfg = reduced(get_config("recurrentgemma-9b"))
+    p = init_rglru_block(jax.random.PRNGKey(3), cfg)
+    u = jax.random.normal(jax.random.PRNGKey(4), (3, 7, cfg.lru_width)) * 5
+    a, b = _rglru_coeffs(p, u, jnp.float32)
+    a = np.asarray(a)
+    assert np.all((a > 0) & (a < 1))
+    assert np.all(np.isfinite(np.asarray(b)))
