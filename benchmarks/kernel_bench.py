@@ -8,12 +8,13 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import csv_row, load, BenchDataset, timeit
-from repro.core.query import lookup_bounds
+from repro.core.query import bound_ranks_batch, lookup_bounds
 from repro.core.rank_table import build_rank_table
 from repro.core.types import RankTableConfig
 from repro.kernels import ops
 
 DS = BenchDataset("kernelbench", 4_096, 2_048, 128)
+BATCH = 16
 
 
 def run(quick: bool = False) -> list[str]:
@@ -34,6 +35,19 @@ def run(quick: bool = False) -> list[str]:
         users, qq, rt.thresholds, rt.table, m=int(rt.m)), q, iters=3)
     rows.append(csv_row("kernel/step1/pallas_interp", t_pl * 1e6,
                         f"parity_runtime_ratio={t_pl/t_jnp:.1f}"))
+
+    # Batched step 1 (PR 1): one table pass for BATCH queries; report µs
+    # per query so the amortization vs the single-query rows is direct.
+    qs = items[3:3 + BATCH]
+    t_jnp_b = timeit(lambda Q: bound_ranks_batch(rt, users, Q), qs, iters=3)
+    rows.append(csv_row(f"kernel/step1_batch{BATCH}/jnp",
+                        t_jnp_b / BATCH * 1e6,
+                        f"amortization_x={t_jnp/(t_jnp_b/BATCH):.1f}"))
+    t_pl_b = timeit(lambda Q: ops.bound_ranks_batched(
+        users, Q, rt.thresholds, rt.table, m=int(rt.m)), qs, iters=3)
+    rows.append(csv_row(f"kernel/step1_batch{BATCH}/pallas_interp",
+                        t_pl_b / BATCH * 1e6,
+                        f"amortization_x={t_pl/(t_pl_b/BATCH):.1f}"))
     return rows
 
 

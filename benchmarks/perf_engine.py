@@ -1,4 +1,4 @@
-"""§Perf H4 — engine-query hillclimb harness.
+"""§Perf H4/H6 — engine-query hillclimb harness.
 
 Part A (dry-run, 512 host devices): lowers the sharded query for each
 (τ, storage_dtype) variant at full Amazon-K scale and reports the
@@ -9,6 +9,13 @@ Part B (CPU, real execution): measures accuracy / overall-ratio of the
 same variants on a reduced replica, proving the memory-term optimizations
 don't cost quality. Run with:
     PYTHONPATH=src python -m benchmarks.perf_engine --quality
+
+Part C (CPU, real execution): the PR-1 acceptance benchmark — wall-time
+per query of `query_batch` vs batch size B on the same backend. The
+batched path reads the (n, τ) rank table and (n, d) user matrix ONCE per
+batch, so ms/query must drop monotonically-ish with B (B=16 strictly
+below B=1). Run with:
+    PYTHONPATH=src python -m benchmarks.perf_engine --batched
 """
 from __future__ import annotations
 
@@ -65,7 +72,7 @@ def roofline_mode():
             table=jax.ShapeDtypeStruct((n, cfg.tau), jnp.float32),
             m=jax.ShapeDtypeStruct((), jnp.int32))
         qs_sds = jax.ShapeDtypeStruct((b, d), jnp.float32)
-        bq = D.make_batch_query_fn(mesh, k=10, n=n, c=2.0, q_batch=b)
+        bq = D.make_batch_query_fn(mesh, k=10, n=n, c=2.0)
         compiled = jax.jit(bq).lower(rt_sds, users_sds, qs_sds).compile()
         roof = RL.analyze(compiled, chips=chips,
                           model_flops=2.0 * n * d * b)
@@ -105,12 +112,51 @@ def quality_mode():
               f"index={eng.memory_bytes()/2**20:.1f}MiB")
 
 
+def batched_mode():
+    """Acceptance: ms/query at B=16 strictly below the B=1 per-query path
+    on the same backend — the n·(d+2τ) stream is read once per batch."""
+    import jax
+    from benchmarks.common import timeit
+    from repro.core import ReverseKRanksEngine
+    from repro.core.types import RankTableConfig
+    from repro.data.pipeline import synthetic_embeddings
+
+    users, items = synthetic_embeddings(jax.random.PRNGKey(0), 16_384,
+                                        4_096, 128)
+    cfg = RankTableConfig(tau=128, omega=8, s=32)
+    print(f"batched query_batch sweep: n={users.shape[0]:,} "
+          f"m={items.shape[0]:,} d={users.shape[1]} tau={cfg.tau}")
+    results = {}
+    for backend in ("dense", "fused"):
+        eng = ReverseKRanksEngine.build(users, items, cfg,
+                                        jax.random.PRNGKey(1),
+                                        backend=backend)
+        base = None
+        for B in (1, 4, 16, 64):
+            qs = items[:B]
+            t = timeit(lambda Q: eng.query_batch(Q, k=10, c=2.0).indices,
+                       qs, iters=3)
+            per_q = t / B
+            if base is None:
+                base = per_q
+            results[(backend, B)] = per_q
+            print(f"{backend:6s} B={B:3d}  {per_q*1e3:8.3f} ms/query  "
+                  f"{B/t:8.1f} q/s  amortization×{base/per_q:5.2f}")
+    for backend in ("dense", "fused"):
+        ok = results[(backend, 16)] < results[(backend, 1)]
+        print(f"{backend}: B=16 per-query < B=1 per-query: "
+              f"{'PASS' if ok else 'FAIL'}")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--roofline", action="store_true")
     ap.add_argument("--quality", action="store_true")
+    ap.add_argument("--batched", action="store_true")
     args = ap.parse_args()
     if args.roofline:
         roofline_mode()
     if args.quality:
         quality_mode()
+    if args.batched:
+        batched_mode()

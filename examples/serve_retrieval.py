@@ -25,25 +25,36 @@ N_USERS, N_ITEMS, K, C = 6_000, 2_500, 10, 2.0
 # --- 1. ratings → MF embeddings (the paper's LIBMF step, in JAX) ----------
 key = jax.random.PRNGKey(0)
 ii, jj, rr = synthetic_ratings(key, N_USERS, N_ITEMS, n_obs=300_000)
+# mean-loss SGD scales the per-example step by 1/batch ⇒ lr = O(10) here
 state, losses = train_mf(key, N_USERS, N_ITEMS, ii, jj, rr,
-                         MFConfig(d=64, epochs=8, lr=1.0))
+                         MFConfig(d=64, epochs=8, lr=10.0))
 users, items = embeddings(state)
 print(f"MF: rmse-ish loss {losses[0]:.4f} → {losses[-1]:.4f}, "
       f"embeddings d={users.shape[1]}")
 
 # --- 2. offline index ------------------------------------------------------
+# backend= selects a query-execution backend from the registry
+# (repro.core.backends): "dense" (pure jnp), "fused" (Pallas), "sharded".
 eng = ReverseKRanksEngine.build(users, items,
                                 RankTableConfig(tau=500, omega=10, s=64),
-                                jax.random.PRNGKey(1))
+                                jax.random.PRNGKey(1), backend="dense")
 
 # --- 3. batched online queries --------------------------------------------
+# query_batch reads the (n, τ) rank table ONCE per batch — per-query cost
+# drops as B grows (the table-bandwidth amortization; see
+# benchmarks/perf_engine.py --batched for the full curve).
 qidx = jax.random.randint(jax.random.PRNGKey(2), (16,), 0, N_ITEMS)
 qs = items[qidx]
-t0 = time.time()
-res = eng.query_batch(qs, k=K, c=C)
-jax.block_until_ready(res.indices)
-print(f"batched queries: {(time.time()-t0)/16*1e3:.2f} ms/query "
-      f"(batch of 16)")
+for B in (1, 16):
+    res = eng.query_batch(qs[:B], k=K, c=C)           # warm-up/compile
+    jax.block_until_ready(res.indices)
+    t0 = time.time()
+    res = eng.query_batch(qs[:B], k=K, c=C)
+    jax.block_until_ready(res.indices)
+    print(f"batched queries: {(time.time()-t0)/B*1e3:.2f} ms/query "
+          f"(batch of {B}, {eng.backend_name} backend)")
+
+res = eng.query_batch(qs[:8], k=K, c=C)          # metrics on 8 queries
 
 accs, ratios = [], []
 for b in range(8):

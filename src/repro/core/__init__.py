@@ -4,12 +4,15 @@ Modules:
   types       — RankTableConfig / RankTable / QueryResult pytrees
   exact       — O(nmd) oracle (Definitions 1-2)
   rank_table  — Algorithm 1 pre-processing (vectorized, O((n+m)d + m log m))
-  query       — §4.3 O(nd) query processing
+  query       — §4.3 O(nd) query processing (batched-first)
   qsrp        — QSRP baseline (ICDE'24), extended to c-approximation
   metrics     — §5 accuracy / overall-ratio criteria
+  backends    — pluggable query-execution backends (dense/fused/sharded)
   engine      — public ReverseKRanksEngine API
   distributed — multi-pod sharded build + query (shard_map)
 """
+from repro.core.backends import (QueryBackend, available_backends,
+                                 get_backend, register_backend)
 from repro.core.engine import ReverseKRanksEngine
 from repro.core.exact import exact_ranks, reverse_k_ranks
 from repro.core.query import query, query_batch
@@ -19,5 +22,6 @@ from repro.core.types import QueryResult, RankTable, RankTableConfig
 __all__ = [
     "ReverseKRanksEngine", "exact_ranks", "reverse_k_ranks", "query",
     "query_batch", "build_rank_table", "QueryResult", "RankTable",
-    "RankTableConfig",
+    "RankTableConfig", "QueryBackend", "available_backends", "get_backend",
+    "register_backend",
 ]

@@ -1,0 +1,178 @@
+"""Pluggable query-execution backends for the reverse k-ranks engine.
+
+One `QueryBackend` protocol, three registered implementations:
+
+  "dense"   — pure-jnp XLA path (`core.query`): one (n,d)×(d,B) matmul +
+              one streamed table pass per batch. The default; runs
+              anywhere.
+  "fused"   — Pallas path (`kernels.ops.bound_ranks_batched`): the same
+              math with step 1 fused into a single HBM pass per user tile
+              (interpret=True on CPU, compiled on TPU).
+  "sharded" — mesh path (`core.distributed`): row-sharded users/table,
+              local batched step 1, tree-merge top-k gathering (B, k·P)
+              candidates in one collective.
+
+The protocol is batched-first: `bound_ranks` takes a (B, d) query block
+and returns (B, n) bound arrays; `select` realizes §4.3 steps 2-3 with a
+leading batch axis; `query_batch` composes the two (backends may override
+it with a fully fused pipeline, as "sharded" does). Single-query
+execution everywhere is the B = 1 case of the batched path — there is no
+separate per-query code to drift out of sync.
+
+Registering a new backend::
+
+    from repro.core.backends import QueryBackend, register_backend
+
+    @register_backend("mine")
+    class MyBackend(QueryBackend):
+        def bound_ranks(self, rt, users, qs): ...
+
+    eng = ReverseKRanksEngine.build(..., backend="mine")
+"""
+from __future__ import annotations
+
+from typing import Dict, Type
+
+import jax
+
+from repro.core import query as query_mod
+from repro.core.types import QueryResult, RankTable
+
+
+class QueryBackend:
+    """Base class / protocol for batched query execution.
+
+    Subclasses implement `bound_ranks` (step 1, returning (B, n) arrays)
+    and optionally override `select` / `query_batch`. `mesh` is accepted
+    by every backend for a uniform constructor; only "sharded" uses it.
+    """
+
+    name: str = "abstract"
+
+    def __init__(self, mesh=None):
+        self.mesh = mesh
+
+    def bound_ranks(self, rt: RankTable, users: jax.Array, qs: jax.Array
+                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """§4.3 step 1 for a (B, d) query block → (r↓, r↑, est), each (B, n)."""
+        raise NotImplementedError
+
+    def select(self, rt: RankTable, r_lo: jax.Array, r_up: jax.Array,
+               est: jax.Array, *, k: int, c: float) -> QueryResult:
+        """§4.3 steps 2-3 on (B, n) bounds → QueryResult with leading B axis."""
+        return query_mod.select_topk(r_lo, r_up, est, k=k, c=c, m_items=rt.m)
+
+    def query_batch(self, rt: RankTable, users: jax.Array, qs: jax.Array,
+                    *, k: int, c: float) -> QueryResult:
+        r_lo, r_up, est = self.bound_ranks(rt, users, qs)
+        return self.select(rt, r_lo, r_up, est, k=k, c=c)
+
+
+_REGISTRY: Dict[str, Type[QueryBackend]] = {}
+
+
+def register_backend(name: str):
+    """Class decorator: register a QueryBackend under `name`."""
+    def deco(cls: Type[QueryBackend]) -> Type[QueryBackend]:
+        # Only stamp a name the class doesn't already own directly, so
+        # registering an existing class under an alias doesn't rename
+        # every live instance of its first registration.
+        if "name" not in cls.__dict__:
+            cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def get_backend(spec, *, mesh=None) -> QueryBackend:
+    """Resolve `spec` (a registered name or an already-built instance)."""
+    if isinstance(spec, QueryBackend):
+        if mesh is not None:
+            raise ValueError(
+                "mesh= only applies when the backend is given by NAME; "
+                "construct the instance with its mesh instead")
+        return spec
+    try:
+        cls = _REGISTRY[spec]
+    except (KeyError, TypeError):
+        raise ValueError(
+            f"unknown query backend {spec!r}; available: "
+            f"{available_backends()}") from None
+    obj = cls(mesh=mesh)
+    obj.name = spec                 # requested (possibly aliased) name
+    return obj
+
+
+def _stock_pipeline(backend: QueryBackend, cls: Type["QueryBackend"]) -> bool:
+    """True when the instance uses `cls`'s own bound_ranks and the base
+    `select` — the end-to-end fast paths are only equivalent to
+    bound_ranks+select in that case; a subclass overriding either hook
+    must get the composed path so its logic actually runs."""
+    t = type(backend)
+    return (t.select is QueryBackend.select
+            and t.bound_ranks is cls.bound_ranks)
+
+
+@register_backend("dense")
+class DenseBackend(QueryBackend):
+    """Pure-jnp batched execution (the portable default)."""
+
+    def bound_ranks(self, rt, users, qs):
+        return query_mod.bound_ranks_batch(rt, users, qs)
+
+    def query_batch(self, rt, users, qs, *, k, c):
+        if not _stock_pipeline(self, DenseBackend):
+            return super().query_batch(rt, users, qs, k=k, c=c)
+        # one jit region end-to-end (matmul + lookup + select fuse)
+        return query_mod.query_batch(rt, users, qs, k, c)
+
+
+@register_backend("fused")
+class FusedBackend(QueryBackend):
+    """Pallas fused step 1 (interpret=True on CPU; compiled on TPU)."""
+
+    def bound_ranks(self, rt, users, qs):
+        from repro.kernels import ops as kops
+        return kops.bound_ranks_batched(users, qs, rt.thresholds, rt.table,
+                                        m=int(rt.m))
+
+    def query_batch(self, rt, users, qs, *, k, c):
+        if not _stock_pipeline(self, FusedBackend):
+            return super().query_batch(rt, users, qs, k=k, c=c)
+        from repro.kernels import ops as kops
+        return kops.query_fused_batch(rt, users, qs, k, c)
+
+
+@register_backend("sharded")
+class ShardedBackend(QueryBackend):
+    """Row-sharded mesh execution with the tree-merge top-k.
+
+    `query_batch` gathers only (B, k·P) candidates in ONE collective (its
+    QueryResult carries candidate-set bounds of shape (B, k·P), not
+    (B, n) — see `core.distributed`). `bound_ranks` falls back to the
+    dense path: materializing full (B, n) bounds defeats the O(k·P) wire
+    budget and exists for debugging/parity checks only.
+    """
+
+    def __init__(self, mesh=None):
+        from repro.core import distributed as D
+        super().__init__(mesh=D.flat_mesh(
+            mesh if mesh is not None else jax.devices()))
+        self._fns: dict = {}
+
+    def bound_ranks(self, rt, users, qs):
+        return query_mod.bound_ranks_batch(rt, users, qs)
+
+    def query_batch(self, rt, users, qs, *, k, c):
+        from repro.core import distributed as D
+        n = users.shape[0]
+        key = (k, float(c), n)
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = D.make_batch_query_fn(self.mesh, k=k, n=n, c=float(c))
+            self._fns[key] = fn
+        return fn(rt, users, qs)

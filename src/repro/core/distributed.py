@@ -9,10 +9,12 @@ Layout (see DESIGN.md §3):
     local; the global top-k runs as a TREE MERGE: per-shard top-k
     (k values) → gather of k·P candidates (not n) → re-top-k.
 
-Collective budget per query: one gather of O(k·P) floats plus the final
-selection — O(k·P) bytes on the wire instead of O(n); per-chip compute is
-O(nd/P + kP). The build's only collective is the O(m)-scalar norm gather
-for the global sort (item vectors never gather).
+Collective budget per BATCH of B queries: one gather of O(B·k·P) floats
+plus the final selection — O(B·k·P) bytes on the wire instead of O(B·n),
+and the collective count is independent of B (single-query execution is
+just B = 1). Per-chip compute is O(B·nd/P + BkP). The build's only
+collective is the O(m)-scalar norm gather for the global sort (item
+vectors never gather).
 
 Functions take the production mesh; internally the engine re-views its
 devices as a 1-D "shard" mesh, which is the natural layout for an index
@@ -27,10 +29,17 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import rank_table as rt_mod
-from repro.core.query import lookup_bounds
-from repro.core.types import QueryResult, RankTable, RankTableConfig
+from repro.core.query import lemma1_select, lookup_bounds_batch
+from repro.core.types import QueryResult, RankTable, RankTableConfig, \
+    kth_smallest
 
 AXIS = "shard"
+
+# jax.shard_map graduated from jax.experimental after 0.4.x; support both.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:                                        # pragma: no cover - version dep
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 
 def flat_mesh(mesh_or_devices) -> Mesh:
@@ -62,7 +71,7 @@ def build_sharded(users: jax.Array, items: jax.Array, cfg: RankTableConfig,
     """
     m = items.shape[0]
 
-    norms_local = jax.shard_map(
+    norms_local = _shard_map(
         lambda it: jnp.linalg.norm(it.astype(jnp.float32), axis=1),
         mesh=mesh, in_specs=P(AXIS, None), out_specs=P(AXIS))
     norms = norms_local(items)
@@ -88,7 +97,7 @@ def build_sharded(users: jax.Array, items: jax.Array, cfg: RankTableConfig,
         st = jnp.dtype(cfg.storage_dtype)
         return thr.astype(st), table.astype(st)
 
-    thr, table = jax.shard_map(
+    thr, table = _shard_map(
         local_build, mesh=mesh,
         in_specs=(P(AXIS, None), P(None, None), P(None), P()),
         out_specs=(P(AXIS, None), P(AXIS, None)))(
@@ -98,97 +107,40 @@ def build_sharded(users: jax.Array, items: jax.Array, cfg: RankTableConfig,
 
 
 # ------------------------------------------------------------------- query
-def make_query_fn(mesh: Mesh, k: int, n: int, c: float):
-    """Builds the jit'd sharded query: (rank_table, users, q) → QueryResult.
+def make_batch_query_fn(mesh: Mesh, k: int, n: int, c: float):
+    """Builds the jit'd batched sharded query:
+    (rank_table, users, Q (B, d)) → QueryResult with leading batch axis.
 
-    Stage 1 (shard_map): local u·q + table lookup + per-shard top-k; the
-    out_specs stack each shard's k candidates into a global (k·P) set —
-    the tree-merge gather.
-    Stage 2 (plain jit): O(k·P) global selection with the §4.3 Lemma-1
-    masks; GSPMD replicates it after an all-gather of k·P floats.
-    """
-    nshards = mesh.devices.size
-    shard_n = n // nshards
-
-    def local_part(thr, tab, m_items, u_shard, q):
-        uq = (u_shard @ q).astype(jnp.float32)
-        r_lo, r_up, est = lookup_bounds(RankTable(thr, tab, m_items), uq)
-        neg_lo, _ = jax.lax.top_k(-r_lo, k)        # k smallest lower bounds
-        neg_up, _ = jax.lax.top_k(-r_up, k)
-        neg_est, cand = jax.lax.top_k(-est, k)     # k best candidates
-        shard_id = jax.lax.axis_index(AXIS)
-        gidx = cand.astype(jnp.int32) + shard_id * shard_n
-        payload = jnp.stack(
-            [-neg_est, r_lo[cand], r_up[cand]], axis=1)        # (k, 3)
-        return -neg_lo, -neg_up, payload, gidx
-
-    sharded = jax.shard_map(
-        local_part, mesh=mesh,
-        in_specs=(P(AXIS, None), P(AXIS, None), P(), P(AXIS, None), P()),
-        out_specs=(P(AXIS), P(AXIS), P(AXIS, None), P(AXIS)))
-
-    @jax.jit
-    def query_fn(rt: RankTable, users: jax.Array, q: jax.Array
-                 ) -> QueryResult:
-        all_lo, all_up, payload, gidx = sharded(
-            rt.thresholds, rt.table, rt.m, users, q)           # (k·P, …)
-        est, r_lo, r_up = payload[:, 0], payload[:, 1], payload[:, 2]
-        neg, _ = jax.lax.top_k(-all_lo, k)
-        R_lo_k = -neg[k - 1]
-        neg, _ = jax.lax.top_k(-all_up, k)
-        R_up_k = -neg[k - 1]
-        guaranteed = c * R_lo_k >= R_up_k
-        accepted = r_up <= c * R_lo_k
-        pruned = r_lo > R_up_k
-        prio = jnp.where(accepted, 0.0, jnp.where(pruned, 2.0, 1.0))
-        big = (rt.m + 2).astype(jnp.float32)
-        key_val = jnp.where(guaranteed, est, prio * big + est)
-        _, sel = jax.lax.top_k(-key_val, k)
-        return QueryResult(
-            indices=gidx[sel].astype(jnp.int32),
-            est_rank=est[sel],
-            r_lo=r_lo, r_up=r_up,              # candidate-set bounds (k·P)
-            R_lo_k=R_lo_k, R_up_k=R_up_k,
-            guaranteed=guaranteed,
-            n_accepted=jnp.sum(accepted).astype(jnp.int32),
-            n_pruned=jnp.sum(pruned).astype(jnp.int32),
-        )
-
-    return query_fn
-
-
-def make_batch_query_fn(mesh: Mesh, k: int, n: int, c: float, q_batch: int):
-    """§Perf H6 — batched sharded queries: (rank_table, users, Q (b, d)) →
-    QueryResult with leading batch axis.
-
-    The paper (and `make_query_fn`) process queries one at a time: every
-    query re-streams the user matrix and table rows (memory-bound matvec).
-    Batching b queries turns step 1 into one U_shard @ Qᵀ MATMUL — the
-    n·(d+2τ) byte stream is read ONCE for all b queries, so the per-query
-    memory term drops ~b× while compute (still tiny) grows b×. This is the
-    arithmetic-intensity lever the roofline demands for the engine.
+    Stage 1 (shard_map): step 1 is ONE local U_shard @ Qᵀ MXU matmul plus
+    a single streamed pass over the local threshold/table rows serving all
+    B queries (`lookup_bounds_batch`) — the n·(d+2τ)/P byte stream per
+    chip is read once per BATCH, not once per query. Per-shard top-k then
+    reduces each query to k candidates.
+    Stage 2: the out_specs stack every shard's candidates into a global
+    (B, k·P) set in ONE gather (the tree merge) — not B per-query gathers;
+    O(B·k·P) bytes on the wire instead of O(B·n). Global selection reuses
+    the shared `lemma1_select` composite key, batched over B.
     """
     nshards = mesh.devices.size
     shard_n = n // nshards
 
     def local_part(thr, tab, m_items, u_shard, qs):
-        scores = (u_shard @ qs.T).astype(jnp.float32)       # (n_loc, b) MXU
-        rt_local = RankTable(thr, tab, m_items)
-
-        def per_query(uq):
-            r_lo, r_up, est = lookup_bounds(rt_local, uq)
-            neg_lo, _ = jax.lax.top_k(-r_lo, k)
-            neg_up, _ = jax.lax.top_k(-r_up, k)
-            neg_est, cand = jax.lax.top_k(-est, k)
-            payload = jnp.stack([-neg_est, r_lo[cand], r_up[cand]], axis=1)
-            return -neg_lo, -neg_up, payload, cand.astype(jnp.int32)
-
-        lo, up, payload, cand = jax.vmap(per_query)(scores.T)   # (b, k, …)
+        scores = (u_shard @ qs.T).astype(jnp.float32)       # (n_loc, B) MXU
+        r_lo, r_up, est = lookup_bounds_batch(
+            RankTable(thr, tab, m_items), scores)           # (n_loc, B)
+        r_lo, r_up, est = r_lo.T, r_up.T, est.T             # (B, n_loc)
+        neg_lo, _ = jax.lax.top_k(-r_lo, k)    # k smallest lower bounds / q
+        neg_up, _ = jax.lax.top_k(-r_up, k)
+        neg_est, cand = jax.lax.top_k(-est, k)              # k best / query
         shard_id = jax.lax.axis_index(AXIS)
-        gidx = cand + shard_id * shard_n
-        return lo, up, payload, gidx
+        gidx = cand.astype(jnp.int32) + shard_id * shard_n
+        payload = jnp.stack(
+            [-neg_est,
+             jnp.take_along_axis(r_lo, cand, axis=-1),
+             jnp.take_along_axis(r_up, cand, axis=-1)], axis=-1)  # (B, k, 3)
+        return -neg_lo, -neg_up, payload, gidx
 
-    sharded = jax.shard_map(
+    sharded = _shard_map(
         local_part, mesh=mesh,
         in_specs=(P(AXIS, None), P(AXIS, None), P(), P(AXIS, None),
                   P(None, None)),
@@ -199,32 +151,42 @@ def make_batch_query_fn(mesh: Mesh, k: int, n: int, c: float, q_batch: int):
     def batch_query_fn(rt: RankTable, users: jax.Array, qs: jax.Array
                        ) -> QueryResult:
         all_lo, all_up, payload, gidx = sharded(
-            rt.thresholds, rt.table, rt.m, users, qs)       # (b, k·P, …)
-
-        def select(lo_b, up_b, payload_b, gidx_b):
-            est, r_lo, r_up = (payload_b[:, 0], payload_b[:, 1],
-                               payload_b[:, 2])
-            neg, _ = jax.lax.top_k(-lo_b, k)
-            R_lo_k = -neg[k - 1]
-            neg, _ = jax.lax.top_k(-up_b, k)
-            R_up_k = -neg[k - 1]
-            guaranteed = c * R_lo_k >= R_up_k
-            accepted = r_up <= c * R_lo_k
-            pruned = r_lo > R_up_k
-            prio = jnp.where(accepted, 0.0, jnp.where(pruned, 2.0, 1.0))
-            big = (rt.m + 2).astype(jnp.float32)
-            key_val = jnp.where(guaranteed, est, prio * big + est)
-            _, sel = jax.lax.top_k(-key_val, k)
-            return QueryResult(
-                indices=gidx_b[sel], est_rank=est[sel],
-                r_lo=r_lo, r_up=r_up, R_lo_k=R_lo_k, R_up_k=R_up_k,
-                guaranteed=guaranteed,
-                n_accepted=jnp.sum(accepted).astype(jnp.int32),
-                n_pruned=jnp.sum(pruned).astype(jnp.int32))
-
-        return jax.vmap(select)(all_lo, all_up, payload, gidx)
+            rt.thresholds, rt.table, rt.m, users, qs)       # (B, k·P, …)
+        est = payload[..., 0]
+        r_lo = payload[..., 1]
+        r_up = payload[..., 2]
+        R_lo_k = kth_smallest(all_lo, k)                    # (B,)
+        R_up_k = kth_smallest(all_up, k)
+        sel, guaranteed, accepted, pruned = lemma1_select(
+            r_lo, r_up, est, R_lo_k=R_lo_k, R_up_k=R_up_k, k=k, c=c,
+            m_items=rt.m)
+        return QueryResult(
+            indices=jnp.take_along_axis(gidx, sel, axis=-1).astype(
+                jnp.int32),
+            est_rank=jnp.take_along_axis(est, sel, axis=-1),
+            r_lo=r_lo, r_up=r_up,          # candidate-set bounds (B, k·P)
+            R_lo_k=R_lo_k, R_up_k=R_up_k,
+            guaranteed=guaranteed,
+            n_accepted=jnp.sum(accepted, axis=-1).astype(jnp.int32),
+            n_pruned=jnp.sum(pruned, axis=-1).astype(jnp.int32),
+        )
 
     return batch_query_fn
+
+
+def make_query_fn(mesh: Mesh, k: int, n: int, c: float):
+    """Single-query sharded execution: the B = 1 case of
+    `make_batch_query_fn` (same shard_map, same merge; leading axis
+    squeezed). Kept as the dry-run/roofline entry point."""
+    batched = make_batch_query_fn(mesh, k=k, n=n, c=c)
+
+    @jax.jit
+    def query_fn(rt: RankTable, users: jax.Array, q: jax.Array
+                 ) -> QueryResult:
+        res = batched(rt, users, q[None, :])
+        return jax.tree_util.tree_map(lambda x: x[0], res)
+
+    return query_fn
 
 
 # -------------------------------------------------------------- refinement
@@ -252,7 +214,7 @@ def ring_exact_ranks(users: jax.Array, items: jax.Array, q: jax.Array,
             0, nshards, body, (jnp.zeros_like(uq), it_shard))
         return 1.0 + counts
 
-    return jax.shard_map(
+    return _shard_map(
         local, mesh=mesh,
         in_specs=(P(AXIS, None), P(AXIS, None), P()),
         out_specs=P(AXIS))(users, items, q)

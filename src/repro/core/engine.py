@@ -1,25 +1,44 @@
 """ReverseKRanksEngine — the public, composable API for the paper's system.
 
 Wraps Algorithm 1 (build) + the §4.3 query into one object that owns the
-user matrix and rank table, with single-device and mesh-sharded execution
-(see `repro.core.distributed` for the multi-pod path and
-`repro.kernels` for the fused TPU hot loops).
+user matrix and rank table, executing on a PLUGGABLE BACKEND selected by
+name from the registry in `repro.core.backends`:
+
+    backend="dense"    pure-jnp XLA (default; runs anywhere)
+    backend="fused"    Pallas fused step-1 kernels (`repro.kernels`)
+    backend="sharded"  mesh-sharded tree-merge (`repro.core.distributed`;
+                       pass `mesh=` or it flattens all visible devices)
+
+The API is BATCHED-FIRST: `query_batch` takes a (B, d) block of queries
+and executes step 1 as one (n, d) × (d, B) MXU matmul plus a single
+streamed pass over the (n, τ) rank table serving all B queries — the
+dominant HBM stream is read once per batch, a ~B× bandwidth reduction
+over per-query execution (see `benchmarks/perf_engine.py --batched`).
+`query` is exactly the B = 1 case of `query_batch` (same code path,
+leading axis squeezed), so single- and batched-query results cannot
+drift apart.
 
 Typical use::
 
     eng = ReverseKRanksEngine.build(users, items, RankTableConfig(), key)
     res = eng.query(q, k=10, c=2.0)            # QueryResult
-    res = eng.query_batch(qs, k=10, c=2.0)     # vmapped over queries
+    res = eng.query_batch(qs, k=10, c=2.0)     # leading B axis on fields
+
+    eng = ReverseKRanksEngine.build(..., backend="fused")     # Pallas
+    eng = ReverseKRanksEngine.build(..., backend="sharded", mesh=mesh)
+
+Custom backends register with `repro.core.backends.register_backend` and
+become available here by name.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Any, Union
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import query as query_mod
 from repro.core import rank_table as rt_mod
+from repro.core.backends import QueryBackend, available_backends, get_backend
 from repro.core.types import QueryResult, RankTable, RankTableConfig
 
 
@@ -28,30 +47,46 @@ class ReverseKRanksEngine:
     users: jax.Array          # (n, d)
     rank_table: RankTable     # thresholds/table: (n, tau)
     config: RankTableConfig
-    use_kernels: bool = False  # route step 1 through the Pallas fused kernel
+    backend: Union[str, QueryBackend] = "dense"
+    mesh: Any = None          # only consumed by the "sharded" backend
+
+    def __post_init__(self):
+        self._backend = get_backend(self.backend, mesh=self.mesh)
 
     @classmethod
     def build(cls, users: jax.Array, items: jax.Array, cfg: RankTableConfig,
-              key: jax.Array, use_kernels: bool = False
-              ) -> "ReverseKRanksEngine":
+              key: jax.Array, backend: Union[str, QueryBackend] = "dense",
+              mesh: Any = None) -> "ReverseKRanksEngine":
         """Run Algorithm 1 and return a query-ready engine."""
         rt = rt_mod.build_rank_table(users, items, cfg, key)
-        return cls(users=users, rank_table=rt, config=cfg,
-                   use_kernels=use_kernels)
+        return cls(users=users, rank_table=rt, config=cfg, backend=backend,
+                   mesh=mesh)
+
+    @property
+    def backend_name(self) -> str:
+        return self._backend.name
+
+    @staticmethod
+    def backends() -> list[str]:
+        """Names accepted by the `backend=` argument."""
+        return available_backends()
 
     def query(self, q: jax.Array, k: int, c: float) -> QueryResult:
-        if self.use_kernels:
-            from repro.kernels import ops as kops
-            return kops.query_fused(self.rank_table, self.users, q, k, c)
-        return query_mod.query(self.rank_table, self.users, q, k, c)
+        """One query — the B = 1 case of `query_batch`."""
+        if q.ndim != 1:
+            raise ValueError(f"query expects a (d,) vector; got {q.shape} "
+                             "(use query_batch for (B, d) blocks)")
+        res = self.query_batch(q[None, :], k, c)
+        return jax.tree_util.tree_map(lambda x: x[0], res)
 
     def query_batch(self, qs: jax.Array, k: int, c: float) -> QueryResult:
-        if self.use_kernels:
-            from repro.kernels import ops as kops
-            return jax.vmap(
-                lambda q: kops.query_fused(self.rank_table, self.users, q,
-                                           k, c))(qs)
-        return query_mod.query_batch(self.rank_table, self.users, qs, k, c)
+        """Batched queries: qs is (B, d); every field gains a leading B
+        axis. One table pass serves the whole batch (see module doc)."""
+        if qs.ndim != 2:
+            raise ValueError(
+                f"query_batch expects (B, d) queries; got {qs.shape}")
+        return self._backend.query_batch(self.rank_table, self.users, qs,
+                                         k=k, c=c)
 
     @property
     def n(self) -> int:

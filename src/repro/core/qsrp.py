@@ -144,14 +144,15 @@ def qsrp_query(idx: QSRPIndex, users: jax.Array, items: jax.Array,
     # Not enough guaranteed users: refine every undetermined candidate with
     # an exact O(md) scan — the O(nmd)-worst-case tail the paper criticizes.
     cand = np.where(~pruned)[0]
-    # Padding to power-of-two buckets bounds recompilation of the jitted scan.
-    bucket = 1 << max(int(np.ceil(np.log2(max(len(cand), 1)))), 5)
-    cand_pad = np.pad(cand, (0, bucket - len(cand)), constant_values=cand[0]
-                      if len(cand) else 0)
-    exact = np.asarray(_exact_ranks_for(users[cand_pad], items, q))
-    exact = exact[:len(cand)]
-
     keys = np.full(users.shape[0], np.inf, dtype=np.float64)
-    keys[cand] = exact
+    if len(cand):
+        # Padding to power-of-two buckets bounds recompilation of the
+        # jitted scan; an empty candidate set skips the launch entirely
+        # (everyone pruned ⇒ nothing to refine, no dummy 32-row bucket).
+        bucket = 1 << max(int(np.ceil(np.log2(len(cand)))), 5)
+        cand_pad = np.pad(cand, (0, bucket - len(cand)),
+                          constant_values=cand[0])
+        exact = np.asarray(_exact_ranks_for(users[cand_pad], items, q))
+        keys[cand] = exact[:len(cand)]
     order = np.lexsort((np.arange(len(keys)), keys))[:k]
     return order.astype(np.int32), keys[order], int(len(cand))

@@ -13,6 +13,16 @@ query jits into one XLA program and the Lemma-1 cases become masks):
      past every admissible key.
 
 Total O(nd) — matching the paper's complexity claim; steps 2-3 are O(n).
+
+BATCHED-FIRST (PR 1): the primitive unit of work is a (B, d) query block.
+Step 1 for a batch is one (n, d) × (d, B) MXU matmul plus a SINGLE pass
+over the (n, τ) thresholds/table serving all B queries — the n·(d + 2τ)
+byte stream is read once per batch instead of once per query, a ~B×
+reduction in HBM traffic for the memory-bound online phase. `query` is
+literally the B = 1 case of `query_batch`; `select_topk` and
+`lemma1_select` are shape-polymorphic over a leading batch axis so the
+dense, fused-Pallas, and sharded backends (see `repro.core.backends`)
+share one selection semantics.
 """
 from __future__ import annotations
 
@@ -34,15 +44,19 @@ LOOKUP = "searchsorted"
 
 
 def _bucketize(thresholds: jax.Array, uq: jax.Array) -> jax.Array:
-    """idx = #{j : t_j ≤ uq} per row, for ascending per-row thresholds."""
+    """idx = #{j : t_j ≤ uq} per (row, query), ascending per-row thresholds.
+
+    thresholds (n, τ); uq (n, B) — one score column per batched query.
+    Returns (n, B) int in [0, τ].
+    """
     n, tau = thresholds.shape
     if LOOKUP == "searchsorted":
         return jax.vmap(functools.partial(jnp.searchsorted, side="right"))(
             thresholds, uq.astype(thresholds.dtype))
-    rows = jnp.arange(n)
+    rows = jnp.arange(n)[:, None]
     uq_c = uq.astype(thresholds.dtype)
-    lo = jnp.zeros((n,), jnp.int32)
-    hi = jnp.full((n,), tau, jnp.int32)
+    lo = jnp.zeros(uq.shape, jnp.int32)
+    hi = jnp.full(uq.shape, tau, jnp.int32)
     for _ in range(int(math.ceil(math.log2(max(tau, 2)))) + 1):
         mid = (lo + hi) // 2
         v = thresholds[rows, jnp.clip(mid, 0, tau - 1)]
@@ -52,34 +66,40 @@ def _bucketize(thresholds: jax.Array, uq: jax.Array) -> jax.Array:
     return lo
 
 
-def lookup_bounds(rt: RankTable, uq: jax.Array
-                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Rank-table lookup (§4.3 step 1) for scores uq = u·q, all users.
+def lookup_bounds_batch(rt: RankTable, uq: jax.Array
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Rank-table lookup (§4.3 step 1) for a (n, B) score block.
+
+    uq[i, b] = u_i · q_b; each threshold/table ROW is streamed once and
+    bucketizes all B queries — the bandwidth amortization the batched
+    engine is built around.
 
     With ascending thresholds t_1..t_τ and non-increasing table T_1..T_τ:
       t_j ≤ u·q ≤ t_{j+1}  ⇒  T_{j+1} ≤ r(q,u,P) ≤ T_j.
     Out-of-range: u·q < t_1 ⇒ (r↓, r↑) = (T_1, m+1);
                   u·q ≥ t_τ ⇒ (r↓, r↑) = (1, T_τ).
 
-    Returns (r_lo, r_up, est) — bounds plus the §4.3-step-3 linear
-    interpolation of the rank at u·q's position between its two thresholds.
+    Returns (r_lo, r_up, est), each (n, B) — bounds plus the §4.3-step-3
+    linear interpolation of the rank at u·q's position between its two
+    thresholds.
     """
     n, tau = rt.thresholds.shape
     # _bucketize compares in the table's storage dtype: promotion to f32
     # would materialize a full-size HBM copy of a bf16 table, erasing the
     # §Perf-H4 bandwidth win (refuted-hypothesis lesson).
-    idx = _bucketize(rt.thresholds, uq)                     # (n,) in [0, τ]
-    rows = jnp.arange(n)
+    idx = _bucketize(rt.thresholds, uq)                     # (n, B) in [0, τ]
     m_plus_1 = (rt.m + 1).astype(jnp.float32)
-    t_up = rt.table[rows, jnp.clip(idx - 1, 0, tau - 1)].astype(jnp.float32)
-    t_lo = rt.table[rows, jnp.clip(idx, 0, tau - 1)].astype(jnp.float32)
+    up_col = jnp.clip(idx - 1, 0, tau - 1)
+    lo_col = jnp.clip(idx, 0, tau - 1)
+    t_up = jnp.take_along_axis(rt.table, up_col, axis=1).astype(jnp.float32)
+    t_lo = jnp.take_along_axis(rt.table, lo_col, axis=1).astype(jnp.float32)
     r_up = jnp.where(idx == 0, m_plus_1, t_up)               # T_j (j = idx)
     r_lo = jnp.where(idx == tau, 1.0, t_lo)                  # T_{j+1}
 
     # Linear interpolation between the bracketing thresholds (step 3).
-    lo_thr = rt.thresholds[rows, jnp.clip(idx - 1, 0, tau - 1)].astype(
+    lo_thr = jnp.take_along_axis(rt.thresholds, up_col, axis=1).astype(
         jnp.float32)
-    hi_thr = rt.thresholds[rows, jnp.clip(idx, 0, tau - 1)].astype(
+    hi_thr = jnp.take_along_axis(rt.thresholds, lo_col, axis=1).astype(
         jnp.float32)
     span = jnp.maximum(hi_thr - lo_thr, 1e-12)
     frac = jnp.clip((uq - lo_thr) / span, 0.0, 1.0)
@@ -91,8 +111,8 @@ def lookup_bounds(rt: RankTable, uq: jax.Array
     # many users exceed t_τ). Decay the estimate with the score's margin
     # beyond the range instead — monotone, consistent at the boundary
     # (margin 0 ⇒ the bound), and still within [r↓, r↑].
-    t_lo_edge = rt.thresholds[:, 0].astype(jnp.float32)
-    t_hi_edge = rt.thresholds[:, tau - 1].astype(jnp.float32)
+    t_lo_edge = rt.thresholds[:, :1].astype(jnp.float32)     # (n, 1)
+    t_hi_edge = rt.thresholds[:, tau - 1:tau].astype(jnp.float32)
     rng = jnp.maximum(t_hi_edge - t_lo_edge, 1e-12)
     m_above = jnp.maximum(uq - t_hi_edge, 0.0) / rng
     m_below = jnp.maximum(t_lo_edge - uq, 0.0) / rng
@@ -109,45 +129,98 @@ def lookup_bounds(rt: RankTable, uq: jax.Array
     return r_lo, r_up, est - 0.5 * m_above / (1.0 + m_above)
 
 
-def select_topk(r_lo: jax.Array, r_up: jax.Array, est: jax.Array, *, k: int,
-                c: float, m_items: jax.Array) -> QueryResult:
-    """Steps 2-3 of §4.3 given per-user bounds — shared by the pure-jnp
-    path (`query`) and the Pallas fused path (`kernels.ops.query_fused`)."""
-    R_lo_k = kth_smallest(r_lo, k)                          # step 2: O(n)
-    R_up_k = kth_smallest(r_up, k)
-    guaranteed = c * R_lo_k >= R_up_k
-    accepted = r_up <= c * R_lo_k                           # Lemma 1 (1)
-    pruned = r_lo > R_up_k                                  # Lemma 1 (2)
+def lookup_bounds(rt: RankTable, uq: jax.Array
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-query rank-table lookup: the B = 1 column of
+    `lookup_bounds_batch`. Returns (r_lo, r_up, est), each (n,)."""
+    r_lo, r_up, est = lookup_bounds_batch(rt, uq[:, None])
+    return r_lo[:, 0], r_up[:, 0], est[:, 0]
 
-    # step 3 as one top-k over a composite key. Priorities only apply in the
-    # non-guaranteed case; `m + 2` strictly dominates any est ∈ [1, m+1].
+
+@jax.jit
+def bound_ranks_batch(rt: RankTable, users: jax.Array, qs: jax.Array
+                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Dense-backend step 1 for a (B, d) query block.
+
+    One (n, d) × (d, B) MXU matmul + one streamed pass over the table.
+    Returns (r_lo, r_up, est), each (B, n) — the `QueryBackend.bound_ranks`
+    orientation (query-major, user axis last, ready for per-query top-k).
+    """
+    scores = (users @ qs.T).astype(jnp.float32)             # (n, B)
+    r_lo, r_up, est = lookup_bounds_batch(rt, scores)
+    return r_lo.T, r_up.T, est.T
+
+
+def lemma1_select(r_lo: jax.Array, r_up: jax.Array, est: jax.Array, *,
+                  R_lo_k: jax.Array, R_up_k: jax.Array, k: int, c: float,
+                  m_items: jax.Array
+                  ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """§4.3 step 3 as one composite-key top-k, given the step-2 statistics.
+
+    Shape-polymorphic over leading batch axes: the candidate axis is LAST
+    (r_lo/r_up/est are (..., n); R_lo_k/R_up_k are (...,)). Shared by the
+    in-memory backends (candidates = all n users) and the distributed
+    tree-merge (candidates = the gathered (B, k·P) per-shard winners).
+
+    Returns (selected indices into the candidate axis, guaranteed mask,
+    accepted mask, pruned mask).
+    """
+    guaranteed = c * R_lo_k >= R_up_k
+    accepted = r_up <= (c * R_lo_k)[..., None]              # Lemma 1 (1)
+    pruned = r_lo > R_up_k[..., None]                       # Lemma 1 (2)
+
+    # Priorities only apply in the non-guaranteed case; `m + 2` strictly
+    # dominates any est ∈ [1, m+1].
     prio = jnp.where(accepted, 0.0, jnp.where(pruned, 2.0, 1.0))
     big = (m_items + 2).astype(jnp.float32)
-    key_val = jnp.where(guaranteed, est, prio * big + est)
+    key_val = jnp.where(guaranteed[..., None], est, prio * big + est)
     _, indices = jax.lax.top_k(-key_val, k)
+    return indices.astype(jnp.int32), guaranteed, accepted, pruned
 
+
+def select_topk(r_lo: jax.Array, r_up: jax.Array, est: jax.Array, *, k: int,
+                c: float, m_items: jax.Array) -> QueryResult:
+    """Steps 2-3 of §4.3 given per-user bounds — shared by the dense path
+    (`query`/`query_batch`) and the Pallas fused path
+    (`kernels.ops.query_fused*`).
+
+    Shape-polymorphic: pass (n,) arrays for one query or (B, n) arrays for
+    a batch; every QueryResult field gains the same leading axes.
+    """
+    R_lo_k = kth_smallest(r_lo, k)                          # step 2: O(n)
+    R_up_k = kth_smallest(r_up, k)
+    indices, guaranteed, accepted, pruned = lemma1_select(
+        r_lo, r_up, est, R_lo_k=R_lo_k, R_up_k=R_up_k, k=k, c=c,
+        m_items=m_items)
     return QueryResult(
-        indices=indices.astype(jnp.int32),
-        est_rank=est[indices],
+        indices=indices,
+        est_rank=jnp.take_along_axis(est, indices, axis=-1),
         r_lo=r_lo, r_up=r_up,
         R_lo_k=R_lo_k, R_up_k=R_up_k,
         guaranteed=guaranteed,
-        n_accepted=jnp.sum(accepted).astype(jnp.int32),
-        n_pruned=jnp.sum(pruned).astype(jnp.int32),
+        n_accepted=jnp.sum(accepted, axis=-1).astype(jnp.int32),
+        n_pruned=jnp.sum(pruned, axis=-1).astype(jnp.int32),
     )
-
-
-@functools.partial(jax.jit, static_argnames=("k",))
-def query(rt: RankTable, users: jax.Array, q: jax.Array, k: int,
-          c: float) -> QueryResult:
-    """One c-approximate reverse k-ranks query (Definition 3, §4.3)."""
-    uq = (users @ q).astype(jnp.float32)                    # step 1: O(nd)
-    r_lo, r_up, est = lookup_bounds(rt, uq)
-    return select_topk(r_lo, r_up, est, k=k, c=c, m_items=rt.m)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
 def query_batch(rt: RankTable, users: jax.Array, qs: jax.Array, k: int,
                 c: float) -> QueryResult:
-    """Vectorized queries: qs is (b, d); every field gains a leading b axis."""
-    return jax.vmap(lambda q: query(rt, users, q, k, c))(qs)
+    """Batched c-approximate reverse k-ranks queries (Definition 3, §4.3).
+
+    qs is (B, d); every QueryResult field gains a leading B axis. Step 1
+    is ONE matmul + ONE pass over the rank table for the whole batch (not
+    B re-reads — see the module docstring).
+    """
+    scores = (users @ qs.T).astype(jnp.float32)             # step 1: O(nd·B)
+    r_lo, r_up, est = lookup_bounds_batch(rt, scores)
+    return select_topk(r_lo.T, r_up.T, est.T, k=k, c=c, m_items=rt.m)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def query(rt: RankTable, users: jax.Array, q: jax.Array, k: int,
+          c: float) -> QueryResult:
+    """One c-approximate reverse k-ranks query: the B = 1 case of
+    `query_batch` (same code path, leading axis squeezed)."""
+    res = query_batch(rt, users, q[None, :], k, c)
+    return jax.tree_util.tree_map(lambda x: x[0], res)

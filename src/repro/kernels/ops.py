@@ -57,6 +57,34 @@ def bound_ranks(users: jax.Array, q: jax.Array, thresholds: jax.Array,
     return r_lo[:n], r_up[:n], est[:n]
 
 
+@functools.partial(jax.jit, static_argnames=("m", "block_n"))
+def bound_ranks_batched(users: jax.Array, qs: jax.Array,
+                        thresholds: jax.Array, table: jax.Array, *, m: int,
+                        block_n: int = 256
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched fused step 1: one (block_n, d) × (d, B) MXU matmul per user
+    tile, all B queries bucketized against the same VMEM-resident
+    threshold/table tile — the (n, d+2τ) HBM stream is read ONCE for the
+    whole batch instead of once per query.
+
+    qs is (B, d); returns (r↓, r↑, est), each (B, n) float32 (query-major,
+    the `QueryBackend.bound_ranks` orientation).
+    """
+    n, tau = thresholds.shape[0], thresholds.shape[1]
+    B = qs.shape[0]
+    up = _pad_rows(users.astype(jnp.float32), block_n)
+    tp = _pad_cols_edge(_pad_rows(thresholds, block_n, value=0.0), _LANE)
+    bp = _pad_cols_edge(_pad_rows(table, block_n, value=1.0), _LANE)
+    # B pads to a sublane multiple with zero queries; their score columns
+    # are well-defined (score 0 against edge-padded thresholds) and are
+    # sliced off below.
+    qt = _pad_rows(qs.astype(jnp.float32), 8).T             # (d, Bp)
+    r_lo, r_up, est = _us.bound_ranks_batched_kernel_call(
+        up, qt, tp, bp, m=m, tau_valid=tau, block_n=block_n,
+        interpret=INTERPRET)
+    return r_lo[:n, :B].T, r_up[:n, :B].T, est[:n, :B].T
+
+
 @functools.partial(jax.jit, static_argnames=("block_n",))
 def build_table_rows(users: jax.Array, samples: jax.Array,
                      weights: jax.Array, thresholds: jax.Array, *,
@@ -104,4 +132,17 @@ def query_fused(rt: RankTable, users: jax.Array, q: jax.Array, k: int,
     from repro.core.query import select_topk
     m = int(rt.m)
     r_lo, r_up, est = bound_ranks(users, q, rt.thresholds, rt.table, m=m)
+    return select_topk(r_lo, r_up, est, k=k, c=c, m_items=rt.m)
+
+
+def query_fused_batch(rt: RankTable, users: jax.Array, qs: jax.Array,
+                      k: int, c: float) -> QueryResult:
+    """Batched §4.3 queries with step 1 on the batched Pallas kernel —
+    one table pass for the whole (B, d) query block; selection (steps 2-3)
+    via the shared shape-polymorphic `select_topk`. Every QueryResult
+    field gains a leading B axis."""
+    from repro.core.query import select_topk
+    m = int(rt.m)
+    r_lo, r_up, est = bound_ranks_batched(users, qs, rt.thresholds,
+                                          rt.table, m=m)
     return select_topk(r_lo, r_up, est, k=k, c=c, m_items=rt.m)

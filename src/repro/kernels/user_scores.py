@@ -1,4 +1,4 @@
-"""Fused bound-rank kernel — the query's O(nd) hot loop (§4.3 step 1).
+"""Fused bound-rank kernels — the query's O(nd) hot loop (§4.3 step 1).
 
 One pass over the user matrix produces (r↓, r↑, est) directly:
 
@@ -19,6 +19,16 @@ The bucketize is branch-free: idx = Σ_j I[t_j ≤ s AND j < τ_valid], which
 equals searchsorted(side='right') for ascending thresholds; padded τ
 columns are masked via the `tau_valid` scalar so ops.py can pad τ to a
 lane multiple without changing semantics.
+
+BATCHED VARIANT (`_bound_rank_batched_kernel`, PR 1): the same grid over
+user blocks, but the matvec becomes one (block_n, d) × (d, B) MXU matmul
+and every query column bucketizes against the SAME VMEM-resident
+threshold/table tile before the grid advances to the next user block. The
+dominant n·(d + 2τ) HBM stream is therefore read once per BATCH instead
+of once per query — the table-bandwidth amortization the batched engine
+API exists for. Extra cost is pure VPU work (B× compares on data already
+in VMEM), which is free under the memory-bound roofline until
+B·τ ≈ arithmetic-intensity headroom.
 """
 from __future__ import annotations
 
@@ -107,3 +117,92 @@ def bound_ranks_kernel_call(users: jax.Array, q: jax.Array,
         out_shape=out_shape,
         interpret=interpret,
     )(users, q, thresholds, table)
+
+
+def _bound_rank_batched_kernel(u_ref, qt_ref, thr_ref, tab_ref, rlo_ref,
+                               rup_ref, est_ref, *, m: int, tau_valid: int):
+    """Batched twin of `_bound_rank_kernel`: all B queries against one
+    VMEM-resident user/threshold/table tile (see module docstring)."""
+    u = u_ref[...].astype(jnp.float32)                    # (Bn, d)
+    qt = qt_ref[...].astype(jnp.float32)                  # (d, B)
+    thr = thr_ref[...]                                    # (Bn, τp)
+    tab = tab_ref[...]                                    # (Bn, τp)
+    taup = thr.shape[1]
+
+    score = jax.lax.dot_general(
+        u, qt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (Bn, B) one matmul
+
+    col = jax.lax.broadcasted_iota(jnp.int32, thr.shape, 1)
+    valid = col < tau_valid                               # (Bn, τp)
+    # Every query column bucketizes against the SAME resident tile; the
+    # (Bn, B, τp) compare is VPU work on data already in VMEM.
+    le = (thr[:, None, :] <= score[:, :, None]) & valid[:, None, :]
+    idx = jnp.sum(le.astype(jnp.int32), axis=2)           # (Bn, B) ∈ [0, τ]
+
+    up_col = jnp.clip(idx - 1, 0, taup - 1)
+    lo_col = jnp.clip(idx, 0, tau_valid - 1)
+    t_up = jnp.take_along_axis(tab, up_col, axis=1)       # (Bn, B)
+    t_lo = jnp.take_along_axis(tab, lo_col, axis=1)
+    r_up = jnp.where(idx == 0, float(m + 1), t_up)
+    r_lo = jnp.where(idx == tau_valid, 1.0, t_lo)
+
+    lo_thr = jnp.take_along_axis(thr, up_col, axis=1)
+    hi_thr = jnp.take_along_axis(thr, lo_col, axis=1)
+    span = jnp.maximum(hi_thr - lo_thr, 1e-12)
+    frac = jnp.clip((score - lo_thr) / span, 0.0, 1.0)
+    interior = (idx > 0) & (idx < tau_valid)
+    est_in = r_up + (r_lo - r_up) * frac
+    # margin-decayed out-of-range estimate (matches ref_bound_ranks)
+    t_lo_edge = thr[:, :1]                                # (Bn, 1)
+    t_hi_edge = jnp.take_along_axis(
+        thr, jnp.full((thr.shape[0], 1), tau_valid - 1, jnp.int32),
+        axis=1)
+    rng = jnp.maximum(t_hi_edge - t_lo_edge, 1e-12)
+    m_above = jnp.maximum(score - t_hi_edge, 0.0) / rng
+    m_below = jnp.maximum(t_lo_edge - score, 0.0) / rng
+    est_above = 1.0 + (r_up - 1.0) / (1.0 + tau_valid * m_above)
+    est_below = float(m + 1) - (float(m + 1) - r_lo) * jnp.exp(
+        -tau_valid * m_below)
+    est = jnp.where(interior, est_in,
+                    jnp.where(idx == tau_valid, est_above, est_below))
+
+    rlo_ref[...] = r_lo
+    rup_ref[...] = r_up
+    # sub-unit margin tie-break (matches ref_bound_ranks)
+    est_ref[...] = jnp.clip(est, r_lo, r_up) - 0.5 * m_above / (1.0 + m_above)
+
+
+def bound_ranks_batched_kernel_call(users: jax.Array, qt: jax.Array,
+                                    thresholds: jax.Array, table: jax.Array,
+                                    *, m: int, tau_valid: int,
+                                    block_n: int = 256,
+                                    interpret: bool = True
+                                    ) -> tuple[jax.Array, jax.Array,
+                                               jax.Array]:
+    """Raw batched pallas_call; inputs pre-padded (see ops.bound_ranks_batched).
+
+    users (n, d) [n % block_n == 0], qt (d, B) [B a sublane multiple],
+    thresholds/table (n, τp) f32. Returns three (n, B) float32 arrays.
+    """
+    n, d = users.shape
+    taup = thresholds.shape[1]
+    B = qt.shape[1]
+    nb = n // block_n
+    kern = functools.partial(_bound_rank_batched_kernel, m=m,
+                             tau_valid=tau_valid)
+    out_shape = [jax.ShapeDtypeStruct((n, B), jnp.float32)] * 3
+    out_spec = pl.BlockSpec((block_n, B), lambda i: (i, 0))
+    return pl.pallas_call(
+        kern,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),   # U tile
+            pl.BlockSpec((d, B), lambda i: (0, 0)),         # Qᵀ (replicated)
+            pl.BlockSpec((block_n, taup), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, taup), lambda i: (i, 0)),
+        ],
+        out_specs=[out_spec, out_spec, out_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(users, qt, thresholds, table)

@@ -2,7 +2,13 @@
 user/item embeddings and answer batched c-approximate reverse k-ranks
 queries, reporting the §5 quality metrics against the exact oracle.
 
-`python -m repro.launch.serve --n 20000 --m 8000 [--kernels] [--mf]`
+`python -m repro.launch.serve --n 20000 --m 8000 [--backend fused] [--mf]`
+
+Queries execute through the pluggable backend registry
+(`repro.core.backends`): --backend dense|fused|sharded. --batch B routes
+the timed loop through `query_batch`, which reads the rank table once per
+B-query block (the bandwidth amortization measured in
+benchmarks/perf_engine.py --batched).
 """
 from __future__ import annotations
 
@@ -44,8 +50,13 @@ def main():
     ap.add_argument("--omega", type=int, default=10)
     ap.add_argument("--s", type=int, default=64)
     ap.add_argument("--queries", type=int, default=50)
+    ap.add_argument("--backend", default="dense",
+                    choices=ReverseKRanksEngine.backends(),
+                    help="query-execution backend (see repro.core.backends)")
+    ap.add_argument("--batch", type=int, default=16,
+                    help="queries per query_batch call in the timed loop")
     ap.add_argument("--kernels", action="store_true",
-                    help="route step 1 through the Pallas fused kernel")
+                    help="deprecated alias for --backend fused")
     ap.add_argument("--mf", action="store_true",
                     help="produce embeddings with the JAX MF trainer")
     ap.add_argument("--mf-epochs", type=int, default=5)
@@ -56,11 +67,12 @@ def main():
 
     users, items = build_embeddings(args)
     cfg = RankTableConfig(tau=args.tau, omega=args.omega, s=args.s)
+    backend = "fused" if args.kernels else args.backend
 
     t0 = time.time()
     eng = ReverseKRanksEngine.build(users, items, cfg,
                                     jax.random.PRNGKey(1),
-                                    use_kernels=args.kernels)
+                                    backend=backend)
     jax.block_until_ready(eng.rank_table.table)
     print(f"build: {time.time()-t0:.2f}s  "
           f"index {eng.memory_bytes()/2**20:.1f} MiB "
@@ -70,16 +82,19 @@ def main():
     qidx = jax.random.randint(qkey, (args.queries,), 0, args.m)
     qs = items[qidx]
 
-    # warm-up + timed batch
-    res = eng.query(qs[0], k=args.k, c=args.c)
+    # warm-up + timed loop, query_batch over --batch-sized blocks
+    B = max(1, min(args.batch, args.queries))
+    nblocks = args.queries // B
+    res = eng.query_batch(qs[:B], k=args.k, c=args.c)
     jax.block_until_ready(res.indices)
     t0 = time.time()
-    for i in range(args.queries):
-        res = eng.query(qs[i], k=args.k, c=args.c)
+    for i in range(nblocks):
+        res = eng.query_batch(qs[i * B:(i + 1) * B], k=args.k, c=args.c)
     jax.block_until_ready(res.indices)
-    per_q = (time.time() - t0) / args.queries
+    per_q = (time.time() - t0) / (nblocks * B)
     print(f"query: {per_q*1e3:.2f} ms/query "
-          f"({'pallas' if args.kernels else 'jnp'} step-1)")
+          f"({eng.backend_name} backend, batch={B}, "
+          f"{nblocks * B} of {args.queries} queries timed)")
 
     if args.eval_exact:
         accs, ratios = [], []

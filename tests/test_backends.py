@@ -1,0 +1,179 @@
+"""Backend registry + batched-execution parity (the PR-1 tentpole).
+
+On every backend `query` IS the B = 1 case of `query_batch`, so
+batched-vs-per-query parity directly checks that the table-bandwidth-
+amortized path computes the same §4.3 selection as per-query execution.
+
+Comparison contract: indices and the table-DERIVED bounds (r↓/r↑ are
+gathered table entries, integer-valued in rank space) must match exactly;
+the interpolated estimate `est` is continuous in the score u·q, whose low
+bits legitimately differ between an (n,d)×(d,1) and an (n,d)×(d,B)
+matmul, so est compares at float accuracy.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backends as BK
+from repro.core.engine import ReverseKRanksEngine
+from repro.core.query import query as core_query
+from repro.core.rank_table import build_rank_table
+from repro.core.types import RankTableConfig
+from tests.conftest import make_problem
+
+ALL_BACKENDS = ("dense", "fused", "sharded")
+K = 7
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_problem(jax.random.PRNGKey(42), n=512, m=400, d=16)
+
+
+@pytest.fixture(scope="module")
+def regimes(problem):
+    """(rank_table, c) pairs pinning both Lemma-1 cases.
+
+    guaranteed:     exact-mode table (tight bounds) + generous c
+                    ⇒ c·R↓_k ≥ R↑_k, selection is pure-est ordering.
+    non_guaranteed: coarse sampled table + c = 1
+                    ⇒ accept/prune masks and the U_temp fill engage.
+    """
+    users, items = problem
+    exact_cfg = RankTableConfig(tau=128, omega=4, s=items.shape[0] // 4,
+                                threshold_mode="exact")
+    coarse_cfg = RankTableConfig(tau=16, omega=4, s=8)
+    return {
+        "guaranteed": (exact_cfg,
+                       build_rank_table(users, items, exact_cfg,
+                                        jax.random.PRNGKey(0)), 4.0),
+        "non_guaranteed": (coarse_cfg,
+                           build_rank_table(users, items, coarse_cfg,
+                                            jax.random.PRNGKey(1)), 1.0),
+    }
+
+
+def _engine(problem, regimes, regime, backend):
+    users, _ = problem
+    cfg, rt, c = regimes[regime]
+    return ReverseKRanksEngine(users=users, rank_table=rt, config=cfg,
+                               backend=backend), c
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+@pytest.mark.parametrize("B", [1, 3, 16])
+@pytest.mark.parametrize("regime", ["guaranteed", "non_guaranteed"])
+def test_query_batch_matches_per_query(problem, regimes, backend, B, regime):
+    users, items = problem
+    eng, c = _engine(problem, regimes, regime, backend)
+    # Slightly perturbed item queries: an exact item query scores exactly
+    # on the exact-mode table's threshold endpoints, where a 1-ulp matmul
+    # difference legitimately flips the bucketize by one cell. A 1e-4
+    # relative perturbation stays in-distribution (regimes unchanged) but
+    # moves every score ~1e3 ulps off the threshold grid, making the bound
+    # lookup exactly reproducible across batch shapes.
+    base = items[(1 + jnp.arange(B) * 17) % items.shape[0]]
+    qs = base * (1.0 + 1e-4 * jax.random.normal(
+        jax.random.PRNGKey(100 + B), base.shape, jnp.float32))
+    batched = eng.query_batch(qs, k=K, c=c)
+    assert batched.indices.shape == (B, K)
+    # the regime fixture really pins the Lemma-1 case (guaranteed is a
+    # per-query property: the tight-table/generous-c regime closes the
+    # search for every query; the coarse/c=1 regime leaves at least the
+    # anchor query open so the accept/prune/U_temp path is exercised)
+    if regime == "guaranteed":
+        assert bool(np.all(np.asarray(batched.guaranteed)))
+    else:
+        assert not bool(np.asarray(batched.guaranteed)[0])
+    for b in range(B):
+        single = eng.query(qs[b], k=K, c=c)
+        np.testing.assert_array_equal(np.asarray(batched.indices[b]),
+                                      np.asarray(single.indices))
+        np.testing.assert_array_equal(np.asarray(batched.r_lo[b]),
+                                      np.asarray(single.r_lo))
+        np.testing.assert_array_equal(np.asarray(batched.r_up[b]),
+                                      np.asarray(single.r_up))
+        assert float(batched.R_lo_k[b]) == float(single.R_lo_k)
+        assert float(batched.R_up_k[b]) == float(single.R_up_k)
+        np.testing.assert_allclose(np.asarray(batched.est_rank[b]),
+                                   np.asarray(single.est_rank), rtol=1e-5,
+                                   atol=1e-4)
+        assert int(batched.n_accepted[b]) == int(single.n_accepted)
+        assert int(batched.n_pruned[b]) == int(single.n_pruned)
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+@pytest.mark.parametrize("regime", ["guaranteed", "non_guaranteed"])
+def test_backends_agree_with_core(problem, regimes, backend, regime):
+    """Every backend's per-query result matches the core reference path."""
+    users, items = problem
+    eng, c = _engine(problem, regimes, regime, backend)
+    for qi in (3, 99):
+        q = items[qi]
+        got = eng.query(q, k=K, c=c)
+        want = core_query(eng.rank_table, users, q, K, c)
+        np.testing.assert_array_equal(np.asarray(got.indices),
+                                      np.asarray(want.indices))
+        np.testing.assert_allclose(np.asarray(got.est_rank),
+                                   np.asarray(want.est_rank), rtol=1e-5,
+                                   atol=1e-4)
+        assert float(got.R_lo_k) == float(want.R_lo_k)
+        assert float(got.R_up_k) == float(want.R_up_k)
+
+
+def test_registry_lists_and_errors():
+    names = BK.available_backends()
+    for name in ALL_BACKENDS:
+        assert name in names
+    with pytest.raises(ValueError, match="unknown query backend"):
+        BK.get_backend("no-such-backend")
+    assert ReverseKRanksEngine.backends() == names
+
+
+def test_registry_custom_backend(problem):
+    users, items = problem
+    cfg = RankTableConfig(tau=16, omega=4, s=8)
+    rt = build_rank_table(users, items, cfg, jax.random.PRNGKey(5))
+
+    @BK.register_backend("test-dense-alias")
+    class AliasBackend(BK.DenseBackend):
+        pass
+
+    try:
+        eng = ReverseKRanksEngine(users=users, rank_table=rt, config=cfg,
+                                  backend="test-dense-alias")
+        assert eng.backend_name == "test-dense-alias"
+        ref = ReverseKRanksEngine(users=users, rank_table=rt, config=cfg)
+        q = items[11]
+        np.testing.assert_array_equal(
+            np.asarray(eng.query(q, k=K, c=2.0).indices),
+            np.asarray(ref.query(q, k=K, c=2.0).indices))
+    finally:
+        BK._REGISTRY.pop("test-dense-alias", None)
+
+
+def test_backend_instance_passthrough(problem, regimes):
+    """An already-built backend object is accepted as `backend=`."""
+    users, items = problem
+    cfg, rt, c = regimes["non_guaranteed"]
+    eng = ReverseKRanksEngine(users=users, rank_table=rt, config=cfg,
+                              backend=BK.DenseBackend())
+    assert eng.backend_name == "dense"
+    res = eng.query_batch(items[:3], k=K, c=c)
+    assert res.indices.shape == (3, K)
+
+
+@pytest.mark.parametrize("backend", ["dense", "fused"])
+def test_bound_ranks_orientation(problem, regimes, backend):
+    """`QueryBackend.bound_ranks` returns (B, n) query-major arrays that
+    bracket each other."""
+    users, items = problem
+    cfg, rt, _ = regimes["non_guaranteed"]
+    bk = BK.get_backend(backend)
+    qs = items[:4]
+    r_lo, r_up, est = bk.bound_ranks(rt, users, qs)
+    n = users.shape[0]
+    assert r_lo.shape == r_up.shape == est.shape == (4, n)
+    assert bool(jnp.all(r_lo <= r_up + 1e-5))
+    assert bool(jnp.all(est <= r_up + 1e-5))

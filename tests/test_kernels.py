@@ -32,10 +32,16 @@ def test_bound_ranks_kernel_vs_ref(n, d, tau, dtype):
     q = items[1]
     got = ops.bound_ranks(users, q, rt.thresholds, rt.table, m=int(rt.m))
     want = ref.ref_bound_ranks(users, q, rt.thresholds, rt.table, int(rt.m))
-    for g, w, name in zip(got, want, ("r_lo", "r_up", "est")):
+    # r_lo/r_up gather table entries (exact given the same bucketize); est
+    # interpolates with frac = (score - t_j)/span, which divides a ~1-ulp
+    # matmul-schedule difference (kernel row blocks vs one ref matmul) by
+    # a span that shrinks as 1/τ — at τ=500 that amplifies to ~1e-4 in
+    # rank units, so est gets a wider f32 absolute band than the bounds.
+    for g, w, name, atol32 in zip(got, want, ("r_lo", "r_up", "est"),
+                                  (1e-4, 1e-4, 1e-3)):
         np.testing.assert_allclose(np.asarray(g), np.asarray(w),
                                    rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
-                                   atol=2.0 if dtype == jnp.bfloat16 else 1e-4,
+                                   atol=2.0 if dtype == jnp.bfloat16 else atol32,
                                    err_msg=name)
 
 
@@ -47,9 +53,12 @@ def test_bound_ranks_matches_core_lookup():
     uq = (users @ q).astype(jnp.float32)
     want = lookup_bounds(rt, uq)
     got = ops.bound_ranks(users, q, rt.thresholds, rt.table, m=int(rt.m))
-    for g, w in zip(got, want):
+    # est gets a wider absolute band than the bounds: the interpolation
+    # frac divides ~1-ulp score-schedule differences by the τ-fine span
+    # (see test_bound_ranks_kernel_vs_ref).
+    for g, w, atol in zip(got, want, (1e-4, 1e-4, 1e-3)):
         np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5,
-                                   atol=1e-4)
+                                   atol=atol)
 
 
 def test_query_fused_selection_matches_core():
@@ -149,27 +158,36 @@ def test_exact_rank_kernel_vs_core(small_problem):
 
 
 # ------------------------------------------------------------------ property
-from hypothesis import given, settings, strategies as st
+try:  # optional test extra — `pip install repro[test]` (see pyproject.toml)
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = None
 
+if given is not None:
+    @given(n=st.integers(16, 300), tau=st.integers(3, 140),
+           seed=st.integers(0, 1000))
+    @settings(max_examples=15, deadline=None)
+    def test_bound_ranks_property(n, tau, seed):
+        """Kernel == oracle for arbitrary ragged shapes (padding invariance).
 
-@given(n=st.integers(16, 300), tau=st.integers(3, 140),
-       seed=st.integers(0, 1000))
-@settings(max_examples=15, deadline=None)
-def test_bound_ranks_property(n, tau, seed):
-    """Kernel == oracle for arbitrary ragged shapes (padding invariance).
+        The kernel pads users/τ and computes u·q per 256-row block; a score
+        landing within 1 ulp of a threshold can bucketize ±1 vs the unpadded
+        oracle matvec, shifting that user's bound by one table cell. Allow a
+        vanishing fraction of such tie flips; everything else must be exact.
+        """
+        users, items = make_problem(jax.random.PRNGKey(seed), n, 64, 24)
+        rt = _table_for(users, items, tau, key=seed)
+        q = items[seed % 64]
+        got = ops.bound_ranks(users, q, rt.thresholds, rt.table, m=int(rt.m))
+        want = ref.ref_bound_ranks(users, q, rt.thresholds, rt.table,
+                                   int(rt.m))
+        for g, w in zip(got, want):
+            d = np.abs(np.asarray(g) - np.asarray(w))
+            exact = d <= 1e-4 + 1e-5 * np.abs(np.asarray(w))
+            assert exact.mean() >= 1.0 - 2.0 / n, \
+                f"{(~exact).sum()} mismatches of {n}"
 
-    The kernel pads users/τ and computes u·q per 256-row block; a score
-    landing within 1 ulp of a threshold can bucketize ±1 vs the unpadded
-    oracle matvec, shifting that user's bound by one table cell. Allow a
-    vanishing fraction of such tie flips; everything else must be exact.
-    """
-    users, items = make_problem(jax.random.PRNGKey(seed), n, 64, 24)
-    rt = _table_for(users, items, tau, key=seed)
-    q = items[seed % 64]
-    got = ops.bound_ranks(users, q, rt.thresholds, rt.table, m=int(rt.m))
-    want = ref.ref_bound_ranks(users, q, rt.thresholds, rt.table, int(rt.m))
-    for g, w in zip(got, want):
-        d = np.abs(np.asarray(g) - np.asarray(w))
-        exact = d <= 1e-4 + 1e-5 * np.abs(np.asarray(w))
-        assert exact.mean() >= 1.0 - 2.0 / n, \
-            f"{(~exact).sum()} mismatches of {n}"
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (optional test extra)")
+    def test_bound_ranks_property():
+        pass

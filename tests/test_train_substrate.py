@@ -5,7 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional test extra — `pip install repro[test]` (see pyproject.toml)
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = None
 
 from repro.configs import get_config, reduced
 from repro.data.mf import MFConfig, embeddings, train_mf
@@ -46,12 +50,19 @@ def test_global_norm():
     assert abs(float(global_norm(t)) - 5.0) < 1e-6
 
 
-@given(step=st.integers(0, 10_000))
-@settings(max_examples=30, deadline=None)
-def test_cosine_schedule_bounds(step):
-    v = float(cosine_schedule(jnp.asarray(step), warmup=100, total=10_000))
-    assert 0.0 <= v <= 1.0 + 1e-6
+if given is not None:
+    @given(step=st.integers(0, 10_000))
+    @settings(max_examples=30, deadline=None)
+    def test_cosine_schedule_bounds(step):
+        v = float(cosine_schedule(jnp.asarray(step), warmup=100,
+                                  total=10_000))
+        assert 0.0 <= v <= 1.0 + 1e-6
 
+
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (optional test extra)")
+    def test_cosine_schedule_bounds():
+        pass
 
 # ---------------------------------------------------------------- pipeline
 def test_pipeline_deterministic_and_step_dependent():
@@ -83,8 +94,11 @@ def test_pipeline_host_sharding_partitions_batch():
 def test_mf_learns_low_rank_structure():
     key = jax.random.PRNGKey(0)
     ii, jj, rr = synthetic_ratings(key, 300, 200, n_obs=40_000)
+    # Mean-loss SGD scales the per-example step by 1/batch, so lr must be
+    # O(batch / per-user coverage) for visible progress in 10 epochs at
+    # this scale; lr=10 reaches ~75% loss reduction.
     state, losses = train_mf(key, 300, 200, ii, jj, rr,
-                             MFConfig(d=16, epochs=10, batch=2048, lr=1.0))
+                             MFConfig(d=16, epochs=10, batch=2048, lr=10.0))
     assert losses[-1] < 0.6 * losses[0]
     assert all(a >= b - 1e-3 for a, b in zip(losses, losses[1:]))
     users, items = embeddings(state)
