@@ -16,6 +16,14 @@ batched path reads the (n, τ) rank table and (n, d) user matrix ONCE per
 batch, so ms/query must drop monotonically-ish with B (B=16 strictly
 below B=1). Run with:
     PYTHONPATH=src python -m benchmarks.perf_engine --batched
+
+Part D (CPU, real execution): the PR-2 serving benchmark — achieved
+throughput and p50/p99 latency of the async MicroBatcher vs OFFERED load
+(queries submitted one at a time on a paced clock), swept over several
+`max_wait_ms` settings. Low max_wait_ms bounds latency but dispatches
+emptier ticks; high max_wait_ms fills ticks (table-bandwidth
+amortization) at the cost of queueing latency. Run with:
+    PYTHONPATH=src python -m benchmarks.perf_engine --serve
 """
 from __future__ import annotations
 
@@ -148,11 +156,64 @@ def batched_mode():
               f"{'PASS' if ok else 'FAIL'}")
 
 
+def serve_mode():
+    """Throughput vs offered load through the async scheduler, at several
+    max_wait_ms settings (the latency/throughput knob)."""
+    import time
+
+    import jax
+    from benchmarks.common import timeit
+    from repro.core import ReverseKRanksEngine
+    from repro.core.types import RankTableConfig
+    from repro.data.pipeline import synthetic_embeddings
+    from repro.serve import MicroBatcher
+
+    users, items = synthetic_embeddings(jax.random.PRNGKey(0), 8_192,
+                                        2_048, 64)
+    cfg = RankTableConfig(tau=64, omega=8, s=32)
+    eng = ReverseKRanksEngine.build(users, items, cfg, jax.random.PRNGKey(1))
+    max_batch, n_queries = 16, 192
+    qs = items[:max_batch]
+
+    # calibrate offered load to this host: full-tick dispatch capacity
+    t_tick = timeit(lambda Q: eng.query_batch(Q, k=10, c=2.0).indices, qs,
+                    iters=3)
+    capacity = max_batch / t_tick
+    print(f"serve sweep: n={users.shape[0]:,} m={items.shape[0]:,} "
+          f"d={users.shape[1]} tau={cfg.tau}  max_batch={max_batch}  "
+          f"full-tick capacity ≈ {capacity:,.0f} q/s")
+    print(f"{'max_wait_ms':>11s} {'offered q/s':>11s} {'achieved q/s':>12s} "
+          f"{'fill':>5s} {'p50 ms':>8s} {'p99 ms':>8s}")
+
+    for max_wait_ms in (0.5, 2.0, 8.0):
+        for load_frac in (0.25, 1.0, 4.0):
+            rate = capacity * load_frac
+            with MicroBatcher(eng, max_batch=max_batch,
+                              max_wait_ms=max_wait_ms) as mb:
+                t0 = time.perf_counter()
+                futs = []
+                for i in range(n_queries):
+                    target = t0 + i / rate        # paced open-loop arrivals
+                    delay = target - time.perf_counter()
+                    if delay > 0:
+                        time.sleep(delay)
+                    futs.append(mb.submit(items[i % items.shape[0]],
+                                          10, 2.0))
+                for f in futs:
+                    f.result()
+                wall = time.perf_counter() - t0
+                st = mb.stats()
+            print(f"{max_wait_ms:11.1f} {rate:11,.0f} "
+                  f"{n_queries / wall:12,.0f} {st.mean_fill:5.2f} "
+                  f"{st.p50_ms:8.2f} {st.p99_ms:8.2f}")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--roofline", action="store_true")
     ap.add_argument("--quality", action="store_true")
     ap.add_argument("--batched", action="store_true")
+    ap.add_argument("--serve", action="store_true")
     args = ap.parse_args()
     if args.roofline:
         roofline_mode()
@@ -160,3 +221,5 @@ if __name__ == "__main__":
         quality_mode()
     if args.batched:
         batched_mode()
+    if args.serve:
+        serve_mode()

@@ -1,9 +1,20 @@
 """Item-centric retrieval serving (deliverable b): the full paper pipeline
-— ratings → JAX matrix factorization → rank-table index → batched
-c-approximate reverse k-ranks queries → §5 metrics, plus backbone-encoded
+— ratings → JAX matrix factorization → rank-table index → ONLINE
+c-approximate reverse k-ranks serving → §5 metrics, plus backbone-encoded
 embeddings to show the engine composes with the assigned architectures.
 
     PYTHONPATH=src python examples/serve_retrieval.py
+
+Serving model (repro.serve): queries arrive one at a time and are
+`submit()`-ed to a MicroBatcher, which coalesces them into max_batch-
+sized ticks dispatched through `engine.query_batch` — one rank-table
+pass per tick. `max_wait_ms` is the latency-vs-throughput knob: it caps
+how long a PARTIAL tick waits for more arrivals before dispatching
+(padded to the compiled batch shape). Small values bound tail latency at
+low offered load; larger values raise the fill ratio and the per-query
+bandwidth amortization — benchmarks/perf_engine.py --serve measures the
+whole curve. The "cached:<inner>" backend wrapper adds within-tick
+duplicate dedupe and a cross-tick per-query LRU for hot items.
 """
 import dataclasses
 import time
@@ -19,6 +30,7 @@ from repro.data.mf import MFConfig, embeddings, train_mf
 from repro.data.pipeline import synthetic_ratings
 from repro.models.model import Model
 from repro.models import transformer as T
+from repro.serve import MicroBatcher
 
 N_USERS, N_ITEMS, K, C = 6_000, 2_500, 10, 2.0
 
@@ -34,36 +46,43 @@ print(f"MF: rmse-ish loss {losses[0]:.4f} → {losses[-1]:.4f}, "
 
 # --- 2. offline index ------------------------------------------------------
 # backend= selects a query-execution backend from the registry
-# (repro.core.backends): "dense" (pure jnp), "fused" (Pallas), "sharded".
+# (repro.core.backends): "dense" (pure jnp), "fused" (Pallas), "sharded",
+# or a wrapped spec — "cached:dense" dedupes duplicate queries within a
+# tick and LRU-caches per-query results across ticks (hot promoted items
+# are answered without touching the rank table).
 eng = ReverseKRanksEngine.build(users, items,
                                 RankTableConfig(tau=500, omega=10, s=64),
-                                jax.random.PRNGKey(1), backend="dense")
+                                jax.random.PRNGKey(1), backend="cached:dense")
 
-# --- 3. batched online queries --------------------------------------------
-# query_batch reads the (n, τ) rank table ONCE per batch — per-query cost
-# drops as B grows (the table-bandwidth amortization; see
-# benchmarks/perf_engine.py --batched for the full curve).
+# --- 3. async online serving ----------------------------------------------
+# Single queries are submitted to the MicroBatcher as they "arrive"; ticks
+# of up to max_batch dispatch through query_batch, which reads the (n, τ)
+# rank table ONCE per tick (the bandwidth amortization of
+# benchmarks/perf_engine.py --batched, now reachable from a one-query-at-
+# a-time client). max_wait_ms caps how long a partial tick waits to fill.
 qidx = jax.random.randint(jax.random.PRNGKey(2), (16,), 0, N_ITEMS)
 qs = items[qidx]
-for B in (1, 16):
-    res = eng.query_batch(qs[:B], k=K, c=C)           # warm-up/compile
-    jax.block_until_ready(res.indices)
+# warm-up compiles the tick shape with PERTURBED queries (different cache
+# keys), so the timed burst below exercises the real micro-batched
+# dispatch path, not 16 LRU hits of the warm-up's results.
+warm = eng.query_batch(qs * (1.0 + 1e-6), k=K, c=C)
+jax.block_until_ready(warm.indices)
+with MicroBatcher(eng, max_batch=16, max_wait_ms=2.0) as mb:
     t0 = time.time()
-    res = eng.query_batch(qs[:B], k=K, c=C)
-    jax.block_until_ready(res.indices)
-    print(f"batched queries: {(time.time()-t0)/B*1e3:.2f} ms/query "
-          f"(batch of {B}, {eng.backend_name} backend)")
-
-res = eng.query_batch(qs[:8], k=K, c=C)          # metrics on 8 queries
+    futs = [mb.submit(q, K, C) for q in qs]          # duplicate-free burst
+    results = [f.result() for f in futs]
+    wall = time.time() - t0
+    print(f"served {len(futs)} queries in {wall*1e3:.1f} ms wall "
+          f"({eng.backend_name} backend): {mb.stats()}")
 
 accs, ratios = [], []
 for b in range(8):
     q = qs[b]
     truth = np.asarray(exact_ranks(users, items, q))
     ex_idx, _ = reverse_k_ranks(users, items, q, K)
-    accs.append(metrics.accuracy(np.asarray(res.indices[b]),
+    accs.append(metrics.accuracy(np.asarray(results[b].indices),
                                  np.asarray(ex_idx), truth, C))
-    ratios.append(metrics.overall_ratio(np.asarray(res.indices[b]),
+    ratios.append(metrics.overall_ratio(np.asarray(results[b].indices),
                                         np.asarray(ex_idx), truth))
 print(f"accuracy {np.mean(accs):.3f}  overall-ratio {np.mean(ratios):.3f}")
 

@@ -19,6 +19,13 @@ it with a fully fused pipeline, as "sharded" does). Single-query
 execution everywhere is the B = 1 case of the batched path — there is no
 separate per-query code to drift out of sync.
 
+Wrapper backends compose by NAME with a `<prefix>:<inner>` spec: the
+prefix selects a registered wrapper factory, which resolves the inner
+backend recursively. The serving cache (`repro.serve.cache`) registers
+`"cached"`, so `backend="cached:fused"` builds a `CachingBackend` around
+the Pallas path (within-tick dedupe + cross-tick per-query LRU) without
+the engine knowing anything about caching.
+
 Registering a new backend::
 
     from repro.core.backends import QueryBackend, register_backend
@@ -28,10 +35,12 @@ Registering a new backend::
         def bound_ranks(self, rt, users, qs): ...
 
     eng = ReverseKRanksEngine.build(..., backend="mine")
+    eng = ReverseKRanksEngine.build(..., backend="cached:mine")  # wrapped
 """
 from __future__ import annotations
 
-from typing import Dict, Type
+import importlib
+from typing import Callable, Dict, Type
 
 import jax
 
@@ -84,18 +93,47 @@ def register_backend(name: str):
     return deco
 
 
+_WRAPPERS: Dict[str, Callable[..., QueryBackend]] = {}
+
+# Wrapper prefixes resolvable by lazy import, so `get_backend("cached:…")`
+# works without the caller importing repro.serve first (and core avoids a
+# hard import cycle with the serving package).
+_LAZY_WRAPPERS = {"cached": "repro.serve.cache"}
+
+
+def register_wrapper(prefix: str):
+    """Register `factory(inner_name, *, mesh=None) -> QueryBackend` under
+    `prefix`, making `"<prefix>:<inner>"` a resolvable backend spec."""
+    def deco(factory):
+        _WRAPPERS[prefix] = factory
+        return factory
+    return deco
+
+
 def available_backends() -> list[str]:
+    """Concrete registered names; any of them also composes as
+    `"<wrapper>:<name>"` (e.g. "cached:dense")."""
     return sorted(_REGISTRY)
 
 
 def get_backend(spec, *, mesh=None) -> QueryBackend:
-    """Resolve `spec` (a registered name or an already-built instance)."""
+    """Resolve `spec`: a registered name, a `"<wrapper>:<inner>"` spec, or
+    an already-built instance."""
     if isinstance(spec, QueryBackend):
         if mesh is not None:
             raise ValueError(
                 "mesh= only applies when the backend is given by NAME; "
                 "construct the instance with its mesh instead")
         return spec
+    if isinstance(spec, str) and ":" in spec:
+        prefix, _, inner = spec.partition(":")
+        factory = _WRAPPERS.get(prefix)
+        if factory is None and prefix in _LAZY_WRAPPERS:
+            importlib.import_module(_LAZY_WRAPPERS[prefix])
+            factory = _WRAPPERS.get(prefix)
+        if factory is not None:
+            return factory(inner, mesh=mesh)
+        # unknown prefix: fall through to the unknown-backend error below
     try:
         cls = _REGISTRY[spec]
     except (KeyError, TypeError):

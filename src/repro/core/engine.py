@@ -26,9 +26,16 @@ Typical use::
 
     eng = ReverseKRanksEngine.build(..., backend="fused")     # Pallas
     eng = ReverseKRanksEngine.build(..., backend="sharded", mesh=mesh)
+    eng = ReverseKRanksEngine.build(..., backend="cached:fused")  # + LRU
 
-Custom backends register with `repro.core.backends.register_backend` and
-become available here by name.
+Wrapped specs like `"cached:<inner>"` compose a wrapper backend (here the
+serving cache: within-tick duplicate dedupe + a cross-tick per-query LRU,
+see `repro.serve.cache`) around any registered inner backend. For ONLINE
+workloads where queries arrive one at a time, `repro.serve.MicroBatcher`
+sits on top of this engine and coalesces async submissions into
+`query_batch` ticks. Custom backends register with
+`repro.core.backends.register_backend` (wrappers with `register_wrapper`)
+and become available here by name.
 """
 from __future__ import annotations
 

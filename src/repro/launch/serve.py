@@ -1,14 +1,17 @@
 """Serving driver for the paper's engine: build a rank-table index over
-user/item embeddings and answer batched c-approximate reverse k-ranks
-queries, reporting the §5 quality metrics against the exact oracle.
+user/item embeddings and serve c-approximate reverse k-ranks queries
+ONLINE through the async micro-batching scheduler, reporting the §5
+quality metrics against the exact oracle.
 
 `python -m repro.launch.serve --n 20000 --m 8000 [--backend fused] [--mf]`
 
-Queries execute through the pluggable backend registry
-(`repro.core.backends`): --backend dense|fused|sharded. --batch B routes
-the timed loop through `query_batch`, which reads the rank table once per
-B-query block (the bandwidth amortization measured in
-benchmarks/perf_engine.py --batched).
+Queries are submitted one at a time to `repro.serve.MicroBatcher`, which
+coalesces them into --max-batch-sized ticks dispatched through
+`engine.query_batch` (one rank-table pass per tick); --max-wait-ms is the
+latency-vs-throughput knob (how long a partial tick waits to fill).
+--backend accepts any registry name (dense|fused|sharded) plus wrapped
+specs such as "cached:fused" (within-tick dedupe + cross-tick per-query
+LRU; see repro.serve.cache). --no-eval-exact skips the oracle pass.
 """
 from __future__ import annotations
 
@@ -19,12 +22,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ReverseKRanksEngine, metrics
+from repro.core import ReverseKRanksEngine, available_backends, metrics
 from repro.core.exact import exact_ranks, reverse_k_ranks
 from repro.core.types import RankTableConfig
 from repro.data.pipeline import synthetic_embeddings
 from repro.data.mf import MFConfig, embeddings, train_mf
 from repro.data.pipeline import synthetic_ratings
+from repro.serve import MicroBatcher
 
 
 def build_embeddings(args):
@@ -51,19 +55,29 @@ def main():
     ap.add_argument("--s", type=int, default=64)
     ap.add_argument("--queries", type=int, default=50)
     ap.add_argument("--backend", default="dense",
-                    choices=ReverseKRanksEngine.backends(),
-                    help="query-execution backend (see repro.core.backends)")
-    ap.add_argument("--batch", type=int, default=16,
-                    help="queries per query_batch call in the timed loop")
+                    help="query-execution backend: one of "
+                         f"{available_backends()} or a wrapped spec like "
+                         "'cached:fused' (see repro.core.backends)")
+    ap.add_argument("--max-batch", type=int, default=16,
+                    help="scheduler tick size (compiled query_batch shape)")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="latency/throughput knob: how long a partial tick "
+                         "waits for more queries before dispatching")
     ap.add_argument("--kernels", action="store_true",
                     help="deprecated alias for --backend fused")
     ap.add_argument("--mf", action="store_true",
                     help="produce embeddings with the JAX MF trainer")
     ap.add_argument("--mf-epochs", type=int, default=5)
     ap.add_argument("--n-ratings", type=int, default=200_000)
-    ap.add_argument("--eval-exact", action="store_true", default=True)
+    ap.add_argument("--eval-exact", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="score against the exact oracle "
+                         "(--no-eval-exact to skip)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.kernels and args.backend != "dense":
+        ap.error("--kernels is a deprecated alias for --backend fused; "
+                 f"it cannot be combined with --backend {args.backend}")
 
     users, items = build_embeddings(args)
     cfg = RankTableConfig(tau=args.tau, omega=args.omega, s=args.s)
@@ -82,26 +96,30 @@ def main():
     qidx = jax.random.randint(qkey, (args.queries,), 0, args.m)
     qs = items[qidx]
 
-    # warm-up + timed loop, query_batch over --batch-sized blocks
-    B = max(1, min(args.batch, args.queries))
-    nblocks = args.queries // B
+    # warm-up (compiles the padded tick shape), then the async serving loop:
+    # every query is SUBMITTED individually; the MicroBatcher coalesces
+    # them into --max-batch ticks, waiting at most --max-wait-ms to fill.
+    B = max(1, min(args.max_batch, args.queries))
     res = eng.query_batch(qs[:B], k=args.k, c=args.c)
     jax.block_until_ready(res.indices)
-    t0 = time.time()
-    for i in range(nblocks):
-        res = eng.query_batch(qs[i * B:(i + 1) * B], k=args.k, c=args.c)
-    jax.block_until_ready(res.indices)
-    per_q = (time.time() - t0) / (nblocks * B)
-    print(f"query: {per_q*1e3:.2f} ms/query "
-          f"({eng.backend_name} backend, batch={B}, "
-          f"{nblocks * B} of {args.queries} queries timed)")
+    with MicroBatcher(eng, max_batch=B,
+                      max_wait_ms=args.max_wait_ms) as mb:
+        t0 = time.time()
+        futs = [mb.submit(q, args.k, args.c) for q in qs]
+        results = [f.result() for f in futs]
+        elapsed = time.time() - t0
+        st = mb.stats()
+    print(f"serve: {elapsed/args.queries*1e3:.2f} ms/query wall "
+          f"({eng.backend_name} backend, max_batch={B}, "
+          f"max_wait_ms={args.max_wait_ms})")
+    print(f"  ticks: {st}")
 
     if args.eval_exact:
         accs, ratios = [], []
         for i in range(min(args.queries, 20)):
             truth = np.asarray(exact_ranks(users, items, qs[i]))
             ex_idx, _ = reverse_k_ranks(users, items, qs[i], args.k)
-            r = eng.query(qs[i], k=args.k, c=args.c)
+            r = results[i]                  # served through the scheduler
             accs.append(metrics.accuracy(np.asarray(r.indices),
                                          np.asarray(ex_idx), truth, args.c))
             ratios.append(metrics.overall_ratio(

@@ -1,0 +1,28 @@
+"""Online serving subsystem for the reverse k-ranks engine.
+
+Two pieces, composable with any engine backend:
+
+  scheduler — `MicroBatcher`: async `submit(q, k, c) -> Future` requests
+              coalesced into `max_batch`-sized `engine.query_batch` ticks
+              (partial ticks edge-padded to the compiled shape), with a
+              `max_wait_ms` latency-vs-throughput knob and per-tick
+              queue-depth / fill-ratio / p50-p99 latency stats.
+  cache     — `CachingBackend`, registered as `"cached:<inner>"` in
+              `repro.core.backends`: within-tick exact-duplicate dedupe
+              plus a cross-tick LRU of per-query results keyed by
+              (query bytes, k, c).
+
+Typical serving stack (hot-query dedupe under micro-batching)::
+
+    eng = ReverseKRanksEngine.build(users, items, cfg, key,
+                                    backend="cached:fused")
+    with MicroBatcher(eng, max_batch=16, max_wait_ms=2.0) as mb:
+        fut = mb.submit(q, k=10, c=2.0)
+        res = fut.result()                 # per-query QueryResult
+"""
+from repro.serve.cache import CachingBackend
+from repro.serve.scheduler import (MicroBatcher, ServeStats, TickStats,
+                                   pad_block)
+
+__all__ = ["CachingBackend", "MicroBatcher", "ServeStats", "TickStats",
+           "pad_block"]

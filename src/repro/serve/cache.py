@@ -1,0 +1,151 @@
+"""Caching query backend: within-tick dedupe + cross-tick LRU reuse.
+
+Reverse-MIPS serving workloads are dominated by HOT queries — the same
+promoted items get asked about again and again (Amagata & Hara,
+arXiv:2110.07131) — and the micro-batching scheduler makes duplicates
+even more likely by packing temporally-close requests into one tick.
+`CachingBackend` wraps ANY registered inner backend and exploits both:
+
+  * within a tick, exact-duplicate query rows (same bytes, same k/c) are
+    deduped BEFORE dispatch — the inner backend sees one column per
+    distinct query (the scheduler's pad rows collapse for free, since
+    edge padding repeats a real query);
+  * across ticks, per-query `QueryResult`s are kept in an LRU keyed by
+    (query bytes, k, c), so a hot query is answered without touching the
+    rank table at all.
+
+Resolved from the registry as `"cached:<inner>"`::
+
+    eng = ReverseKRanksEngine.build(..., backend="cached:fused")
+    eng.query_batch(qs, k=10, c=2.0)        # dedupes + caches
+
+Bit-identity contract (asserted in tests/test_serve.py): cached, deduped,
+and full uncached dispatch agree BITWISE, because a batched matmul's
+output column depends only on the user matrix, that query column, and the
+accumulation order — not on the other columns' values. The accumulation
+order does change for width-1 dispatches (matvec lowering), so the
+miss-block is padded to width 2 whenever dedupe would shrink a multi-
+query tick to a single column (`_MIN_DISPATCH`); a true B = 1 call
+dispatches width 1 and matches uncached B = 1 execution exactly.
+
+The cache is invalidated whenever the (rank_table, users) identity it was
+filled under changes, so a rebuilt index never serves stale results.
+Results are cached per (k, c) — the selection is a function of both —
+and the wrapped result keeps the inner backend's QueryResult shape
+contract (e.g. "cached:sharded" still returns (B, k·P) candidate-set
+bounds, not (B, n)).
+"""
+from __future__ import annotations
+
+import weakref
+from collections import OrderedDict
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import backends as BK
+from repro.core.types import QueryResult, RankTable
+
+# Never let dedupe shrink a multi-query dispatch to one column: width-1
+# matmuls lower as matvecs with a different accumulation order, which
+# would break the bitwise cached == uncached contract (module docstring).
+_MIN_DISPATCH = 2
+
+
+class CachingBackend(BK.QueryBackend):
+    """Wrap an inner QueryBackend with dedupe + per-query LRU caching.
+
+    `capacity` is in ENTRIES, and an entry is a full per-query
+    QueryResult — for the in-memory backends that includes the (n,)
+    r↓/r↑ bound vectors, ≈ 8n bytes each (the "sharded" wrapper's
+    candidate-set results are only ≈ 8·k·P). Size it from the per-entry
+    cost: the default 512 is ~80 MiB at n = 20k; a million-user index
+    wants either a smaller capacity or the sharded inner backend.
+    """
+
+    def __init__(self, inner="dense", *, capacity: int = 512, mesh=None):
+        super().__init__(mesh=mesh)
+        self.inner = BK.get_backend(inner, mesh=mesh)
+        self.name = f"cached:{self.inner.name}"
+        self.capacity = int(capacity)
+        self._lru: "OrderedDict[tuple, QueryResult]" = OrderedDict()
+        self._epoch: Optional[tuple] = None
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # ----------------------------------------------------------- plumbing
+    def bound_ranks(self, rt, users, qs):
+        """Step 1 is delegated uncached — bounds are an internal debugging
+        surface; caching applies to the end-to-end per-query result."""
+        return self.inner.bound_ranks(rt, users, qs)
+
+    def clear(self) -> None:
+        self._lru.clear()
+        self._epoch = None
+
+    def _check_epoch(self, rt: RankTable, users: jax.Array) -> None:
+        """Cached results are only valid for the index they were computed
+        against; key the cache generation on the array identities, held
+        as WEAK references — a bare id() could be recycled by a rebuilt
+        index landing at the same address, silently serving stale
+        results, while strong references would pin the old table in
+        memory."""
+        arrays = (rt.thresholds, rt.table, users)
+        if self._epoch is None or any(
+                ref() is not a for ref, a in zip(self._epoch, arrays)):
+            self._lru.clear()
+            self._epoch = tuple(weakref.ref(a) for a in arrays)
+
+    def _insert(self, key: tuple, res: QueryResult) -> None:
+        self._lru[key] = res
+        self._lru.move_to_end(key)
+        while len(self._lru) > self.capacity:
+            self._lru.popitem(last=False)
+            self.evictions += 1
+
+    # -------------------------------------------------------------- query
+    def query_batch(self, rt, users, qs, *, k, c):
+        self._check_epoch(rt, users)
+        rows = np.asarray(jax.device_get(qs))
+        keys = [(rows[i].tobytes(), int(k), float(c))
+                for i in range(rows.shape[0])]
+
+        per_query: list = [None] * len(keys)
+        miss_order: "OrderedDict[tuple, int]" = OrderedDict()
+        for i, key in enumerate(keys):
+            cached = self._lru.get(key)
+            if cached is not None:
+                self._lru.move_to_end(key)
+                per_query[i] = cached
+                self.hits += 1
+            else:
+                miss_order.setdefault(key, i)     # dedupe: first occurrence
+                self.misses += 1
+
+        if miss_order:
+            idx = list(miss_order.values())
+            block = qs[jnp.asarray(idx)]
+            if len(idx) < _MIN_DISPATCH <= len(keys):
+                block = jnp.concatenate([block, block[-1:]])
+            res = self.inner.query_batch(rt, users, block, k=k, c=c)
+            # Tick-local results survive assembly even when the LRU is
+            # smaller than the tick's own unique-miss count.
+            fresh = {}
+            for j, key in enumerate(miss_order):
+                one = jax.tree_util.tree_map(lambda x, j=j: x[j], res)
+                fresh[key] = one
+                self._insert(key, one)
+            for i, key in enumerate(keys):
+                if per_query[i] is None:
+                    per_query[i] = fresh[key]
+
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_query)
+
+
+@BK.register_wrapper("cached")
+def _make_cached(inner: str, *, mesh=None) -> CachingBackend:
+    """Registry hook: `get_backend("cached:<inner>")` lands here."""
+    return CachingBackend(inner, mesh=mesh)

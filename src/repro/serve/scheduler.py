@@ -1,0 +1,291 @@
+"""Async micro-batching request scheduler — single queries in, B-sized
+`engine.query_batch` ticks out.
+
+The paper's item-centric workload is served ONLINE: queries arrive one at
+a time, but PR 1 made the B-query block the cheap unit of work (the
+(n, τ) rank table and (n, d) user matrix are streamed once per block, not
+once per query). `MicroBatcher` closes that gap: `submit(q, k, c)`
+returns a Future immediately; a dispatcher thread coalesces queued
+requests into ticks of up to `max_batch` queries and executes each tick
+as ONE `engine.query_batch` call.
+
+Latency-vs-throughput knob
+--------------------------
+A tick dispatches as soon as any (k, c) group reaches `max_batch` queued
+requests, or `max_wait_ms` after the head request arrived — whichever
+comes first. Small `max_wait_ms` bounds queueing latency at low offered
+load (ticks go out nearly empty); large `max_wait_ms` trades latency for
+fill ratio and table-bandwidth amortization (see
+`benchmarks/perf_engine.py --serve` for the measured curve). Requests
+with different (k, c) never share a tick — those are static arguments of
+the compiled batch program — and a FULL group behind a straggler head
+dispatches immediately rather than waiting out the head's deadline.
+
+Partial-batch padding
+---------------------
+Partial ticks are EDGE-PADDED to the compiled `max_batch` shape
+(`pad_block`), so every tick reuses one compiled XLA program instead of
+retracing per fill level; pad rows are sliced off before the Futures
+resolve. Padding is numerically invisible: a batched matmul's output
+column (i, j) depends only on the user row i, query column j, and the
+accumulation order — not on the other columns' VALUES — so the real
+rows of a padded tick are bit-identical to dispatching the unpadded
+block directly (asserted per backend in tests/test_serve.py). The one
+platform caveat: a width-1 block lowers as a matvec with a different
+accumulation order, so `pad_block` never emits width-1 dispatches and
+bit-identity holds for every partial fill ≥ 2; a singleton tick is
+padded like any other and agrees with direct execution on every
+table-derived field (indices, r↓/r↑, R↓_k/R↑_k), with `est` equal to
+float accuracy.
+
+Per-tick stats (`TickStats`) record queue depth at dispatch, fill ratio,
+and per-request latency; `MicroBatcher.stats()` aggregates them into
+p50/p99 latency for the serving dashboards.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from typing import Deque, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pad_block(qs: jax.Array, max_batch: int) -> jax.Array:
+    """Edge-pad a (B, d) query block to the compiled (max_batch, d) shape.
+
+    Pad rows repeat the last real query: their columns are well-defined on
+    every backend and are masked out of results by slicing. B = 0 or
+    B > max_batch are caller errors.
+    """
+    b = qs.shape[0]
+    if not 1 <= b <= max_batch:
+        raise ValueError(f"block of {b} queries does not fit max_batch="
+                         f"{max_batch}")
+    if b == max_batch:
+        return qs
+    return jnp.concatenate(
+        [qs, jnp.broadcast_to(qs[-1:], (max_batch - b, qs.shape[1]))])
+
+
+@dataclasses.dataclass(frozen=True)
+class TickStats:
+    """One dispatched tick, as observed by the scheduler."""
+
+    batch: int                 # real (unpadded) queries in the tick
+    queue_depth: int           # queue length when the tick was formed
+    fill_ratio: float          # batch / max_batch
+    wait_ms: float             # head request's submit → dispatch wait
+    latencies_ms: Tuple[float, ...]   # per-request submit → resolve
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeStats:
+    """Aggregate over a MicroBatcher's lifetime (see `stats()`)."""
+
+    ticks: int
+    requests: int
+    mean_fill: float
+    mean_queue_depth: float
+    p50_ms: float
+    p99_ms: float
+
+    def __str__(self):
+        return (f"{self.requests} reqs / {self.ticks} ticks  "
+                f"fill {self.mean_fill:.2f}  depth {self.mean_queue_depth:.1f}"
+                f"  p50 {self.p50_ms:.2f} ms  p99 {self.p99_ms:.2f} ms")
+
+
+class _Request:
+    __slots__ = ("q", "k", "c", "future", "t_submit")
+
+    def __init__(self, q, k, c):
+        self.q = q
+        self.k = int(k)
+        self.c = float(c)
+        self.future: Future = Future()
+        self.t_submit = time.monotonic()
+
+    @property
+    def key(self):
+        return (self.k, self.c)
+
+
+class MicroBatcher:
+    """Coalesce async single-query submissions into `query_batch` ticks.
+
+    Usage::
+
+        with MicroBatcher(eng, max_batch=16, max_wait_ms=2.0) as mb:
+            futs = [mb.submit(q, k=10, c=2.0) for q in queries]
+            results = [f.result() for f in futs]     # QueryResult each
+            print(mb.stats())
+
+    Thread-safe; one background dispatcher thread. `close()` (or leaving
+    the context) drains the queue before the thread exits, so every
+    accepted Future resolves.
+    """
+
+    def __init__(self, engine, *, max_batch: int = 16,
+                 max_wait_ms: float = 2.0):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_wait_ms < 0:
+            raise ValueError(f"max_wait_ms must be >= 0, got {max_wait_ms}")
+        self.engine = engine
+        self.max_batch = int(max_batch)
+        self.max_wait_ms = float(max_wait_ms)
+        self._queue: Deque[_Request] = deque()
+        self._cond = threading.Condition()
+        self._stop = False
+        self._flush = False
+        self._busy = False          # a tick is being dispatched right now
+        self._ticks: List[TickStats] = []
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="microbatcher")
+        self._thread.start()
+
+    # ------------------------------------------------------------- client
+    def submit(self, q: jax.Array, k: int, c: float) -> Future:
+        """Enqueue one (d,) query; resolves to its per-query QueryResult
+        with HOST (numpy) leaves, leading batch axis already squeezed —
+        serving results are client-bound, so the tick is transferred once
+        and split into zero-copy row views."""
+        q = jnp.asarray(q)
+        if q.ndim != 1:
+            raise ValueError(f"submit expects a (d,) query; got {q.shape}")
+        req = _Request(q, k, c)
+        with self._cond:
+            if self._stop:
+                raise RuntimeError("MicroBatcher is closed")
+            self._queue.append(req)
+            self._cond.notify_all()
+        return req.future
+
+    def flush(self) -> None:
+        """Dispatch everything queued without waiting out `max_wait_ms`,
+        and block until all accepted requests have resolved."""
+        with self._cond:
+            self._flush = True
+            self._cond.notify_all()
+            while self._queue or self._busy:
+                self._cond.wait(timeout=0.05)
+            self._flush = False
+
+    def close(self) -> None:
+        """Drain the queue, then stop the dispatcher thread."""
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+        self._thread.join()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def stats(self) -> ServeStats:
+        """Aggregate tick statistics (p50/p99 over request latencies)."""
+        with self._cond:
+            ticks = list(self._ticks)
+        if not ticks:
+            return ServeStats(0, 0, 0.0, 0.0, 0.0, 0.0)
+        lats = np.concatenate([t.latencies_ms for t in ticks])
+        return ServeStats(
+            ticks=len(ticks),
+            requests=int(lats.size),
+            mean_fill=float(np.mean([t.fill_ratio for t in ticks])),
+            mean_queue_depth=float(np.mean([t.queue_depth for t in ticks])),
+            p50_ms=float(np.percentile(lats, 50)),
+            p99_ms=float(np.percentile(lats, 99)),
+        )
+
+    @property
+    def tick_log(self) -> List[TickStats]:
+        with self._cond:
+            return list(self._ticks)
+
+    # --------------------------------------------------------- dispatcher
+    def _full_key(self):
+        """The (k, c) of the first group to reach `max_batch` queued
+        requests, or None. Requests with different static args cannot
+        share a tick (k/c are compiled into the batch program), but a
+        FULL group behind a lone straggler head is dispatchable NOW —
+        waiting out the head's deadline would be head-of-line blocking."""
+        counts: dict = {}
+        for r in self._queue:
+            counts[r.key] = counts.get(r.key, 0) + 1
+            if counts[r.key] >= self.max_batch:
+                return r.key
+        return None
+
+    def _loop(self):
+        while True:
+            with self._cond:
+                while not self._queue and not self._stop:
+                    self._cond.wait()
+                if not self._queue:         # stop requested, queue drained
+                    return
+                head = self._queue[0]
+                deadline = head.t_submit + self.max_wait_ms / 1e3
+                while (self._full_key() is None
+                       and not (self._stop or self._flush)):
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        break
+                    self._cond.wait(timeout=remaining)
+                # a full group anywhere in the queue outranks the partial
+                # head tick; the head still dispatches by its deadline
+                key = self._full_key() or self._queue[0].key
+                reqs, rest = [], deque()
+                while self._queue:
+                    r = self._queue.popleft()
+                    if r.key == key and len(reqs) < self.max_batch:
+                        reqs.append(r)
+                    else:
+                        rest.append(r)
+                depth = len(reqs) + len(rest)
+                self._queue = rest
+                self._busy = True
+            try:
+                self._dispatch(reqs, depth)
+            finally:
+                with self._cond:
+                    self._busy = False
+                    self._cond.notify_all()
+
+    def _dispatch(self, reqs: List[_Request], depth: int):
+        t_dispatch = time.monotonic()
+        k, c = reqs[0].key
+        try:
+            qs = pad_block(jnp.stack([r.q for r in reqs]), self.max_batch)
+            res = self.engine.query_batch(qs, k=k, c=c)
+            # One transfer for the whole tick: futures resolve to HOST
+            # (numpy) QueryResults — per-request row views are zero-copy,
+            # where B×fields device slices would dominate the tick cost.
+            host = jax.device_get(res)
+        except Exception as e:                    # propagate to every caller
+            for r in reqs:
+                if not r.future.cancelled():
+                    r.future.set_exception(e)
+            return
+        now = time.monotonic()
+        tick = TickStats(
+            batch=len(reqs), queue_depth=depth,
+            fill_ratio=len(reqs) / self.max_batch,
+            wait_ms=(t_dispatch - reqs[0].t_submit) * 1e3,
+            latencies_ms=tuple((now - r.t_submit) * 1e3 for r in reqs))
+        # Record the tick BEFORE resolving futures: a client that wakes
+        # from f.result() must already see it in stats()/tick_log.
+        with self._cond:
+            self._ticks.append(tick)
+        for i, r in enumerate(reqs):              # pad rows masked out here
+            per_q = jax.tree_util.tree_map(lambda x, i=i: x[i], host)
+            if not r.future.cancelled():
+                r.future.set_result(per_q)

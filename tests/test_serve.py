@@ -1,0 +1,357 @@
+"""Serving-subsystem tests (the PR-2 tentpole): micro-batching scheduler
+partial-tick padding, caching-backend dedupe/LRU, and the wrapper
+registry — all pinned to a BIT-IDENTITY contract against direct
+`engine.query_batch` execution.
+
+Why bit-identity is attainable: a batched matmul's output column (i, j)
+depends only on user row i, query column j, and the accumulation order —
+never on the other columns' VALUES — so padding a partial tick to the
+compiled batch shape (or deduping duplicates out of it) cannot perturb
+the real queries' scores, and everything downstream (bucketize, bounds,
+top-k) is per-row deterministic. The one platform caveat: a width-1
+dispatch lowers as a matvec with a DIFFERENT accumulation order (see the
+PR-1 note in tests/test_backends.py), so width-1 blocks compare on the
+table-derived integer-valued fields with `est` at float accuracy, and
+the serving paths never shrink a multi-query dispatch below width 2.
+
+Queries are perturbed off the items so no score lands exactly on a
+threshold-grid point (where a 1-ulp difference could legitimately flip
+the bucketize) — same convention as tests/test_backends.py.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:  # optional test extra — `pip install repro[test]` (see pyproject.toml)
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = None
+
+from repro.core import backends as BK
+from repro.core.engine import ReverseKRanksEngine
+from repro.core.rank_table import build_rank_table
+from repro.core.types import RankTableConfig
+from repro.serve import CachingBackend, MicroBatcher, pad_block
+from tests.conftest import make_problem
+
+ALL_BACKENDS = ("dense", "fused", "sharded")
+K, C = 7, 2.0
+MAX_BATCH = 8
+
+# integer-valued-in-rank-space fields: must match bitwise even across the
+# width-1 matvec lowering; `est` is continuous in the score's low bits.
+_EXACT_FIELDS = ("indices", "r_lo", "r_up", "R_lo_k", "R_up_k",
+                 "guaranteed", "n_accepted", "n_pruned")
+
+
+def assert_bitwise(got, want, fields=None):
+    for f in (fields or want._fields):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, f)), np.asarray(getattr(want, f)),
+            err_msg=f"field {f!r} not bit-identical")
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_problem(jax.random.PRNGKey(42), n=512, m=400, d=16)
+
+
+@pytest.fixture(scope="module")
+def rank_table(problem):
+    users, items = problem
+    return build_rank_table(users, items, RankTableConfig(tau=16, omega=4,
+                                                          s=8),
+                            jax.random.PRNGKey(1))
+
+
+@pytest.fixture(scope="module")
+def queries(problem):
+    """MAX_BATCH off-grid queries (see module docstring)."""
+    _, items = problem
+    base = items[(1 + jnp.arange(MAX_BATCH) * 13) % items.shape[0]]
+    return base * (1.0 + 1e-4 * jax.random.normal(
+        jax.random.PRNGKey(7), base.shape, jnp.float32))
+
+
+def _engine(problem, rank_table, backend):
+    users, _ = problem
+    return ReverseKRanksEngine(users=users, rank_table=rank_table,
+                               config=RankTableConfig(tau=16, omega=4, s=8),
+                               backend=backend)
+
+
+# ------------------------------------------------------------- scheduler
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+@pytest.mark.parametrize("size", [2, 3, MAX_BATCH - 1, MAX_BATCH])
+def test_padded_partial_tick_bitwise(problem, rank_table, queries, backend,
+                                     size):
+    """(a) A partial tick padded to the compiled max_batch shape returns
+    results bit-identical to direct query_batch on the UNPADDED block."""
+    eng = _engine(problem, rank_table, backend)
+    with MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=25.0) as mb:
+        futs = [mb.submit(q, K, C) for q in queries[:size]]
+        results = [f.result(timeout=120) for f in futs]
+    direct = eng.query_batch(queries[:size], k=K, c=C)
+    for i, res in enumerate(results):
+        want = jax.tree_util.tree_map(lambda x, i=i: x[i], direct)
+        assert_bitwise(res, want)
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_singleton_tick_matches_direct(problem, rank_table, queries,
+                                       backend):
+    """A width-1 tick is padded like any other; vs direct B = 1 execution
+    (a matvec lowering with different accumulation order) the table-
+    derived fields still match exactly, `est` at float accuracy."""
+    eng = _engine(problem, rank_table, backend)
+    with MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=5.0) as mb:
+        res = mb.submit(queries[0], K, C).result(timeout=120)
+    direct = eng.query_batch(queries[:1], k=K, c=C)
+    want = jax.tree_util.tree_map(lambda x: x[0], direct)
+    assert_bitwise(res, want, fields=_EXACT_FIELDS)
+    np.testing.assert_allclose(np.asarray(res.est_rank),
+                               np.asarray(want.est_rank), rtol=1e-5,
+                               atol=1e-4)
+
+
+def test_scheduler_coalesces_and_reports(problem, rank_table, queries):
+    """Full bursts dispatch as full ticks; stats see every request."""
+    eng = _engine(problem, rank_table, "dense")
+    eng.query_batch(queries, k=K, c=C)          # pre-compile the tick shape
+    with MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=200.0) as mb:
+        futs = [mb.submit(q, K, C) for q in queries] * 1
+        futs += [mb.submit(q, K, C) for q in queries]
+        for f in futs:
+            f.result(timeout=120)
+        st = mb.stats()
+    assert st.requests == 2 * MAX_BATCH
+    assert st.ticks == 2                        # coalesced, not 16 ticks
+    assert st.mean_fill == 1.0
+    assert st.p99_ms >= st.p50_ms >= 0.0
+    log = mb.tick_log
+    assert all(t.batch == MAX_BATCH for t in log)
+    assert all(len(t.latencies_ms) == t.batch for t in log)
+
+
+def test_scheduler_separates_static_args(problem, rank_table, queries):
+    """Requests with different (k, c) never share a tick (they cannot
+    share a compiled batch program), yet all resolve correctly."""
+    eng = _engine(problem, rank_table, "dense")
+    with MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=10.0) as mb:
+        f1 = mb.submit(queries[0], K, C)
+        f2 = mb.submit(queries[1], K + 2, C)
+        f3 = mb.submit(queries[2], K, 1.0)
+        r1, r2, r3 = (f.result(timeout=120) for f in (f1, f2, f3))
+        assert len(mb.tick_log) == 3
+    assert r1.indices.shape == (K,)
+    assert r2.indices.shape == (K + 2,)
+    assert r3.indices.shape == (K,)
+
+
+def test_full_group_preempts_straggler_head(problem, rank_table, queries):
+    """A FULL (k, c) group queued behind a lone different-key head
+    dispatches immediately instead of waiting out the head's deadline
+    (no head-of-line blocking); the head still dispatches by deadline."""
+    eng = _engine(problem, rank_table, "dense")
+    eng.query_batch(queries, k=K, c=C)          # pre-compile both shapes
+    eng.query_batch(queries, k=K, c=1.0)
+    with MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=400.0) as mb:
+        t0 = time.monotonic()
+        straggler = mb.submit(queries[0], K, 1.0)
+        group = [mb.submit(q, K, C) for q in queries]   # fills max_batch
+        for f in group:
+            f.result(timeout=120)
+        group_done = time.monotonic() - t0
+        straggler.result(timeout=120)
+        log = mb.tick_log
+    assert group_done < 0.4, f"full group waited on the head ({group_done})"
+    assert log[0].batch == MAX_BATCH            # the group went first
+    assert [t.batch for t in log] == [MAX_BATCH, 1]
+
+
+def test_scheduler_error_propagates(problem, rank_table):
+    """A failing dispatch resolves every Future of the tick with the
+    exception instead of hanging the client."""
+    eng = _engine(problem, rank_table, "dense")
+    with MicroBatcher(eng, max_batch=4, max_wait_ms=5.0) as mb:
+        bad = mb.submit(jnp.zeros(3), K, C)     # wrong d: jit shape error
+        with pytest.raises(Exception):
+            bad.result(timeout=120)
+
+
+def test_pad_block_shapes(queries):
+    assert pad_block(queries[:3], MAX_BATCH).shape == (MAX_BATCH, 16)
+    assert pad_block(queries, MAX_BATCH) is queries
+    padded = np.asarray(pad_block(queries[:2], 4))
+    np.testing.assert_array_equal(padded[2], padded[1])   # edge padding
+    np.testing.assert_array_equal(padded[3], padded[1])
+    with pytest.raises(ValueError, match="does not fit"):
+        pad_block(queries, 4)
+
+
+# ----------------------------------------------------------------- cache
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_cached_bitwise_all_backends(problem, rank_table, queries, backend):
+    """(b) Dedupe + LRU-cached results are bit-identical to uncached
+    dispatch: duplicate-heavy first tick (dedupe path), full-hit second
+    tick (LRU path), overlapping third tick (mixed hit/miss path)."""
+    eng = _engine(problem, rank_table, f"cached:{backend}")
+    ref = _engine(problem, rank_table, backend)
+    assert eng.backend_name == f"cached:{backend}"
+
+    dup = queries[jnp.asarray([0, 1, 0, 2, 1, 0])]        # 6 rows, 3 unique
+    assert_bitwise(eng.query_batch(dup, k=K, c=C),
+                   ref.query_batch(dup, k=K, c=C))
+    cache = eng._backend
+    assert cache.misses == 6 and cache.hits == 0          # all cold rows
+
+    assert_bitwise(eng.query_batch(dup, k=K, c=C),        # pure LRU hits
+                   ref.query_batch(dup, k=K, c=C))
+    assert cache.hits == 6
+
+    mixed = queries[jnp.asarray([2, 3, 4, 0])]            # 2 hits, 2 misses
+    assert_bitwise(eng.query_batch(mixed, k=K, c=C),
+                   ref.query_batch(mixed, k=K, c=C))
+    assert cache.hits == 8 and cache.misses == 8
+
+
+def test_cached_keyed_by_k_and_c(problem, rank_table, queries):
+    """Same query bytes under different (k, c) are different cache
+    entries — the selection depends on both."""
+    eng = _engine(problem, rank_table, "cached:dense")
+    ref = _engine(problem, rank_table, "dense")
+    qs = queries[:2]
+    eng.query_batch(qs, k=K, c=C)
+    for k, c in ((K, 1.0), (K + 2, C)):
+        assert_bitwise(eng.query_batch(qs, k=k, c=c),
+                       ref.query_batch(qs, k=k, c=c))
+    assert eng._backend.hits == 0                         # no false sharing
+
+
+def test_cached_lru_eviction_and_invalidation(problem, rank_table, queries):
+    users, items = problem
+    cache = CachingBackend("dense", capacity=2)
+    rt = rank_table
+    cache.query_batch(rt, users, queries[:3], k=K, c=C)
+    assert cache.evictions == 1 and len(cache._lru) == 2
+    # evicted head misses again; the two surviving entries hit
+    cache.query_batch(rt, users, queries[:3], k=K, c=C)
+    assert cache.hits == 2 and cache.misses == 4
+
+    # rebuilding the index invalidates every cached result
+    rt2 = build_rank_table(users, items,
+                           RankTableConfig(tau=32, omega=4, s=8),
+                           jax.random.PRNGKey(3))
+    ref = BK.get_backend("dense")
+    got = cache.query_batch(rt2, users, queries[:2], k=K, c=C)
+    assert_bitwise(got, ref.query_batch(rt2, users, queries[:2], k=K, c=C))
+
+
+def test_cached_through_scheduler_bitwise(problem, rank_table, queries):
+    """The full serving stack — scheduler padding + cache dedupe (pad
+    rows collapse into the last real query) — stays bit-identical to
+    direct uncached execution of the unpadded block."""
+    eng = _engine(problem, rank_table, "cached:dense")
+    ref = _engine(problem, rank_table, "dense")
+    with MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=25.0) as mb:
+        futs = [mb.submit(q, K, C) for q in queries[:3]]
+        results = [f.result(timeout=120) for f in futs]
+    direct = ref.query_batch(queries[:3], k=K, c=C)
+    for i, res in enumerate(results):
+        assert_bitwise(res, jax.tree_util.tree_map(lambda x, i=i: x[i],
+                                                   direct))
+
+
+# -------------------------------------------------- registry edge cases
+def test_cached_unknown_inner_raises():
+    """"cached:<unknown>" surfaces the available-backends ValueError."""
+    with pytest.raises(ValueError, match="unknown query backend"):
+        BK.get_backend("cached:no-such-backend")
+    with pytest.raises(ValueError) as ei:
+        BK.get_backend("cached:no-such-backend")
+    for name in ALL_BACKENDS:
+        assert name in str(ei.value)
+
+
+def test_unknown_wrapper_prefix_raises():
+    with pytest.raises(ValueError, match="unknown query backend"):
+        BK.get_backend("zip:dense")
+
+
+def test_cached_sharded_preserves_candidate_shape(problem, rank_table,
+                                                  queries):
+    """Wrapping "sharded" preserves its (B, k·P) candidate-set result
+    shape — the cache stacks per-query slices, it does not reshape."""
+    eng = _engine(problem, rank_table, "cached:sharded")
+    P = jax.device_count()
+    B = 4
+    res = eng.query_batch(queries[:B], k=K, c=C)
+    want = _engine(problem, rank_table, "sharded").query_batch(
+        queries[:B], k=K, c=C)
+    assert want.r_lo.shape == (B, K * P)      # sharded contract, uncached
+    assert res.r_lo.shape == (B, K * P)
+    assert res.r_up.shape == (B, K * P)
+    assert res.indices.shape == (B, K)
+    assert_bitwise(res, want)
+
+
+def test_wrapper_backend_accepted_by_engine_build(problem):
+    users, items = problem
+    eng = ReverseKRanksEngine.build(
+        users, items, RankTableConfig(tau=16, omega=4, s=8),
+        jax.random.PRNGKey(0), backend="cached:dense")
+    assert eng.backend_name == "cached:dense"
+    res = eng.query(items[3], k=K, c=C)
+    assert res.indices.shape == (K,)
+
+
+# ------------------------------------------------- hypothesis property
+if given is not None:
+    @settings(max_examples=12, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, MAX_BATCH - 1),   # query id
+                              st.sampled_from([0.0, 0.5, 2.0])),  # gap ms
+                    min_size=1, max_size=12))
+    def test_random_arrival_patterns(arrivals):
+        """(c) Under arbitrary arrival patterns (bursts, stragglers,
+        duplicates) every request resolves to the direct per-query
+        reference, and the tick accounting adds up."""
+        import time
+        users, items = make_problem(jax.random.PRNGKey(42), n=512, m=400,
+                                    d=16)
+        rt = build_rank_table(users, items,
+                              RankTableConfig(tau=16, omega=4, s=8),
+                              jax.random.PRNGKey(1))
+        eng = ReverseKRanksEngine(
+            users=users, rank_table=rt,
+            config=RankTableConfig(tau=16, omega=4, s=8), backend="dense")
+        base = items[(1 + jnp.arange(MAX_BATCH) * 13) % items.shape[0]]
+        qs = base * (1.0 + 1e-4 * jax.random.normal(
+            jax.random.PRNGKey(7), base.shape, jnp.float32))
+        refs = eng.query_batch(qs, k=K, c=C)
+
+        with MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=3.0) as mb:
+            futs = []
+            for qi, gap_ms in arrivals:
+                if gap_ms:
+                    time.sleep(gap_ms / 1e3)
+                futs.append((qi, mb.submit(qs[qi], K, C)))
+            results = [(qi, f.result(timeout=120)) for qi, f in futs]
+            st_agg = mb.stats()
+
+        for qi, res in results:
+            want = jax.tree_util.tree_map(lambda x: x[qi], refs)
+            assert_bitwise(res, want, fields=_EXACT_FIELDS)
+            np.testing.assert_allclose(np.asarray(res.est_rank),
+                                       np.asarray(want.est_rank),
+                                       rtol=1e-5, atol=1e-4)
+        assert st_agg.requests == len(arrivals)
+        log = mb.tick_log
+        assert sum(t.batch for t in log) == len(arrivals)
+        assert all(0 < t.fill_ratio <= 1.0 for t in log)
+else:  # pragma: no cover - optional dep absent
+    @pytest.mark.skip(reason="hypothesis not installed (optional test extra)")
+    def test_random_arrival_patterns():
+        pass
