@@ -22,8 +22,23 @@ throughput and p50/p99 latency of the async MicroBatcher vs OFFERED load
 (queries submitted one at a time on a paced clock), swept over several
 `max_wait_ms` settings. Low max_wait_ms bounds latency but dispatches
 emptier ticks; high max_wait_ms fills ticks (table-bandwidth
-amortization) at the cost of queueing latency. Run with:
+amortization) at the cost of queueing latency. The `rej` column shows
+the back-pressure knee: with --serve the sweep runs a bounded queue
+(max_depth), so past-capacity offered load turns into fail-fast
+rejections instead of unbounded queueing latency. Run with:
     PYTHONPATH=src python -m benchmarks.perf_engine --serve
+
+Part E (CPU, real execution): the PR-3 dynamic-index benchmark — B = 16
+`query_batch` latency and rank quality of the DELTA PATH (streaming
+inserts absorbed without rebuild, `repro.index`) vs the static index and
+vs a from-scratch rebuild, swept over the delta ratio, on the
+paper_engine table config (reduced-scale replica). Acceptance: at a 5%
+insert delta the delta path stays ≤ 1.3× the static-index latency on the
+dense and fused backends, and its overall-ratio against the exact oracle
+on the MERGED item set stays within the configured slack of the
+rebuild's. Also reports the rebuild cadence (full Algorithm 1 + hot-swap
+wall time). Run with:
+    PYTHONPATH=src python -m benchmarks.perf_engine --updates
 """
 from __future__ import annotations
 
@@ -166,7 +181,7 @@ def serve_mode():
     from repro.core import ReverseKRanksEngine
     from repro.core.types import RankTableConfig
     from repro.data.pipeline import synthetic_embeddings
-    from repro.serve import MicroBatcher
+    from repro.serve import MicroBatcher, QueueFull
 
     users, items = synthetic_embeddings(jax.random.PRNGKey(0), 8_192,
                                         2_048, 64)
@@ -188,8 +203,12 @@ def serve_mode():
     for max_wait_ms in (0.5, 2.0, 8.0):
         for load_frac in (0.25, 1.0, 4.0):
             rate = capacity * load_frac
+            # bounded queue: past the overload knee, offered load shows
+            # up as fail-fast rejections (rej column), not as unbounded
+            # queueing latency
             with MicroBatcher(eng, max_batch=max_batch,
-                              max_wait_ms=max_wait_ms) as mb:
+                              max_wait_ms=max_wait_ms,
+                              max_depth=4 * max_batch) as mb:
                 t0 = time.perf_counter()
                 futs = []
                 for i in range(n_queries):
@@ -197,15 +216,107 @@ def serve_mode():
                     delay = target - time.perf_counter()
                     if delay > 0:
                         time.sleep(delay)
-                    futs.append(mb.submit(items[i % items.shape[0]],
-                                          10, 2.0))
+                    try:
+                        futs.append(mb.submit(items[i % items.shape[0]],
+                                              10, 2.0))
+                    except QueueFull:
+                        pass                      # counted in stats()
                 for f in futs:
                     f.result()
                 wall = time.perf_counter() - t0
                 st = mb.stats()
             print(f"{max_wait_ms:11.1f} {rate:11,.0f} "
-                  f"{n_queries / wall:12,.0f} {st.mean_fill:5.2f} "
-                  f"{st.p50_ms:8.2f} {st.p99_ms:8.2f}")
+                  f"{len(futs) / wall:12,.0f} {st.mean_fill:5.2f} "
+                  f"{st.p50_ms:8.2f} {st.p99_ms:8.2f} "
+                  f"rej {st.rejected:4d} (hwm {st.depth_hwm})")
+
+
+def updates_mode():
+    """Acceptance: at a 5% insert delta, delta-path B=16 latency ≤ 1.3×
+    static on dense AND fused, and delta-path rank quality (overall ratio
+    vs the exact oracle on the merged item set) within the slack of a
+    from-scratch rebuild's."""
+    import dataclasses as dc
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from benchmarks.common import timeit
+    from repro.configs.paper_engine import DEFAULT_TABLE
+    from repro.core import ReverseKRanksEngine, metrics
+    from repro.core.exact import exact_ranks, reverse_k_ranks
+    from repro.data.pipeline import synthetic_embeddings
+
+    n, m, d, B, k, c = 8_192, 2_048, 128, 16, 10, 2.0
+    slack = 0.10                    # configured error slack vs the rebuild
+    cfg = dc.replace(DEFAULT_TABLE)             # paper_engine table config
+    users, items = synthetic_embeddings(jax.random.PRNGKey(0), n, m, d)
+    qs = items[:B] * (1.0 + 1e-4 * jax.random.normal(
+        jax.random.PRNGKey(7), (B, d), jnp.float32))
+    print(f"dynamic-index sweep: n={n:,} m={m:,} d={d} tau={cfg.tau} "
+          f"omega={cfg.omega} s={cfg.s}  B={B} k={k} c={c} slack={slack}")
+    print(f"{'backend':7s} {'delta':>6s} {'static ms/q':>11s} "
+          f"{'delta ms/q':>10s} {'ratio':>6s} {'ratio_delta':>11s} "
+          f"{'ratio_rebuild':>13s}")
+
+    checks = []
+    for backend in ("dense", "fused"):
+        eng0 = ReverseKRanksEngine.build(users, items, cfg,
+                                         jax.random.PRNGKey(1),
+                                         backend=backend)
+        t_static = timeit(lambda Q: eng0.query_batch(Q, k=k, c=c).indices,
+                          qs, iters=3) / B
+        for frac in (0.01, 0.05, 0.10):
+            eng = ReverseKRanksEngine.build(users, items, cfg,
+                                            jax.random.PRNGKey(1),
+                                            backend=backend)
+            n_add = int(round(frac * m))
+            _, new_items = synthetic_embeddings(
+                jax.random.PRNGKey(100 + n_add), 1, n_add, d)
+            eng.insert_items(new_items)
+            t_delta = timeit(lambda Q: eng.query_batch(Q, k=k,
+                                                       c=c).indices,
+                             qs, iters=3) / B
+            ratio = t_delta / t_static
+            quality = ""
+            if frac == 0.05:
+                merged = eng.live_items()
+                delta_res = eng.query_batch(qs, k=k, c=c)
+                scratch = ReverseKRanksEngine.build(users, merged, cfg,
+                                                    jax.random.PRNGKey(1),
+                                                    backend=backend)
+                reb_res = scratch.query_batch(qs, k=k, c=c)
+                r_d, r_r = [], []
+                for i in range(8):       # exact oracle is O(nmd)/query
+                    truth = np.asarray(exact_ranks(users, merged, qs[i]))
+                    ex_idx, _ = reverse_k_ranks(users, merged, qs[i], k)
+                    r_d.append(metrics.overall_ratio(
+                        np.asarray(delta_res.indices[i]),
+                        np.asarray(ex_idx), truth))
+                    r_r.append(metrics.overall_ratio(
+                        np.asarray(reb_res.indices[i]),
+                        np.asarray(ex_idx), truth))
+                rd, rr = float(np.mean(r_d)), float(np.mean(r_r))
+                quality = f" {rd:11.4f} {rr:13.4f}"
+                ok_lat = ratio <= 1.3
+                ok_q = rd <= rr * (1.0 + slack)
+                checks.append((backend, ok_lat, ok_q, ratio, rd, rr))
+            print(f"{backend:7s} {frac:6.2f} {t_static*1e3:11.3f} "
+                  f"{t_delta*1e3:10.3f} {ratio:6.2f}{quality}")
+
+    # rebuild cadence: full Algorithm 1 + hot swap on the mutated engine
+    eng = ReverseKRanksEngine.build(users, items, cfg, jax.random.PRNGKey(1))
+    _, new_items = synthetic_embeddings(jax.random.PRNGKey(5), 1,
+                                        int(0.05 * m), d)
+    eng.insert_items(new_items)
+    rec = eng.rebuild(reason="cadence probe")
+    print(f"rebuild cadence: build {rec.build_s:.2f}s + swap "
+          f"{rec.swap_s*1e3:.1f}ms ({rec.stats})")
+    for backend, ok_lat, ok_q, ratio, rd, rr in checks:
+        print(f"{backend}: delta@5% latency ≤1.3× static: "
+              f"{'PASS' if ok_lat else 'FAIL'} ({ratio:.2f}×); "
+              f"overall-ratio within {slack:.0%} of rebuild: "
+              f"{'PASS' if ok_q else 'FAIL'} ({rd:.4f} vs {rr:.4f})")
 
 
 if __name__ == "__main__":
@@ -214,6 +325,7 @@ if __name__ == "__main__":
     ap.add_argument("--quality", action="store_true")
     ap.add_argument("--batched", action="store_true")
     ap.add_argument("--serve", action="store_true")
+    ap.add_argument("--updates", action="store_true")
     args = ap.parse_args()
     if args.roofline:
         roofline_mode()
@@ -223,3 +335,5 @@ if __name__ == "__main__":
         batched_mode()
     if args.serve:
         serve_mode()
+    if args.updates:
+        updates_mode()

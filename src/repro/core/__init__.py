@@ -8,8 +8,12 @@ Modules:
   qsrp        — QSRP baseline (ICDE'24), extended to c-approximation
   metrics     — §5 accuracy / overall-ratio criteria
   backends    — pluggable query-execution backends (dense/fused/sharded)
-  engine      — public ReverseKRanksEngine API
+  engine      — public ReverseKRanksEngine API (incl. the PR-3 mutation
+                API: insert/delete items, upsert/delete users, rebuild)
   distributed — multi-pod sharded build + query (shard_map)
+
+The index-lifecycle layer behind the mutation API (delta buffer,
+epoch-versioned snapshots, maintenance loop) lives in `repro.index`.
 """
 from repro.core.backends import (QueryBackend, available_backends,
                                  get_backend, register_backend)
@@ -17,11 +21,12 @@ from repro.core.engine import ReverseKRanksEngine
 from repro.core.exact import exact_ranks, reverse_k_ranks
 from repro.core.query import query, query_batch
 from repro.core.rank_table import build_rank_table
-from repro.core.types import QueryResult, RankTable, RankTableConfig
+from repro.core.types import (DeltaCorrection, QueryResult, RankTable,
+                              RankTableConfig)
 
 __all__ = [
     "ReverseKRanksEngine", "exact_ranks", "reverse_k_ranks", "query",
-    "query_batch", "build_rank_table", "QueryResult", "RankTable",
-    "RankTableConfig", "QueryBackend", "available_backends", "get_backend",
-    "register_backend",
+    "query_batch", "build_rank_table", "DeltaCorrection", "QueryResult",
+    "RankTable", "RankTableConfig", "QueryBackend", "available_backends",
+    "get_backend", "register_backend",
 ]

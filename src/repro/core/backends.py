@@ -40,12 +40,14 @@ Registering a new backend::
 from __future__ import annotations
 
 import importlib
-from typing import Callable, Dict, Type
+from typing import Callable, Dict, Optional, Type
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import query as query_mod
-from repro.core.types import QueryResult, RankTable
+from repro.core.types import DeltaCorrection, QueryResult, RankTable, \
+    RankTableConfig
 
 
 class QueryBackend:
@@ -54,6 +56,17 @@ class QueryBackend:
     Subclasses implement `bound_ranks` (step 1, returning (B, n) arrays)
     and optionally override `select` / `query_batch`. `mesh` is accepted
     by every backend for a uniform constructor; only "sharded" uses it.
+
+    Two dynamic-index hooks (see `repro.index`) have working defaults:
+
+    * `query_batch(..., delta=)` — when a `DeltaCorrection` is passed, the
+      backend must fuse it between step 1 and selection via the SHARED
+      `rank_table.apply_delta_corrections`, so dense/fused/sharded cannot
+      drift on a mutated index. The base implementation handles any
+      backend whose `bound_ranks` returns full (B, n) arrays.
+    * `build_index` — Algorithm 1 on this backend's substrate; "sharded"
+      overrides it to build row-sharded end-to-end, and the maintenance
+      loop's rebuilds go through the same hook as `Engine.build`.
     """
 
     name: str = "abstract"
@@ -71,8 +84,37 @@ class QueryBackend:
         """§4.3 steps 2-3 on (B, n) bounds → QueryResult with leading B axis."""
         return query_mod.select_topk(r_lo, r_up, est, k=k, c=c, m_items=rt.m)
 
+    def build_index(self, users: jax.Array, items: jax.Array,
+                    cfg: RankTableConfig, key: jax.Array) -> RankTable:
+        """Algorithm 1 on this backend's execution substrate."""
+        from repro.core import rank_table as rt_mod
+        return rt_mod.build_rank_table(users, items, cfg, key)
+
+    def check_users_shape(self, n: int) -> None:
+        """Raise if this backend cannot query a (n, d) user matrix —
+        called by the engine BEFORE a mutation grows the user set, so a
+        bad append fails with a clear error instead of breaking every
+        subsequent query."""
+
+    def _delta_query(self, rt: RankTable, users: jax.Array, qs: jax.Array,
+                     *, k: int, c: float, delta: DeltaCorrection
+                     ) -> QueryResult:
+        """Generic delta path for (B, n)-bounds backends: step-1 bounds,
+        the shared correction (needs the u·q score matrix — one extra
+        (n, d) × (d, B) matmul), then selection against the live m."""
+        from repro.core import rank_table as rt_mod
+        r_lo, r_up, est = self.bound_ranks(rt, users, qs)   # (B, n)
+        scores = (users @ qs.T).astype(jnp.float32)         # (n, B)
+        r_lo, r_up, est = rt_mod.apply_delta_corrections(
+            scores, r_lo.T, r_up.T, est.T, delta)
+        return query_mod.select_topk(r_lo.T, r_up.T, est.T, k=k, c=c,
+                                     m_items=delta.selection_m())
+
     def query_batch(self, rt: RankTable, users: jax.Array, qs: jax.Array,
-                    *, k: int, c: float) -> QueryResult:
+                    *, k: int, c: float,
+                    delta: Optional[DeltaCorrection] = None) -> QueryResult:
+        if delta is not None:
+            return self._delta_query(rt, users, qs, k=k, c=c, delta=delta)
         r_lo, r_up, est = self.bound_ranks(rt, users, qs)
         return self.select(rt, r_lo, r_up, est, k=k, c=c)
 
@@ -162,9 +204,12 @@ class DenseBackend(QueryBackend):
     def bound_ranks(self, rt, users, qs):
         return query_mod.bound_ranks_batch(rt, users, qs)
 
-    def query_batch(self, rt, users, qs, *, k, c):
+    def query_batch(self, rt, users, qs, *, k, c, delta=None):
         if not _stock_pipeline(self, DenseBackend):
-            return super().query_batch(rt, users, qs, k=k, c=c)
+            return super().query_batch(rt, users, qs, k=k, c=c, delta=delta)
+        if delta is not None:
+            # one jit region: the correction reuses the step-1 score matrix
+            return query_mod.query_batch_delta(rt, users, qs, delta, k, c)
         # one jit region end-to-end (matmul + lookup + select fuse)
         return query_mod.query_batch(rt, users, qs, k, c)
 
@@ -178,9 +223,15 @@ class FusedBackend(QueryBackend):
         return kops.bound_ranks_batched(users, qs, rt.thresholds, rt.table,
                                         m=int(rt.m))
 
-    def query_batch(self, rt, users, qs, *, k, c):
+    def query_batch(self, rt, users, qs, *, k, c, delta=None):
         if not _stock_pipeline(self, FusedBackend):
-            return super().query_batch(rt, users, qs, k=k, c=c)
+            return super().query_batch(rt, users, qs, k=k, c=c, delta=delta)
+        if delta is not None:
+            # the inherited delta pipeline over this backend's
+            # bound_ranks IS the fused delta path: kernel step 1, the
+            # shared correction (one extra XLA matmul for u·q), shared
+            # selection
+            return self._delta_query(rt, users, qs, k=k, c=c, delta=delta)
         from repro.kernels import ops as kops
         return kops.query_fused_batch(rt, users, qs, k, c)
 
@@ -191,9 +242,16 @@ class ShardedBackend(QueryBackend):
 
     `query_batch` gathers only (B, k·P) candidates in ONE collective (its
     QueryResult carries candidate-set bounds of shape (B, k·P), not
-    (B, n) — see `core.distributed`). `bound_ranks` falls back to the
-    dense path: materializing full (B, n) bounds defeats the O(k·P) wire
-    budget and exists for debugging/parity checks only.
+    (B, n) — see `core.distributed`). The delta correction runs INSIDE the
+    shard_map on row-sharded correction arrays, before the per-shard
+    top-k, preserving the wire budget on mutated indexes. `bound_ranks`
+    falls back to the dense path: materializing full (B, n) bounds defeats
+    the O(k·P) wire budget and exists for debugging/parity checks only.
+
+    `build_index` routes through `distributed.build_sharded`, so tables
+    are row-sharded END-TO-END (never built on one device and re-sharded)
+    — both for `Engine.build(backend="sharded")` and for the maintenance
+    loop's rebuilds, which call the same hook.
     """
 
     def __init__(self, mesh=None):
@@ -205,12 +263,43 @@ class ShardedBackend(QueryBackend):
     def bound_ranks(self, rt, users, qs):
         return query_mod.bound_ranks_batch(rt, users, qs)
 
-    def query_batch(self, rt, users, qs, *, k, c):
+    def build_index(self, users, items, cfg, key):
+        from repro.core import distributed as D
+        nshards = self.mesh.devices.size
+        if cfg.threshold_mode == "exact":
+            # oracle-only mode: exact f_min/f_max needs the full item set
+            # per user row, which the row-parallel build never
+            # materializes — build dense (small tests only) rather than
+            # silently degrading to sampled thresholds
+            return super().build_index(users, items, cfg, key)
+        if users.shape[0] % nshards or items.shape[0] % nshards:
+            # streaming churn drifts the live item count off the mesh
+            # multiple; the row-parallel build's shard_map would raise an
+            # opaque divisibility error (and a maintenance-loop rebuild
+            # would then fail on every retry). Fall back to the dense
+            # build — the resulting table queries fine on this backend as
+            # long as n itself stays shard-divisible.
+            return super().build_index(users, items, cfg, key)
+        return D.build_sharded(users, items, cfg, key, self.mesh)
+
+    def check_users_shape(self, n):
+        nshards = self.mesh.devices.size
+        if n % nshards:
+            raise ValueError(
+                f"sharded backend row-shards {n} users over {nshards} "
+                "devices; appends must keep n divisible by the mesh size "
+                "(pad the append batch or rebuild on a resized mesh)")
+
+    def query_batch(self, rt, users, qs, *, k, c, delta=None):
         from repro.core import distributed as D
         n = users.shape[0]
-        key = (k, float(c), n)
+        shape = None if delta is None else (delta.n_add, delta.n_del)
+        key = (k, float(c), n, shape)
         fn = self._fns.get(key)
         if fn is None:
-            fn = D.make_batch_query_fn(self.mesh, k=k, n=n, c=float(c))
+            fn = D.make_batch_query_fn(self.mesh, k=k, n=n, c=float(c),
+                                       with_delta=delta is not None)
             self._fns[key] = fn
-        return fn(rt, users, qs)
+        if delta is None:
+            return fn(rt, users, qs)
+        return fn(rt, users, qs, delta)

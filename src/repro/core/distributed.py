@@ -29,9 +29,9 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import rank_table as rt_mod
-from repro.core.query import lemma1_select, lookup_bounds_batch
-from repro.core.types import QueryResult, RankTable, RankTableConfig, \
-    kth_smallest
+from repro.core.query import lemma1_key, lemma1_select, lookup_bounds_batch
+from repro.core.types import DeltaCorrection, QueryResult, RankTable, \
+    RankTableConfig, kth_smallest
 
 AXIS = "shard"
 
@@ -68,7 +68,17 @@ def build_sharded(users: jax.Array, items: jax.Array, cfg: RankTableConfig,
     Norm pass is item-sharded (O(md/P) per chip); the global norm-sort
     runs on the m gathered SCALARS; the per-user table build is
     embarrassingly row-parallel (zero collectives).
+
+    threshold_mode="exact" is refused rather than silently degraded: the
+    exact f_min/f_max needs every user row to see the FULL item set,
+    which this row-parallel build never materializes (it is an O(nmd)
+    oracle mode for small tests — build it dense).
     """
+    if cfg.threshold_mode == "exact":
+        raise ValueError(
+            'build_sharded does not support threshold_mode="exact" (each '
+            "user shard only sees its item shard); use the dense "
+            "build_rank_table for the exact-threshold oracle mode")
     m = items.shape[0]
 
     norms_local = _shard_map(
@@ -107,51 +117,89 @@ def build_sharded(users: jax.Array, items: jax.Array, cfg: RankTableConfig,
 
 
 # ------------------------------------------------------------------- query
-def make_batch_query_fn(mesh: Mesh, k: int, n: int, c: float):
+def make_batch_query_fn(mesh: Mesh, k: int, n: int, c: float, *,
+                        with_delta: bool = False):
     """Builds the jit'd batched sharded query:
-    (rank_table, users, Q (B, d)) → QueryResult with leading batch axis.
+    (rank_table, users, Q (B, d) [, delta]) → QueryResult, leading B axis.
 
     Stage 1 (shard_map): step 1 is ONE local U_shard @ Qᵀ MXU matmul plus
     a single streamed pass over the local threshold/table rows serving all
     B queries (`lookup_bounds_batch`) — the n·(d+2τ)/P byte stream per
-    chip is read once per BATCH, not once per query. Per-shard top-k then
-    reduces each query to k candidates.
+    chip is read once per BATCH, not once per query. The per-shard
+    k-smallest r↓/r↑ are then all-gathered ((B, k) scalars per shard —
+    the kth of the union of per-shard k-smallest IS the global kth), so
+    every shard computes the EXACT global R↓_k/R↑_k and selects its k
+    candidates by the true §4.3 composite key (accepted ≺ U_temp ≺
+    pruned, est within class). Ranking candidates by est alone would
+    drop a Lemma-1-accepted user whose estimate is merely mediocre —
+    dense and sharded would then legitimately disagree in the
+    non-guaranteed regime (caught by tests/test_index.py parity).
     Stage 2: the out_specs stack every shard's candidates into a global
     (B, k·P) set in ONE gather (the tree merge) — not B per-query gathers;
     O(B·k·P) bytes on the wire instead of O(B·n). Global selection reuses
-    the shared `lemma1_select` composite key, batched over B.
+    the shared `lemma1_select` composite key (same R↓_k/R↑_k, same key),
+    so the merge preserves the shards' exact ordering.
+
+    With `with_delta=True` the returned fn takes a `DeltaCorrection` whose
+    per-user score sets are ROW-SHARDED like the users/table, and the
+    shared `apply_delta_corrections` runs inside the shard_map BEFORE the
+    per-shard top-k (correcting after candidate selection would pick the
+    wrong candidates) — so the mutated-index path keeps the O(B·k·P) wire
+    budget: delta score rows never leave their shard.
     """
     nshards = mesh.devices.size
     shard_n = n // nshards
 
-    def local_part(thr, tab, m_items, u_shard, qs):
+    def local_part(thr, tab, m_items, u_shard, qs, *delta):
         scores = (u_shard @ qs.T).astype(jnp.float32)       # (n_loc, B) MXU
         r_lo, r_up, est = lookup_bounds_batch(
             RankTable(thr, tab, m_items), scores)           # (n_loc, B)
+        if with_delta:
+            corr = DeltaCorrection(*delta)
+            r_lo, r_up, est = rt_mod.apply_delta_corrections(
+                scores, r_lo, r_up, est, corr)
+            m_eff = corr.selection_m()
+        else:
+            m_eff = m_items
         r_lo, r_up, est = r_lo.T, r_up.T, est.T             # (B, n_loc)
         neg_lo, _ = jax.lax.top_k(-r_lo, k)    # k smallest lower bounds / q
         neg_up, _ = jax.lax.top_k(-r_up, k)
-        neg_est, cand = jax.lax.top_k(-est, k)              # k best / query
+        # exact global step-2 statistics: (P, B, k) of per-shard
+        # k-smallest → the global kth smallest (order statistic of the
+        # union) — O(B·k·P) scalars on the wire, independent of n
+        gl = jnp.moveaxis(jax.lax.all_gather(-neg_lo, AXIS), 0, 1)
+        gu = jnp.moveaxis(jax.lax.all_gather(-neg_up, AXIS), 0, 1)
+        R_lo_k = kth_smallest(gl.reshape(gl.shape[0], -1), k)      # (B,)
+        R_up_k = kth_smallest(gu.reshape(gu.shape[0], -1), k)
+        # the SHARED composite key (query.lemma1_key) → the local top-k
+        # ARE the global top-k's shard members; the merge re-derives the
+        # identical key, so local and global ordering cannot drift
+        key_val, _, _, _ = lemma1_key(r_lo, r_up, est, R_lo_k=R_lo_k,
+                                      R_up_k=R_up_k, c=c, m_items=m_eff)
+        _, cand = jax.lax.top_k(-key_val, k)                # k best / query
         shard_id = jax.lax.axis_index(AXIS)
         gidx = cand.astype(jnp.int32) + shard_id * shard_n
         payload = jnp.stack(
-            [-neg_est,
+            [jnp.take_along_axis(est, cand, axis=-1),
              jnp.take_along_axis(r_lo, cand, axis=-1),
              jnp.take_along_axis(r_up, cand, axis=-1)], axis=-1)  # (B, k, 3)
         return -neg_lo, -neg_up, payload, gidx
 
+    delta_specs = ((P(AXIS, None), P(AXIS, None), P(AXIS), P())
+                   if with_delta else ())
     sharded = _shard_map(
         local_part, mesh=mesh,
         in_specs=(P(AXIS, None), P(AXIS, None), P(), P(AXIS, None),
-                  P(None, None)),
+                  P(None, None)) + delta_specs,
         out_specs=(P(None, AXIS), P(None, AXIS), P(None, AXIS, None),
                    P(None, AXIS)))
 
     @jax.jit
-    def batch_query_fn(rt: RankTable, users: jax.Array, qs: jax.Array
-                       ) -> QueryResult:
+    def batch_query_fn(rt: RankTable, users: jax.Array, qs: jax.Array,
+                       corr: DeltaCorrection = None) -> QueryResult:
+        delta = tuple(corr) if with_delta else ()
         all_lo, all_up, payload, gidx = sharded(
-            rt.thresholds, rt.table, rt.m, users, qs)       # (B, k·P, …)
+            rt.thresholds, rt.table, rt.m, users, qs, *delta)  # (B, k·P, …)
         est = payload[..., 0]
         r_lo = payload[..., 1]
         r_up = payload[..., 2]
@@ -159,7 +207,7 @@ def make_batch_query_fn(mesh: Mesh, k: int, n: int, c: float):
         R_up_k = kth_smallest(all_up, k)
         sel, guaranteed, accepted, pruned = lemma1_select(
             r_lo, r_up, est, R_lo_k=R_lo_k, R_up_k=R_up_k, k=k, c=c,
-            m_items=rt.m)
+            m_items=corr.selection_m() if with_delta else rt.m)
         return QueryResult(
             indices=jnp.take_along_axis(gidx, sel, axis=-1).astype(
                 jnp.int32),

@@ -7,7 +7,9 @@ name from the registry in `repro.core.backends`:
     backend="dense"    pure-jnp XLA (default; runs anywhere)
     backend="fused"    Pallas fused step-1 kernels (`repro.kernels`)
     backend="sharded"  mesh-sharded tree-merge (`repro.core.distributed`;
-                       pass `mesh=` or it flattens all visible devices)
+                       pass `mesh=` or it flattens all visible devices —
+                       builds AND rebuilds row-sharded end-to-end via
+                       `distributed.build_sharded`)
 
 The API is BATCHED-FIRST: `query_batch` takes a (B, d) block of queries
 and executes step 1 as one (n, d) × (d, B) MXU matmul plus a single
@@ -36,17 +38,51 @@ sits on top of this engine and coalesces async submissions into
 `query_batch` ticks. Custom backends register with
 `repro.core.backends.register_backend` (wrappers with `register_wrapper`)
 and become available here by name.
+
+Mutation API (PR 3 — dynamic index maintenance, `repro.index`)
+--------------------------------------------------------------
+Engines produced by `build(...)` retain their item set and are MUTABLE
+while queries keep flowing::
+
+    ids = eng.insert_items(new_vectors)    # absorbed, no rebuild
+    eng.delete_items(ids_to_drop)          # tombstoned, no rebuild
+    eng.upsert_users(vectors, indices)     # rows re-estimated in place
+    eng.upsert_users(vectors)              # append new users
+    eng.delete_users(indices)              # masked out of every result
+    eng.delta_stats()                      # rebuild-policy accounting
+    eng.rebuild()                          # full Algorithm 1 + hot swap
+
+State is EPOCH-VERSIONED: every mutation publishes a new immutable
+`IndexSnapshot` behind an atomic pointer (`repro.index.snapshot`), and
+each `query_batch` call executes entirely against the snapshot it grabbed
+— concurrent mutations or a rebuild hot-swap never tear an in-flight
+query or scheduler tick. Inserted/deleted items are fused into queries as
+an exact per-user additive correction (`repro.index.delta`; the Eq. (1)
+estimator is shifted, not degraded), valid while |delta|/m stays small.
+The rebuild policy — delta ratio ρ and the tombstoned-sample error
+budget — is enforced by `repro.index.MaintenanceLoop`, which rebuilds on
+this engine's configured backend off-thread and hot-swaps the new epoch;
+mutations that land mid-rebuild are re-based onto the new base during the
+swap, and the serving cache (keyed on snapshot array identity) drops
+every stale-epoch entry at the same instant.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Union
+import threading
+import time
+from typing import Any, Optional, Sequence, Union
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core import rank_table as rt_mod
 from repro.core.backends import QueryBackend, available_backends, get_backend
 from repro.core.types import QueryResult, RankTable, RankTableConfig
+from repro.index import delta as delta_mod
+from repro.index.maintenance import RebuildRecord
+from repro.index.snapshot import IndexSnapshot, SnapshotManager
 
 
 @dataclasses.dataclass
@@ -56,18 +92,55 @@ class ReverseKRanksEngine:
     config: RankTableConfig
     backend: Union[str, QueryBackend] = "dense"
     mesh: Any = None          # only consumed by the "sharded" backend
+    items: Any = None         # base item set; enables the mutation API
+    build_key: Any = None     # Algorithm-1 key (re-derives sampling state)
 
     def __post_init__(self):
         self._backend = get_backend(self.backend, mesh=self.mesh)
+        base = None
+        if self.items is not None:
+            if self.build_key is None:
+                raise ValueError(
+                    "items= requires build_key= (the Algorithm-1 PRNG key) "
+                    "to re-derive the index's sampling state; use "
+                    "ReverseKRanksEngine.build(...) which wires both")
+            base = delta_mod.BaseIndex.create(
+                self.items, np.arange(self.items.shape[0]), self.config,
+                self.build_key)
+        m_base = base.m_base if base is not None else int(self.rank_table.m)
+        snap = IndexSnapshot(
+            epoch=0, users=self.users, rank_table=self.rank_table,
+            config=self.config, base=base,
+            delta=delta_mod.DeltaState.empty(m_base, self.users.shape[0]),
+            corr=None)
+        self._snapshots = SnapshotManager(snap)
+        self._lock = threading.RLock()          # serializes mutations
+        self._rebuild_lock = threading.Lock()   # one rebuild in flight
+        self._next_item_id = m_base
 
     @classmethod
     def build(cls, users: jax.Array, items: jax.Array, cfg: RankTableConfig,
               key: jax.Array, backend: Union[str, QueryBackend] = "dense",
               mesh: Any = None) -> "ReverseKRanksEngine":
-        """Run Algorithm 1 and return a query-ready engine."""
-        rt = rt_mod.build_rank_table(users, items, cfg, key)
-        return cls(users=users, rank_table=rt, config=cfg, backend=backend,
-                   mesh=mesh)
+        """Run Algorithm 1 and return a query-ready, MUTABLE engine.
+
+        The build executes on the requested backend's substrate
+        (`QueryBackend.build_index`): "sharded" runs
+        `distributed.build_sharded`, keeping the table row-sharded
+        end-to-end instead of building on one device and re-sharding.
+        """
+        bk = get_backend(backend, mesh=mesh)
+        rt = bk.build_index(users, items, cfg, key)
+        # construct from the ORIGINAL (backend, mesh) spec so the engine's
+        # introspection fields survive (eng.mesh must not silently become
+        # None for a sharded engine built with an explicit mesh);
+        # __post_init__ re-resolves the backend, which is cheap — unless
+        # the caller passed an instance, which get_backend returns as-is
+        return cls(users=users, rank_table=rt, config=cfg,
+                   backend=bk if isinstance(backend, QueryBackend)
+                   else backend,
+                   mesh=None if isinstance(backend, QueryBackend) else mesh,
+                   items=items, build_key=key)
 
     @property
     def backend_name(self) -> str:
@@ -78,6 +151,35 @@ class ReverseKRanksEngine:
         """Names accepted by the `backend=` argument."""
         return available_backends()
 
+    # ------------------------------------------------------------ queries
+    def current_snapshot(self) -> IndexSnapshot:
+        """The live index generation — one atomic pointer read. Callers
+        that need several consistent reads (the micro-batching scheduler,
+        metrics) pin one snapshot and use `query_batch_at`."""
+        return self._snapshots.current()
+
+    def query_batch_at(self, snap: IndexSnapshot, qs: jax.Array, k: int,
+                       c: float) -> QueryResult:
+        """`query_batch` against a PINNED snapshot: the whole call —
+        bounds, delta correction, selection — sees exactly that epoch,
+        regardless of concurrent mutations or a rebuild hot-swap."""
+        if qs.ndim != 2:
+            raise ValueError(
+                f"query_batch expects (B, d) queries; got {qs.shape}")
+        if snap.corr is None:
+            # no delta kwarg on the static path: pre-PR-3 custom backends
+            # with a (rt, users, qs, *, k, c) signature keep working on
+            # never-mutated engines
+            return self._backend.query_batch(snap.rank_table, snap.users,
+                                             qs, k=k, c=c)
+        return self._backend.query_batch(snap.rank_table, snap.users, qs,
+                                         k=k, c=c, delta=snap.corr)
+
+    def query_batch(self, qs: jax.Array, k: int, c: float) -> QueryResult:
+        """Batched queries: qs is (B, d); every field gains a leading B
+        axis. One table pass serves the whole batch (see module doc)."""
+        return self.query_batch_at(self.current_snapshot(), qs, k, c)
+
     def query(self, q: jax.Array, k: int, c: float) -> QueryResult:
         """One query — the B = 1 case of `query_batch`."""
         if q.ndim != 1:
@@ -86,25 +188,256 @@ class ReverseKRanksEngine:
         res = self.query_batch(q[None, :], k, c)
         return jax.tree_util.tree_map(lambda x: x[0], res)
 
-    def query_batch(self, qs: jax.Array, k: int, c: float) -> QueryResult:
-        """Batched queries: qs is (B, d); every field gains a leading B
-        axis. One table pass serves the whole batch (see module doc)."""
-        if qs.ndim != 2:
+    # ---------------------------------------------------------- mutations
+    def _require_base(self, op: str) -> IndexSnapshot:
+        snap = self.current_snapshot()
+        if snap.base is None:
             raise ValueError(
-                f"query_batch expects (B, d) queries; got {qs.shape}")
-        return self._backend.query_batch(self.rank_table, self.users, qs,
-                                         k=k, c=c)
+                f"{op} requires the engine's base item set; construct with "
+                "ReverseKRanksEngine.build(...) (or pass items= and "
+                "build_key=)")
+        return snap
+
+    def _publish(self, snap: IndexSnapshot, *, users: jax.Array = None,
+                 rank_table: RankTable = None,
+                 delta: delta_mod.DeltaState = None,
+                 base: delta_mod.BaseIndex = None,
+                 epoch: Optional[int] = None) -> IndexSnapshot:
+        """Install the next epoch (caller holds the mutation lock)."""
+        users = snap.users if users is None else users
+        rank_table = snap.rank_table if rank_table is None else rank_table
+        delta = snap.delta if delta is None else delta
+        base = snap.base if base is None else base
+        m_base = base.m_base if base is not None else int(rank_table.m)
+        if (snap.corr is not None and users is snap.users
+                and base is snap.base
+                and delta.added_ids is snap.delta.added_ids
+                and delta.base_live is snap.delta.base_live):
+            # user-mask-only mutation (delete_users): the per-user delta
+            # score sets depend only on (users, item delta) — reuse them
+            # instead of re-running the O(n·|delta|·d) scoring + sorts
+            # under the mutation lock
+            corr = snap.corr._replace(
+                user_live=jnp.asarray(delta.user_live))
+        else:
+            corr = delta_mod.build_correction(users, base, delta, m_base)
+        new = IndexSnapshot(
+            epoch=snap.epoch + 1 if epoch is None else epoch, users=users,
+            rank_table=rank_table, config=snap.config, base=base,
+            delta=delta, corr=corr)
+        self._snapshots.publish(new)
+        # refresh the introspection fields; consistent PAIRS always come
+        # from current_snapshot(), these are best-effort mirrors
+        self.users = users
+        self.rank_table = rank_table
+        return new
+
+    def insert_items(self, vectors: jax.Array) -> np.ndarray:
+        """Insert item vectors; returns their stable ids. Absorbed by the
+        delta buffer — no rebuild, queries see them immediately (scored
+        exactly per user at query time)."""
+        vectors = jnp.atleast_2d(jnp.asarray(vectors))
+        if vectors.shape[1] != self.d:
+            raise ValueError(f"expected (*, {self.d}) item vectors; got "
+                             f"{vectors.shape}")
+        with self._lock:
+            snap = self._require_base("insert_items")
+            ids = np.arange(self._next_item_id,
+                            self._next_item_id + vectors.shape[0],
+                            dtype=np.int64)
+            self._next_item_id += vectors.shape[0]
+            self._publish(snap, delta=snap.delta.with_inserted(ids, vectors))
+        return ids
+
+    def delete_items(self, ids: Sequence[int]) -> None:
+        """Delete items by stable id (base items are tombstoned; items
+        inserted this epoch simply leave the buffer). Raises KeyError for
+        unknown or already-deleted ids."""
+        with self._lock:
+            snap = self._require_base("delete_items")
+            self._publish(snap,
+                          delta=snap.delta.with_deleted(ids, snap.base))
+
+    def upsert_users(self, vectors: jax.Array,
+                     indices: Optional[Sequence[int]] = None) -> np.ndarray:
+        """Replace user rows (indices given) or append new users (None).
+        The touched threshold/table rows are re-estimated against the
+        build's retained sample — the same per-row math as a from-scratch
+        rebuild — so upserts cost O(t·ω·s·d), not a rebuild."""
+        vectors = jnp.atleast_2d(jnp.asarray(vectors))
+        if vectors.shape[1] != self.d:
+            raise ValueError(f"expected (*, {self.d}) user vectors; got "
+                             f"{vectors.shape}")
+        with self._lock:
+            snap = self._require_base("upsert_users")
+            n0 = snap.users.shape[0]
+            if indices is None:
+                # fail a shape the backend cannot query BEFORE publishing
+                # (e.g. sharded: n must stay divisible by the mesh size)
+                self._backend.check_users_shape(n0 + vectors.shape[0])
+                idx = np.arange(n0, n0 + vectors.shape[0])
+                users_new = jnp.concatenate([snap.users, vectors])
+            else:
+                idx = np.asarray(list(indices), np.int64)
+                if idx.size != vectors.shape[0]:
+                    raise ValueError(f"{idx.size} indices for "
+                                     f"{vectors.shape[0]} vectors")
+                if idx.size and (idx.min() < 0 or idx.max() >= n0):
+                    raise IndexError(f"user indices out of range [0, {n0})")
+                if np.unique(idx).size != idx.size:
+                    # .at[].set with duplicate indices picks an arbitrary
+                    # winner INDEPENDENTLY for users and for the table
+                    # rows — the snapshot could pair one vector with the
+                    # other's recomputed rows
+                    raise ValueError("duplicate user indices in upsert")
+                users_new = snap.users.at[jnp.asarray(idx)].set(vectors)
+            thr_rows, tab_rows = self._user_rows(vectors, snap.base)
+            rt = snap.rank_table
+            st = rt.thresholds.dtype
+            if indices is None:
+                thr = jnp.concatenate([rt.thresholds, thr_rows.astype(st)])
+                tab = jnp.concatenate([rt.table, tab_rows.astype(st)])
+            else:
+                j = jnp.asarray(idx)
+                thr = rt.thresholds.at[j].set(thr_rows.astype(st))
+                tab = rt.table.at[j].set(tab_rows.astype(st))
+            self._publish(
+                snap, users=users_new,
+                rank_table=RankTable(thresholds=thr, table=tab, m=rt.m),
+                delta=snap.delta.with_users(touched=tuple(int(i)
+                                                          for i in idx),
+                                            n_users=users_new.shape[0]))
+        return idx
+
+    def delete_users(self, indices: Sequence[int]) -> None:
+        """Mask users out of every future result (their rows remain until
+        the next rebuild compacts nothing — masking is O(1) per query)."""
+        idx = np.asarray(list(indices), np.int64)
+        with self._lock:
+            snap = self.current_snapshot()
+            n = snap.users.shape[0]
+            if idx.size and (idx.min() < 0 or idx.max() >= n):
+                raise IndexError(f"user indices out of range [0, {n})")
+            self._publish(snap, delta=snap.delta.with_users(
+                dead=tuple(int(i) for i in idx)))
+
+    def _user_rows(self, vectors: jax.Array, base: delta_mod.BaseIndex):
+        cfg = self.config
+        return rt_mod.recompute_user_rows(
+            vectors, base.samples, base.weights, cfg,
+            items=base.items if cfg.threshold_mode == "exact" else None,
+            max_norm=base.max_norm)
+
+    # ------------------------------------------------- rebuild / lifecycle
+    def delta_stats(self) -> delta_mod.DeltaStats:
+        """Delta-buffer accounting (drives `MaintenancePolicy`)."""
+        snap = self.current_snapshot()
+        return snap.delta.stats(snap.base)
+
+    def live_items(self) -> jax.Array:
+        return self._require_base("live_items").live_items()
+
+    def live_item_ids(self) -> np.ndarray:
+        return self._require_base("live_item_ids").live_item_ids()
+
+    def rebuild(self, reason: str = "manual") -> Optional[RebuildRecord]:
+        """Full Algorithm 1 over the live item set on this engine's
+        backend, then an atomic hot-swap to the new epoch.
+
+        The build runs OFF the mutation lock (serving and mutations
+        continue); the swap re-bases any delta that accumulated while
+        building — residual inserts/deletes carry over, user rows
+        upserted or appended mid-build are re-estimated against the new
+        sample — so no mutation is ever lost to a rebuild. Returns None
+        if another rebuild is already in flight.
+        """
+        if not self._rebuild_lock.acquire(blocking=False):
+            return None
+        try:
+            with self._lock:
+                snap = self._require_base("rebuild")
+            stats = snap.delta.stats(snap.base)
+            live_items = snap.live_items()
+            live_ids = snap.live_item_ids()
+            t0 = time.monotonic()
+            rt_new = self._backend.build_index(snap.users, live_items,
+                                               self.config, self.build_key)
+            base_new = delta_mod.BaseIndex.create(live_items, live_ids,
+                                                  self.config,
+                                                  self.build_key)
+            jax.block_until_ready(rt_new.table)
+            build_s = time.monotonic() - t0
+            t1 = time.monotonic()
+            with self._lock:
+                now = self.current_snapshot()
+                users_now = now.users
+                thr, tab = rt_new.thresholds, rt_new.table
+                n_built, n_now = snap.users.shape[0], users_now.shape[0]
+                # Stale rows = touched users whose VECTOR changed since
+                # capture, plus rows appended mid-build. Comparing
+                # vectors (not set-differencing touched_users) matters:
+                # a user upserted both before capture and again
+                # mid-build is in both touched sets, and a difference
+                # would silently keep its capture-time row while
+                # users_now holds the newer vector.
+                cand = sorted(set(now.delta.touched_users))
+                existing = [i for i in cand if i < n_built]
+                stale = [i for i in cand if i >= n_built]
+                if existing:
+                    je = jnp.asarray(existing)
+                    same = np.asarray(jnp.all(
+                        users_now[je] == snap.users[je], axis=1))
+                    stale += [i for i, s in zip(existing, same) if not s]
+                touched = sorted(set(stale) | set(range(n_built, n_now)))
+                if n_now > n_built:     # users appended mid-build
+                    grow = (n_now - n_built, thr.shape[1])
+                    thr = jnp.concatenate([thr, jnp.zeros(grow, thr.dtype)])
+                    tab = jnp.concatenate([tab, jnp.ones(grow, tab.dtype)])
+                if touched:             # rows mutated mid-build
+                    rows_thr, rows_tab = self._user_rows(
+                        users_now[jnp.asarray(touched)], base_new)
+                    j = jnp.asarray(np.asarray(touched))
+                    thr = thr.at[j].set(rows_thr.astype(thr.dtype))
+                    tab = tab.at[j].set(rows_tab.astype(tab.dtype))
+                delta_new = delta_mod.residual_after_rebuild(
+                    snap.base, now.delta, live_ids)
+                swapped = self._publish(
+                    now, users=users_now,
+                    rank_table=RankTable(thresholds=thr, table=tab,
+                                         m=rt_new.m),
+                    delta=delta_new, base=base_new)
+            # epoch captured from the published snapshot, not self.epoch:
+            # a mutation racing in after the lock releases must not be
+            # misattributed to this swap
+            return RebuildRecord(
+                epoch_before=snap.epoch, epoch_after=swapped.epoch,
+                reason=reason, build_s=build_s,
+                swap_s=time.monotonic() - t1, stats=stats)
+        finally:
+            self._rebuild_lock.release()
+
+    # ------------------------------------------------------ introspection
+    @property
+    def epoch(self) -> int:
+        return self.current_snapshot().epoch
 
     @property
     def n(self) -> int:
-        return self.users.shape[0]
+        return self.current_snapshot().users.shape[0]
 
     @property
     def d(self) -> int:
-        return self.users.shape[1]
+        return self.current_snapshot().users.shape[1]
 
     def memory_bytes(self) -> int:
-        """Index footprint (thresholds + table), per §4.2's O(n) claim."""
-        rt = self.rank_table
-        return int(rt.thresholds.size * rt.thresholds.dtype.itemsize
-                   + rt.table.size * rt.table.dtype.itemsize)
+        """Index footprint (thresholds + table + delta correction), per
+        §4.2's O(n) claim — the delta adds O(n·|delta|) until rebuild."""
+        snap = self.current_snapshot()
+        rt = snap.rank_table
+        total = int(rt.thresholds.size * rt.thresholds.dtype.itemsize
+                    + rt.table.size * rt.table.dtype.itemsize)
+        if snap.corr is not None:
+            total += int(snap.corr.add_scores.size * 4
+                         + snap.corr.del_scores.size * 4
+                         + snap.corr.user_live.size)
+        return total

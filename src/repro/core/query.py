@@ -32,7 +32,8 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import QueryResult, RankTable, kth_smallest
+from repro.core.types import DeltaCorrection, QueryResult, RankTable, \
+    kth_smallest
 
 # §Perf H4b (REFUTED): a gather-based bisection was hypothesized to touch
 # only ~log2(τ)·n elements instead of streaming the full (n, τ) rows.
@@ -151,6 +152,35 @@ def bound_ranks_batch(rt: RankTable, users: jax.Array, qs: jax.Array
     return r_lo.T, r_up.T, est.T
 
 
+def lemma1_key(r_lo: jax.Array, r_up: jax.Array, est: jax.Array, *,
+               R_lo_k: jax.Array, R_up_k: jax.Array, c: float,
+               m_items: jax.Array
+               ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """The §4.3 composite selection key (smaller = better), plus the
+    guaranteed/accepted/pruned masks it is built from.
+
+    THE single definition of the selection ordering: `lemma1_select`
+    (dense/fused global selection) and the sharded per-shard candidate
+    pick (`distributed.make_batch_query_fn`) both call it, so the local
+    top-k and the global merge cannot drift apart.
+
+    Class separation: `big = m_items + 2` strictly dominates any static
+    est ∈ [1, m+1]. On the DELTA path the unclipped shifted estimate
+    spans [1 − n_del, m_base + 1 + n_add] instead, so delta callers pass
+    the WIDENED `DeltaCorrection.selection_m` (≥ that range's width) as
+    `m_items` — with a bare m'+2 offset and ≥ 2 deletions, a U_temp user
+    at the top of the est range could out-key a pruned user at the
+    bottom, inverting the class order.
+    """
+    guaranteed = c * R_lo_k >= R_up_k
+    accepted = r_up <= (c * R_lo_k)[..., None]              # Lemma 1 (1)
+    pruned = r_lo > R_up_k[..., None]                       # Lemma 1 (2)
+    prio = jnp.where(accepted, 0.0, jnp.where(pruned, 2.0, 1.0))
+    big = (m_items + 2).astype(jnp.float32)
+    key_val = jnp.where(guaranteed[..., None], est, prio * big + est)
+    return key_val, guaranteed, accepted, pruned
+
+
 def lemma1_select(r_lo: jax.Array, r_up: jax.Array, est: jax.Array, *,
                   R_lo_k: jax.Array, R_up_k: jax.Array, k: int, c: float,
                   m_items: jax.Array
@@ -165,15 +195,9 @@ def lemma1_select(r_lo: jax.Array, r_up: jax.Array, est: jax.Array, *,
     Returns (selected indices into the candidate axis, guaranteed mask,
     accepted mask, pruned mask).
     """
-    guaranteed = c * R_lo_k >= R_up_k
-    accepted = r_up <= (c * R_lo_k)[..., None]              # Lemma 1 (1)
-    pruned = r_lo > R_up_k[..., None]                       # Lemma 1 (2)
-
-    # Priorities only apply in the non-guaranteed case; `m + 2` strictly
-    # dominates any est ∈ [1, m+1].
-    prio = jnp.where(accepted, 0.0, jnp.where(pruned, 2.0, 1.0))
-    big = (m_items + 2).astype(jnp.float32)
-    key_val = jnp.where(guaranteed[..., None], est, prio * big + est)
+    key_val, guaranteed, accepted, pruned = lemma1_key(
+        r_lo, r_up, est, R_lo_k=R_lo_k, R_up_k=R_up_k, c=c,
+        m_items=m_items)
     _, indices = jax.lax.top_k(-key_val, k)
     return indices.astype(jnp.int32), guaranteed, accepted, pruned
 
@@ -215,6 +239,48 @@ def query_batch(rt: RankTable, users: jax.Array, qs: jax.Array, k: int,
     scores = (users @ qs.T).astype(jnp.float32)             # step 1: O(nd·B)
     r_lo, r_up, est = lookup_bounds_batch(rt, scores)
     return select_topk(r_lo.T, r_up.T, est.T, k=k, c=c, m_items=rt.m)
+
+
+@jax.jit
+def _delta_bounds_batch(rt: RankTable, users: jax.Array, qs: jax.Array,
+                        corr: DeltaCorrection
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Step 1 + delta correction for a (B, d) block → corrected
+    (r↓, r↑, est), each (B, n)."""
+    from repro.core import rank_table as rt_mod
+    scores = (users @ qs.T).astype(jnp.float32)             # (n, B)
+    r_lo, r_up, est = lookup_bounds_batch(rt, scores)
+    r_lo, r_up, est = rt_mod.apply_delta_corrections(scores, r_lo, r_up,
+                                                     est, corr)
+    return r_lo.T, r_up.T, est.T
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _select_topk_jit(r_lo, r_up, est, m_items, k: int, c: float
+                     ) -> QueryResult:
+    return select_topk(r_lo, r_up, est, k=k, c=c, m_items=m_items)
+
+
+def query_batch_delta(rt: RankTable, users: jax.Array, qs: jax.Array,
+                      corr: DeltaCorrection, k: int, c: float) -> QueryResult:
+    """`query_batch` over a mutated index: the same one-pass batched step 1
+    plus the delta-buffer correction (`rank_table.apply_delta_corrections`)
+    between the table lookup and the selection. The correction reuses the
+    step-1 score matrix, so the only extra work is the O(n·B·log|delta|)
+    counting pass; selection uses the delta-widened class offset
+    `corr.selection_m()` (see `lemma1_key`).
+
+    TWO jit regions, deliberately (unlike the static one-region
+    `query_batch`): selection fans the corrected bounds out to ~6
+    consumers (two order statistics, the composite key, the accept/prune
+    sums), and XLA CPU re-fuses the whole O(n·(τ + |delta|)) bound/count
+    producer chain into each of them — measured 1.8× end-to-end
+    (optimization_barrier does not stop it). The region break materializes
+    the corrected (B, n) bounds ONCE; the second dispatch costs µs and
+    holds the delta path at ≤ 1.3× the static query (perf_engine
+    --updates acceptance)."""
+    r_lo, r_up, est = _delta_bounds_batch(rt, users, qs, corr)
+    return _select_topk_jit(r_lo, r_up, est, corr.selection_m(), k, c)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))

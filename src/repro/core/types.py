@@ -81,6 +81,62 @@ class RankTable(NamedTuple):
         return self.thresholds.shape[1]
 
 
+class DeltaCorrection(NamedTuple):
+    """Query-time correction for a mutated index (see `repro.index`).
+
+    The rank table is built over a frozen base item set P₀ and user set U₀;
+    streaming mutations are absorbed by a delta buffer and FUSED into the
+    estimated rank at query time as a bounded additive correction:
+
+        r(q, u, P') = r(q, u, P₀) + #{a ∈ A : u·a > u·q}
+                                  − #{p ∈ D : u·p > u·q}
+
+    for P' = (P₀ \\ D) ∪ A. Both correction terms are computed EXACTLY
+    from per-user scores against the (small) delta item sets, so the
+    Eq. (1) estimator's error is untouched by the shift — the only delta
+    degradation is the stale sampling noise of tombstoned sample
+    positions, which the maintenance policy budgets (`repro.index.delta`).
+
+    All fields are device arrays (the tuple is a pytree and flows through
+    jit / shard_map); the per-row score sets are pre-sorted so the query-
+    time count is one vmapped searchsorted — O(B·log|delta|) per user row
+    on top of the static path.
+
+    add_scores: (n, n_add) float32, ascending per row — u_i·a for every
+                live inserted item a ∈ A.
+    del_scores: (n, n_del) float32, ascending per row — u_i·p for every
+                tombstoned base item p ∈ D.
+    user_live:  (n,) bool — False rows are deleted users; their bounds are
+                forced past every admissible selection key.
+    m_new:      () int32 — |P'| = |P₀| − |D| + |A|, the live item count
+                (replaces `RankTable.m` in the selection).
+    """
+
+    add_scores: jax.Array
+    del_scores: jax.Array
+    user_live: jax.Array
+    m_new: jax.Array
+
+    @property
+    def n_add(self) -> int:
+        return self.add_scores.shape[1]
+
+    @property
+    def n_del(self) -> int:
+        return self.del_scores.shape[1]
+
+    def selection_m(self) -> jax.Array:
+        """The `m_items` to pass into the §4.3 composite selection key on
+        the delta path (see `query.lemma1_key`): the class-separation
+        offset must dominate the SHIFTED estimate range
+        [1 − n_del, m_base + 1 + n_add], whose width is
+        m_new + 2·n_del ≥ width for the padded column counts — the plain
+        live count m' is not enough once deletions widen the range
+        downward. Every backend derives it from this one method, so the
+        key stays identical across dense/fused/sharded."""
+        return self.m_new + 2 * self.n_del
+
+
 class QueryResult(NamedTuple):
     """Output of one c-approximate reverse k-ranks query (§4.3).
 

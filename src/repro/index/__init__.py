@@ -1,0 +1,32 @@
+"""Dynamic index maintenance: streaming updates under live serving.
+
+Three pieces turn the static Algorithm-1 index into a mutable one that
+serves while it changes (see ROADMAP "Dynamic index maintenance"):
+
+  delta       — `DeltaState` / `build_correction`: inserts, item
+                tombstones, user upserts/deletions absorbed WITHOUT a
+                rebuild and fused into every query as an exact additive
+                correction, with stale-sample error accounting.
+  snapshot    — `IndexSnapshot` / `SnapshotManager`: immutable
+                epoch-versioned generations behind an atomic pointer, so
+                scheduler ticks and in-flight futures are never torn by
+                a swap.
+  maintenance — `MaintenancePolicy` / `MaintenanceLoop`: background
+                rebuild (on the engine's configured backend) when the
+                delta ratio or the stale-sample error budget is
+                exceeded, hot-swapped without pausing serving.
+
+The mutation API itself lives on `ReverseKRanksEngine`
+(insert_items / delete_items / upsert_users / delete_users / rebuild).
+"""
+from repro.index.delta import (BaseIndex, DeltaState, DeltaStats,
+                               build_correction, residual_after_rebuild)
+from repro.index.maintenance import (MaintenanceLoop, MaintenancePolicy,
+                                     RebuildRecord)
+from repro.index.snapshot import IndexSnapshot, SnapshotManager
+
+__all__ = [
+    "BaseIndex", "DeltaState", "DeltaStats", "build_correction",
+    "residual_after_rebuild", "IndexSnapshot", "SnapshotManager",
+    "MaintenanceLoop", "MaintenancePolicy", "RebuildRecord",
+]

@@ -1,0 +1,153 @@
+"""Background index maintenance: rebuild policy + off-thread hot-swap.
+
+The delta buffer keeps queries exact-in-expectation while it is small;
+past a point the per-query correction cost and the tombstoned-sample
+noise grow without bound. `MaintenanceLoop` watches the engine's
+`DeltaStats` and, when the policy triggers, runs a FULL Algorithm 1
+rebuild on the engine's configured backend (the sharded backend builds
+row-sharded end-to-end via `distributed.build_sharded`) off the serving
+threads, then hot-swaps the new epoch through the snapshot manager.
+Serving never pauses: queries keep executing against the old snapshot
+until the swap's single pointer assignment, and mutations that land while
+the rebuild is running are re-based onto the new epoch during the swap
+(`ReverseKRanksEngine.rebuild`).
+
+Policy knobs:
+
+  max_delta_ratio    — rebuild when (inserts + deletes) / m_base exceeds
+                       the ρ bound the query-time correction is budgeted
+                       for (both correction cost and clamp slack scale
+                       with it).
+  max_stale_fraction — rebuild when the tombstoned sample weight
+                       (Eq. (1) mass estimated by samples whose item no
+                       longer exists — pure noise) exceeds this fraction
+                       of m_base: the rank-error budget.
+  min_interval_s     — floor between rebuilds, so a mutation storm
+                       cannot wedge the loop into back-to-back builds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import threading
+import time
+from typing import List, Optional
+
+from repro.index.delta import DeltaStats
+
+
+@dataclasses.dataclass(frozen=True)
+class MaintenancePolicy:
+    max_delta_ratio: float = 0.05
+    max_stale_fraction: float = 0.02
+    min_interval_s: float = 0.0
+
+    def trigger(self, stats: DeltaStats) -> Optional[str]:
+        """Reason string when `stats` demands a rebuild, else None."""
+        if stats.delta_ratio > self.max_delta_ratio:
+            return (f"delta_ratio {stats.delta_ratio:.4f} > "
+                    f"{self.max_delta_ratio}")
+        if stats.stale_fraction > self.max_stale_fraction:
+            return (f"stale_fraction {stats.stale_fraction:.4f} > "
+                    f"{self.max_stale_fraction}")
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class RebuildRecord:
+    """One completed rebuild + swap, as observed by the engine."""
+
+    epoch_before: int       # snapshot the rebuild was captured from
+    epoch_after: int        # epoch published by the swap
+    reason: str
+    build_s: float          # off-lock Algorithm 1 wall time
+    swap_s: float           # under-lock re-base + publish wall time
+    stats: DeltaStats       # delta accounting at capture time
+
+
+class MaintenanceLoop:
+    """Poll `engine.delta_stats()` and rebuild when the policy triggers.
+
+    Usage::
+
+        with MaintenanceLoop(eng, policy=MaintenancePolicy(0.05)) as ml:
+            ... engine keeps serving; inserts/deletes stream in ...
+        print(ml.rebuilds)          # [RebuildRecord, ...]
+
+    One daemon thread; `wake()` forces an immediate policy check (used by
+    tests and by callers that know they just crossed a threshold).
+    `close()` stops the loop; a rebuild in flight completes its swap.
+
+    A FAILING rebuild must not kill the thread — a dead maintenance loop
+    serves an ever-growing delta with zero indication. Exceptions are
+    caught, logged, appended to `failures` (bounded: last
+    `_MAX_FAILURES`), and the loop keeps polling; after a failure the
+    next attempt waits `failure_backoff_s` (a persistently failing build
+    must not be retried every poll tick — each doomed attempt is a full
+    Algorithm 1 pass).
+    """
+
+    _MAX_FAILURES = 32
+
+    def __init__(self, engine, *, policy: MaintenancePolicy = None,
+                 poll_ms: float = 50.0, failure_backoff_s: float = 5.0):
+        self.engine = engine
+        self.policy = policy if policy is not None else MaintenancePolicy()
+        self.poll_ms = float(poll_ms)
+        self.failure_backoff_s = float(failure_backoff_s)
+        self.rebuilds: List[RebuildRecord] = []
+        self.failures: List[BaseException] = []
+        self._backoff_until = -float("inf")
+        self._cond = threading.Condition()
+        self._stop = False
+        self._last_rebuild_t = -float("inf")
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="index-maintenance")
+        self._thread.start()
+
+    def wake(self) -> None:
+        with self._cond:
+            self._cond.notify_all()
+
+    def close(self) -> None:
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+        self._thread.join()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def _loop(self):
+        while True:
+            with self._cond:
+                if self._stop:
+                    return
+                self._cond.wait(timeout=self.poll_ms / 1e3)
+                if self._stop:
+                    return
+            now = time.monotonic()
+            if (now - self._last_rebuild_t < self.policy.min_interval_s
+                    or now < self._backoff_until):
+                continue
+            reason = self.policy.trigger(self.engine.delta_stats())
+            if reason is None:
+                continue
+            try:
+                record = self.engine.rebuild(reason=reason)
+            except Exception as e:      # keep maintaining; surface it
+                self.failures.append(e)
+                del self.failures[:-self._MAX_FAILURES]
+                self._backoff_until = (time.monotonic()
+                                       + self.failure_backoff_s)
+                logging.getLogger(__name__).exception(
+                    "index rebuild failed (%s); maintenance loop "
+                    "continues after %.1fs backoff", reason,
+                    self.failure_backoff_s)
+                record = None
+            self._last_rebuild_t = time.monotonic()
+            if record is not None:
+                self.rebuilds.append(record)

@@ -1,0 +1,122 @@
+"""Epoch-versioned index snapshots with atomic hot-swap under live serving.
+
+A snapshot is ONE immutable, internally consistent generation of the
+index: (users, rank table, delta buffer, pre-built query correction). The
+manager holds the current generation behind an atomic pointer; mutations
+and rebuilds PUBLISH a new generation, they never edit a live one.
+
+Concurrency contract (the seam between core and serve):
+
+  * readers — `engine.query_batch` and every `MicroBatcher` tick — grab
+    the pointer ONCE (`current()`) and execute entirely against that
+    snapshot object. A swap during execution is invisible: the old
+    generation's arrays are immutable and stay alive until the last
+    reader drops them, so in-flight futures are never torn;
+  * writers serialize on the engine's mutation lock and publish strictly
+    increasing epochs; `publish` is a single reference assignment (atomic
+    under the GIL), so there is no window where a reader can observe a
+    half-installed generation;
+  * the serving cache keys its generation on the snapshot's array
+    identities (table/users/delta), so a swap invalidates every cached
+    entry from older epochs — stale-epoch hits are structurally
+    impossible, not merely unlikely.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import DeltaCorrection, RankTable, RankTableConfig
+from repro.index.delta import BaseIndex, DeltaState
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSnapshot:
+    """One immutable index generation (see module docstring).
+
+    `corr` is the pre-materialized query-time correction for `delta`
+    (None when the delta is empty — the static fast path); `base` is None
+    for engines constructed without their item set, which can serve and
+    mask users but not mutate items.
+    """
+
+    epoch: int
+    users: jax.Array
+    rank_table: RankTable
+    config: RankTableConfig
+    base: Optional[BaseIndex]
+    delta: DeltaState
+    corr: Optional[DeltaCorrection]
+
+    @property
+    def n(self) -> int:
+        return self.users.shape[0]
+
+    @property
+    def m_live(self) -> int:
+        if self.corr is not None:
+            return int(self.corr.m_new)
+        return int(self.rank_table.m)
+
+    def live_item_ids(self) -> np.ndarray:
+        """Stable ids of the live item set, base-then-inserted order."""
+        if self.base is None:
+            raise ValueError("engine was constructed without its item set; "
+                             "build it with ReverseKRanksEngine.build(...) "
+                             "to enable item-level operations")
+        return np.concatenate([self.base.item_ids[self.delta.base_live],
+                               self.delta.added_ids])
+
+    def live_items(self) -> jax.Array:
+        """The live item vectors, ordered like `live_item_ids` — exactly
+        the array a from-scratch rebuild runs Algorithm 1 over."""
+        if self.base is None:
+            raise ValueError("engine was constructed without its item set; "
+                             "build it with ReverseKRanksEngine.build(...) "
+                             "to enable item-level operations")
+        kept = self.base.items[jnp.asarray(
+            np.flatnonzero(self.delta.base_live))]
+        if self.delta.added_items is None:
+            return kept
+        return jnp.concatenate([kept, self.delta.added_items])
+
+
+class SnapshotManager:
+    """Atomic holder of the current `IndexSnapshot` generation."""
+
+    def __init__(self, initial: IndexSnapshot):
+        self._current = initial
+        self._lock = threading.Lock()
+        self._swap_log: List[Tuple[int, float]] = []
+
+    def current(self) -> IndexSnapshot:
+        """The live generation — a single atomic reference read; callers
+        use the returned object for a whole operation (never re-read
+        mid-flight)."""
+        return self._current
+
+    def publish(self, snap: IndexSnapshot) -> IndexSnapshot:
+        """Install a new generation. Epochs must strictly increase —
+        writers are expected to serialize on the engine mutation lock;
+        this assertion catches a lost-update race instead of silently
+        rolling the index back."""
+        with self._lock:
+            if snap.epoch <= self._current.epoch:
+                raise RuntimeError(
+                    f"stale publish: epoch {snap.epoch} <= current "
+                    f"{self._current.epoch} (concurrent writers must "
+                    "serialize on the engine mutation lock)")
+            self._swap_log.append((snap.epoch, time.monotonic()))
+            self._current = snap
+        return snap
+
+    @property
+    def swaps(self) -> int:
+        with self._lock:
+            return len(self._swap_log)

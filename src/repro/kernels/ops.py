@@ -146,3 +146,9 @@ def query_fused_batch(rt: RankTable, users: jax.Array, qs: jax.Array,
     r_lo, r_up, est = bound_ranks_batched(users, qs, rt.thresholds,
                                           rt.table, m=m)
     return select_topk(r_lo, r_up, est, k=k, c=c, m_items=rt.m)
+
+
+# NOTE: there is deliberately no query_fused_*_delta here — the fused
+# delta path is the generic `QueryBackend._delta_query` composed over
+# `bound_ranks_batched` (see `repro.core.backends.FusedBackend`), so the
+# delta pipeline exists exactly once.

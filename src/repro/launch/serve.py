@@ -11,7 +11,18 @@ coalesces them into --max-batch-sized ticks dispatched through
 latency-vs-throughput knob (how long a partial tick waits to fill).
 --backend accepts any registry name (dense|fused|sharded) plus wrapped
 specs such as "cached:fused" (within-tick dedupe + cross-tick per-query
-LRU; see repro.serve.cache). --no-eval-exact skips the oracle pass.
+LRU; see repro.serve.cache). --max-depth bounds the queue (fail-fast
+back-pressure). --no-eval-exact skips the oracle pass.
+
+--update-stream replays a live item-churn workload WHILE serving: every
+--update-every submissions a batch of --insert-batch fresh items is
+inserted and --delete-batch live items are deleted (absorbed by the delta
+buffer, `repro.index`), with a background `MaintenanceLoop` rebuilding
+and hot-swapping the index whenever the delta ratio or stale-sample
+budget is exceeded — queries keep flowing through every swap (each tick
+pins one epoch; `TickStats.epoch` shows the generations served). The
+oracle pass then scores post-churn queries against the FINAL live item
+set.
 """
 from __future__ import annotations
 
@@ -28,7 +39,8 @@ from repro.core.types import RankTableConfig
 from repro.data.pipeline import synthetic_embeddings
 from repro.data.mf import MFConfig, embeddings, train_mf
 from repro.data.pipeline import synthetic_ratings
-from repro.serve import MicroBatcher
+from repro.index import MaintenanceLoop, MaintenancePolicy
+from repro.serve import MicroBatcher, QueueFull
 
 
 def build_embeddings(args):
@@ -63,6 +75,21 @@ def main():
     ap.add_argument("--max-wait-ms", type=float, default=2.0,
                     help="latency/throughput knob: how long a partial tick "
                          "waits for more queries before dispatching")
+    ap.add_argument("--max-depth", type=int, default=None,
+                    help="admission bound: submits beyond this queue depth "
+                         "fail fast with QueueFull (default: unbounded)")
+    ap.add_argument("--update-stream", action="store_true",
+                    help="replay streaming item inserts/deletes while "
+                         "serving, with background rebuild + hot-swap")
+    ap.add_argument("--update-every", type=int, default=16,
+                    help="queries between update batches")
+    ap.add_argument("--insert-batch", type=int, default=8)
+    ap.add_argument("--delete-batch", type=int, default=4)
+    ap.add_argument("--rebuild-delta-ratio", type=float, default=0.05,
+                    help="maintenance policy: rebuild past this |delta|/m")
+    ap.add_argument("--rebuild-stale-frac", type=float, default=0.02,
+                    help="maintenance policy: rebuild past this tombstoned-"
+                         "sample weight fraction (rank-error budget)")
     ap.add_argument("--kernels", action="store_true",
                     help="deprecated alias for --backend fused")
     ap.add_argument("--mf", action="store_true",
@@ -102,30 +129,89 @@ def main():
     B = max(1, min(args.max_batch, args.queries))
     res = eng.query_batch(qs[:B], k=args.k, c=args.c)
     jax.block_until_ready(res.indices)
-    with MicroBatcher(eng, max_batch=B,
-                      max_wait_ms=args.max_wait_ms) as mb:
-        t0 = time.time()
-        futs = [mb.submit(q, args.k, args.c) for q in qs]
-        results = [f.result() for f in futs]
-        elapsed = time.time() - t0
-        st = mb.stats()
-    print(f"serve: {elapsed/args.queries*1e3:.2f} ms/query wall "
+
+    maint = None
+    if args.update_stream:
+        maint = MaintenanceLoop(
+            eng, policy=MaintenancePolicy(
+                max_delta_ratio=args.rebuild_delta_ratio,
+                max_stale_fraction=args.rebuild_stale_frac),
+            poll_ms=10.0)
+    ukey = jax.random.PRNGKey(args.seed + 17)
+    rng = np.random.default_rng(args.seed + 17)
+    try:
+        with MicroBatcher(eng, max_batch=B, max_wait_ms=args.max_wait_ms,
+                          max_depth=args.max_depth) as mb:
+            t0 = time.time()
+            futs, accepted = [], []
+            for i, q in enumerate(qs):
+                if (args.update_stream and i
+                        and i % args.update_every == 0):
+                    # live churn: fresh items in, random live items out —
+                    # absorbed by the delta buffer while futures resolve;
+                    # the maintenance loop hot-swaps rebuilds in the
+                    # background when the policy triggers.
+                    ukey, sub = jax.random.split(ukey)
+                    eng.insert_items(jax.random.normal(
+                        sub, (args.insert_batch, eng.d), jnp.float32))
+                    live = eng.live_item_ids()
+                    drop = rng.choice(live, size=min(args.delete_batch,
+                                                     live.size - 1),
+                                      replace=False)
+                    eng.delete_items(drop)
+                try:
+                    futs.append(mb.submit(q, args.k, args.c))
+                    accepted.append(i)
+                except QueueFull:
+                    pass        # fail-fast back-pressure; counted in stats
+            results = [f.result() for f in futs]
+            elapsed = time.time() - t0
+            st = mb.stats()
+            epochs = sorted({t.epoch for t in mb.tick_log})
+    finally:
+        if maint is not None:
+            maint.close()
+    print(f"serve: {elapsed/max(len(results), 1)*1e3:.2f} ms/query wall "
           f"({eng.backend_name} backend, max_batch={B}, "
           f"max_wait_ms={args.max_wait_ms})")
     print(f"  ticks: {st}")
+    if args.update_stream:
+        print(f"  update stream: final epoch {eng.epoch}, "
+              f"{len(maint.rebuilds)} rebuild(s), epochs served {epochs}, "
+              f"delta now: {eng.delta_stats()}")
+        for r in maint.rebuilds:
+            print(f"    rebuild {r.epoch_before}->{r.epoch_after} "
+                  f"[{r.reason}] build {r.build_s:.2f}s "
+                  f"swap {r.swap_s*1e3:.1f}ms")
 
     if args.eval_exact:
+        # update-stream results span epochs; score POST-CHURN queries
+        # against the FINAL live item set (a fresh engine pass, so every
+        # scored result was computed on the state it is judged against).
+        eval_items = eng.live_items() if args.update_stream else items
+        n_eval = (min(args.queries, 20) if args.update_stream
+                  else min(len(results), 20))
+        if args.update_stream:
+            post = eng.query_batch(qs[:n_eval], args.k, args.c)
+            eval_pairs = [
+                (qs[i], jax.tree_util.tree_map(lambda x, i=i: x[i], post))
+                for i in range(n_eval)]
+        else:
+            # pair each served result with ITS query (back-pressure may
+            # have rejected some submissions)
+            eval_pairs = [(qs[accepted[j]], results[j])
+                          for j in range(n_eval)]
         accs, ratios = [], []
-        for i in range(min(args.queries, 20)):
-            truth = np.asarray(exact_ranks(users, items, qs[i]))
-            ex_idx, _ = reverse_k_ranks(users, items, qs[i], args.k)
-            r = results[i]                  # served through the scheduler
+        for q_i, r in eval_pairs:
+            truth = np.asarray(exact_ranks(users, eval_items, q_i))
+            ex_idx, _ = reverse_k_ranks(users, eval_items, q_i, args.k)
             accs.append(metrics.accuracy(np.asarray(r.indices),
                                          np.asarray(ex_idx), truth, args.c))
             ratios.append(metrics.overall_ratio(
                 np.asarray(r.indices), np.asarray(ex_idx), truth))
         print(f"accuracy {np.mean(accs):.4f}  overall-ratio "
-              f"{np.mean(ratios):.4f}  (k={args.k}, c={args.c})")
+              f"{np.mean(ratios):.4f}  (k={args.k}, c={args.c}"
+              f"{', post-churn state' if args.update_stream else ''})")
 
 
 if __name__ == "__main__":

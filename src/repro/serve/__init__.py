@@ -21,8 +21,8 @@ Typical serving stack (hot-query dedupe under micro-batching)::
         res = fut.result()                 # per-query QueryResult
 """
 from repro.serve.cache import CachingBackend
-from repro.serve.scheduler import (MicroBatcher, ServeStats, TickStats,
-                                   pad_block)
+from repro.serve.scheduler import (MicroBatcher, QueueFull, ServeStats,
+                                   TickStats, pad_block)
 
-__all__ = ["CachingBackend", "MicroBatcher", "ServeStats", "TickStats",
-           "pad_block"]
+__all__ = ["CachingBackend", "MicroBatcher", "QueueFull", "ServeStats",
+           "TickStats", "pad_block"]

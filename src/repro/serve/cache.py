@@ -28,8 +28,10 @@ miss-block is padded to width 2 whenever dedupe would shrink a multi-
 query tick to a single column (`_MIN_DISPATCH`); a true B = 1 call
 dispatches width 1 and matches uncached B = 1 execution exactly.
 
-The cache is invalidated whenever the (rank_table, users) identity it was
-filled under changes, so a rebuilt index never serves stale results.
+The cache is invalidated whenever the (rank_table, users, delta) identity
+it was filled under changes — for the epoch-versioned mutable engine
+(`repro.index`) that is exactly a snapshot-generation change, so a
+mutation or rebuild hot-swap never serves a stale-epoch entry.
 Results are cached per (k, c) — the selection is a function of both —
 and the wrapped result keeps the inner backend's QueryResult shape
 contract (e.g. "cached:sharded" still returns (B, k·P) candidate-set
@@ -86,16 +88,32 @@ class CachingBackend(BK.QueryBackend):
         self._lru.clear()
         self._epoch = None
 
-    def _check_epoch(self, rt: RankTable, users: jax.Array) -> None:
-        """Cached results are only valid for the index they were computed
-        against; key the cache generation on the array identities, held
-        as WEAK references — a bare id() could be recycled by a rebuilt
-        index landing at the same address, silently serving stale
-        results, while strong references would pin the old table in
-        memory."""
+    def build_index(self, users, items, cfg, key):
+        """Builds run on the wrapped backend's substrate."""
+        return self.inner.build_index(users, items, cfg, key)
+
+    def check_users_shape(self, n):
+        return self.inner.check_users_shape(n)
+
+    def _check_epoch(self, rt: RankTable, users: jax.Array,
+                     delta=None) -> None:
+        """Cached results are only valid for the index GENERATION they
+        were computed against; key the cache generation on the array
+        identities — rank table, users, AND the delta-correction arrays
+        (a mutation that only changes the delta buffer changes every
+        result too). Snapshot generations are immutable (`repro.index`),
+        so identity equality is exactly epoch equality: any hot-swap or
+        mutation drops every stale-epoch entry before the next lookup.
+        Identities are held as WEAK references — a bare id() could be
+        recycled by a rebuilt index landing at the same address, silently
+        serving stale results, while strong references would pin the old
+        table in memory."""
         arrays = (rt.thresholds, rt.table, users)
-        if self._epoch is None or any(
-                ref() is not a for ref, a in zip(self._epoch, arrays)):
+        if delta is not None:
+            arrays += (delta.add_scores, delta.del_scores, delta.user_live)
+        if (self._epoch is None or len(self._epoch) != len(arrays)
+                or any(ref() is not a
+                       for ref, a in zip(self._epoch, arrays))):
             self._lru.clear()
             self._epoch = tuple(weakref.ref(a) for a in arrays)
 
@@ -107,8 +125,8 @@ class CachingBackend(BK.QueryBackend):
             self.evictions += 1
 
     # -------------------------------------------------------------- query
-    def query_batch(self, rt, users, qs, *, k, c):
-        self._check_epoch(rt, users)
+    def query_batch(self, rt, users, qs, *, k, c, delta=None):
+        self._check_epoch(rt, users, delta)
         rows = np.asarray(jax.device_get(qs))
         keys = [(rows[i].tobytes(), int(k), float(c))
                 for i in range(rows.shape[0])]
@@ -130,7 +148,15 @@ class CachingBackend(BK.QueryBackend):
             block = qs[jnp.asarray(idx)]
             if len(idx) < _MIN_DISPATCH <= len(keys):
                 block = jnp.concatenate([block, block[-1:]])
-            res = self.inner.query_batch(rt, users, block, k=k, c=c)
+            # omit the delta kwarg on the static path (mirrors
+            # engine.query_batch_at): pre-PR-3 custom inner backends with
+            # a (rt, users, qs, *, k, c) signature keep working when
+            # wrapped, as long as the engine is never mutated
+            if delta is None:
+                res = self.inner.query_batch(rt, users, block, k=k, c=c)
+            else:
+                res = self.inner.query_batch(rt, users, block, k=k, c=c,
+                                             delta=delta)
             # Tick-local results survive assembly even when the LRU is
             # smaller than the tick's own unique-miss count.
             fresh = {}

@@ -38,6 +38,28 @@ padded like any other and agrees with direct execution on every
 table-derived field (indices, r↓/r↑, R↓_k/R↑_k), with `est` equal to
 float accuracy.
 
+Back-pressure
+-------------
+`max_depth` bounds the queue: a `submit` that would push the queue past
+it FAILS FAST with `QueueFull` instead of growing an unbounded backlog
+(under sustained overload an unbounded queue turns finite latency into
+infinite latency for everyone). Rejections are counted per tick
+(`TickStats.rejected` — rejections observed since the previous tick) and
+in aggregate (`ServeStats.rejected`, plus the queue-depth high-watermark)
+so dashboards can see the overload knee; `benchmarks/perf_engine.py
+--serve` sweeps offered load past capacity and reports the column.
+
+Snapshot-pinned ticks
+---------------------
+When the engine is snapshot-versioned (`repro.index`: mutable engines
+publish epoch-versioned `IndexSnapshot`s), every tick PINS one snapshot
+(`engine.current_snapshot()`) and dispatches the whole batch against it
+via `engine.query_batch_at`, recording the epoch in `TickStats.epoch`.
+A concurrent mutation or rebuild hot-swap therefore lands BETWEEN ticks,
+never inside one: all futures of a tick resolve against exactly one
+index generation (asserted in tests/test_index.py). Engines without
+snapshots dispatch through plain `engine.query_batch`.
+
 Per-tick stats (`TickStats`) record queue depth at dispatch, fill ratio,
 and per-request latency; `MicroBatcher.stats()` aggregates them into
 p50/p99 latency for the serving dashboards.
@@ -73,6 +95,10 @@ def pad_block(qs: jax.Array, max_batch: int) -> jax.Array:
         [qs, jnp.broadcast_to(qs[-1:], (max_batch - b, qs.shape[1]))])
 
 
+class QueueFull(RuntimeError):
+    """`submit` rejected: the queue is at `max_depth` (back-pressure)."""
+
+
 @dataclasses.dataclass(frozen=True)
 class TickStats:
     """One dispatched tick, as observed by the scheduler."""
@@ -82,6 +108,8 @@ class TickStats:
     fill_ratio: float          # batch / max_batch
     wait_ms: float             # head request's submit → dispatch wait
     latencies_ms: Tuple[float, ...]   # per-request submit → resolve
+    rejected: int = 0          # submits rejected since the previous tick
+    epoch: Optional[int] = None  # pinned index epoch (snapshot engines)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,10 +122,13 @@ class ServeStats:
     mean_queue_depth: float
     p50_ms: float
     p99_ms: float
+    rejected: int = 0          # submits rejected by the max_depth bound
+    depth_hwm: int = 0         # queue-depth high-watermark
 
     def __str__(self):
         return (f"{self.requests} reqs / {self.ticks} ticks  "
                 f"fill {self.mean_fill:.2f}  depth {self.mean_queue_depth:.1f}"
+                f" (hwm {self.depth_hwm})  rej {self.rejected}"
                 f"  p50 {self.p50_ms:.2f} ms  p99 {self.p99_ms:.2f} ms")
 
 
@@ -132,20 +163,26 @@ class MicroBatcher:
     """
 
     def __init__(self, engine, *, max_batch: int = 16,
-                 max_wait_ms: float = 2.0):
+                 max_wait_ms: float = 2.0, max_depth: Optional[int] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_wait_ms < 0:
             raise ValueError(f"max_wait_ms must be >= 0, got {max_wait_ms}")
+        if max_depth is not None and max_depth < 1:
+            raise ValueError(f"max_depth must be >= 1, got {max_depth}")
         self.engine = engine
         self.max_batch = int(max_batch)
         self.max_wait_ms = float(max_wait_ms)
+        self.max_depth = None if max_depth is None else int(max_depth)
         self._queue: Deque[_Request] = deque()
         self._cond = threading.Condition()
         self._stop = False
         self._flush = False
         self._busy = False          # a tick is being dispatched right now
         self._ticks: List[TickStats] = []
+        self._rejected_total = 0
+        self._rejected_since_tick = 0
+        self._depth_hwm = 0
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name="microbatcher")
         self._thread.start()
@@ -155,7 +192,11 @@ class MicroBatcher:
         """Enqueue one (d,) query; resolves to its per-query QueryResult
         with HOST (numpy) leaves, leading batch axis already squeezed —
         serving results are client-bound, so the tick is transferred once
-        and split into zero-copy row views."""
+        and split into zero-copy row views.
+
+        With `max_depth` set, a submit that finds the queue at the bound
+        raises `QueueFull` immediately (fail-fast back-pressure) instead
+        of accepting work the scheduler cannot keep up with."""
         q = jnp.asarray(q)
         if q.ndim != 1:
             raise ValueError(f"submit expects a (d,) query; got {q.shape}")
@@ -163,7 +204,15 @@ class MicroBatcher:
         with self._cond:
             if self._stop:
                 raise RuntimeError("MicroBatcher is closed")
+            if (self.max_depth is not None
+                    and len(self._queue) >= self.max_depth):
+                self._rejected_total += 1
+                self._rejected_since_tick += 1
+                raise QueueFull(
+                    f"queue at max_depth={self.max_depth}; request rejected "
+                    "(fail-fast back-pressure — retry with backoff)")
             self._queue.append(req)
+            self._depth_hwm = max(self._depth_hwm, len(self._queue))
             self._cond.notify_all()
         return req.future
 
@@ -192,10 +241,12 @@ class MicroBatcher:
 
     def stats(self) -> ServeStats:
         """Aggregate tick statistics (p50/p99 over request latencies)."""
-        with self._cond:
+        with self._cond:            # one atomic snapshot of ticks+counters
             ticks = list(self._ticks)
+            rejected, hwm = self._rejected_total, self._depth_hwm
         if not ticks:
-            return ServeStats(0, 0, 0.0, 0.0, 0.0, 0.0)
+            return ServeStats(0, 0, 0.0, 0.0, 0.0, 0.0, rejected=rejected,
+                              depth_hwm=hwm)
         lats = np.concatenate([t.latencies_ms for t in ticks])
         return ServeStats(
             ticks=len(ticks),
@@ -204,6 +255,8 @@ class MicroBatcher:
             mean_queue_depth=float(np.mean([t.queue_depth for t in ticks])),
             p50_ms=float(np.percentile(lats, 50)),
             p99_ms=float(np.percentile(lats, 99)),
+            rejected=rejected,
+            depth_hwm=hwm,
         )
 
     @property
@@ -252,20 +305,32 @@ class MicroBatcher:
                         rest.append(r)
                 depth = len(reqs) + len(rest)
                 self._queue = rest
+                rejected = self._rejected_since_tick
+                self._rejected_since_tick = 0
                 self._busy = True
             try:
-                self._dispatch(reqs, depth)
+                self._dispatch(reqs, depth, rejected)
             finally:
                 with self._cond:
                     self._busy = False
                     self._cond.notify_all()
 
-    def _dispatch(self, reqs: List[_Request], depth: int):
+    def _dispatch(self, reqs: List[_Request], depth: int, rejected: int = 0):
         t_dispatch = time.monotonic()
         k, c = reqs[0].key
+        epoch = None
         try:
             qs = pad_block(jnp.stack([r.q for r in reqs]), self.max_batch)
-            res = self.engine.query_batch(qs, k=k, c=c)
+            # Pin ONE index snapshot for the whole tick (see module doc):
+            # a hot-swap concurrent with this dispatch lands between
+            # ticks, never inside one.
+            snap_fn = getattr(self.engine, "current_snapshot", None)
+            if snap_fn is not None:
+                snap = snap_fn()
+                epoch = getattr(snap, "epoch", None)
+                res = self.engine.query_batch_at(snap, qs, k=k, c=c)
+            else:
+                res = self.engine.query_batch(qs, k=k, c=c)
             # One transfer for the whole tick: futures resolve to HOST
             # (numpy) QueryResults — per-request row views are zero-copy,
             # where B×fields device slices would dominate the tick cost.
@@ -280,7 +345,8 @@ class MicroBatcher:
             batch=len(reqs), queue_depth=depth,
             fill_ratio=len(reqs) / self.max_batch,
             wait_ms=(t_dispatch - reqs[0].t_submit) * 1e3,
-            latencies_ms=tuple((now - r.t_submit) * 1e3 for r in reqs))
+            latencies_ms=tuple((now - r.t_submit) * 1e3 for r in reqs),
+            rejected=rejected, epoch=epoch)
         # Record the tick BEFORE resolving futures: a client that wakes
         # from f.result() must already see it in stats()/tick_log.
         with self._cond:

@@ -1,0 +1,604 @@
+"""Dynamic-index subsystem tests (the PR-3 tentpole, `repro.index`):
+delta-buffer correctness, cross-backend delta-path parity, rebuild ==
+scratch-build identity, snapshot hot-swap under concurrent serving, and
+cache epoch invalidation.
+
+Conventions follow tests/test_backends.py: queries are items perturbed
+off the threshold grid, indices and the table-DERIVED bounds compare
+exactly (the delta shift is an exact integer count, so it preserves
+this), `est` compares at float accuracy across backends.
+
+Problem sizes keep n and m divisible by 8 (also after the scripted
+insert/delete churn) so the whole suite runs under the CI job that
+forces 8 host devices — exercising the row-sharded delta correction and
+the sharded end-to-end rebuild path.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backends as BK
+from repro.core.engine import ReverseKRanksEngine
+from repro.core.rank_table import build_rank_table
+from repro.core.types import DeltaCorrection, RankTableConfig
+from repro.index import MaintenanceLoop, MaintenancePolicy
+from repro.serve import MicroBatcher, QueueFull
+from tests.conftest import make_problem
+
+ALL_BACKENDS = ("dense", "fused", "sharded")
+K, C = 7, 2.0
+N, M, D = 512, 400, 16
+CFG = RankTableConfig(tau=16, omega=4, s=8)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_problem(jax.random.PRNGKey(42), n=N, m=M, d=D)
+
+
+def fresh_engine(problem, backend="dense"):
+    users, items = problem
+    return ReverseKRanksEngine.build(users, items, CFG,
+                                     jax.random.PRNGKey(1), backend=backend)
+
+
+def off_grid_queries(items, B, seed=7):
+    base = items[(1 + jnp.arange(B) * 13) % items.shape[0]]
+    return base * (1.0 + 1e-4 * jax.random.normal(
+        jax.random.PRNGKey(seed), base.shape, jnp.float32))
+
+
+def churn(eng):
+    """The scripted mutation sequence shared by the parity tests:
+    inserts, base + fresh-item deletions, an upsert, a user deletion."""
+    new = jax.random.normal(jax.random.PRNGKey(11), (16, D), jnp.float32)
+    ids = eng.insert_items(new)
+    eng.delete_items([3, 17, int(ids[1])])
+    eng.upsert_users(
+        jax.random.normal(jax.random.PRNGKey(12), (1, D), jnp.float32),
+        indices=[5])
+    eng.delete_users([9])
+    return ids
+
+
+# ---------------------------------------------------------- config guard
+def test_rank_table_config_validation():
+    """The threshold grid divides by tau-1 and the sampler needs omega/s
+    >= 1: bad values must raise at CONSTRUCTION, not surface as NaN
+    thresholds after an expensive build."""
+    with pytest.raises(ValueError, match="tau must be >= 2"):
+        RankTableConfig(tau=1)
+    with pytest.raises(ValueError, match="omega must be >= 1"):
+        RankTableConfig(omega=0)
+    with pytest.raises(ValueError, match="s must be >= 1"):
+        RankTableConfig(s=0)
+    cfg = RankTableConfig(tau=2, omega=1, s=1)      # minimal legal config
+    assert cfg.tau == 2
+
+
+# ------------------------------------------------------- delta unit math
+def test_delta_correction_counts_brute_force(problem):
+    """`apply_delta_corrections` == the Definition-1 count shift, checked
+    against a numpy brute force, including bucket padding (-inf rows
+    count as zero) and the dead-user sentinel."""
+    from repro.core.rank_table import apply_delta_corrections
+    from repro.index.delta import _sorted_padded
+    users, items = problem
+    rng = np.random.default_rng(0)
+    add = jnp.asarray(rng.normal(size=(5, D)), jnp.float32)
+    dead = jnp.asarray(rng.normal(size=(3, D)), jnp.float32)
+    qs = off_grid_queries(items, 4)
+    scores = (users @ qs.T).astype(jnp.float32)
+    r_lo = jnp.ones_like(scores) * 10.0
+    r_up = jnp.ones_like(scores) * 30.0
+    est = jnp.ones_like(scores) * 20.0
+    live = jnp.ones((N,), bool).at[7].set(False)
+    m_new = M - 3 + 5
+    corr = DeltaCorrection(_sorted_padded(users @ add.T, 5),
+                           _sorted_padded(users @ dead.T, 3),
+                           live, jnp.asarray(m_new, jnp.int32))
+    assert corr.add_scores.shape == (N, 8)      # padded to the 8-bucket
+    g_lo, g_up, g_est = apply_delta_corrections(scores, r_lo, r_up, est,
+                                                corr)
+    sc = np.asarray(scores)
+    cnt = ((np.asarray(users @ add.T)[:, :, None] > sc[:, None, :]).sum(1)
+           - (np.asarray(users @ dead.T)[:, :, None] > sc[:, None, :])
+           .sum(1))
+    live_h = np.asarray(live)
+    np.testing.assert_array_equal(
+        np.asarray(g_lo)[live_h],
+        np.clip(10.0 + cnt, 1, m_new + 1)[live_h])
+    np.testing.assert_array_equal(
+        np.asarray(g_up)[live_h],
+        np.clip(30.0 + cnt, 1, m_new + 1)[live_h])
+    np.testing.assert_array_equal(np.asarray(g_est)[7], np.full(4, np.inf))
+
+
+def test_insert_shifts_bounds_exactly(problem):
+    """Engine-level: after inserts the per-user bounds move by exactly
+    the #{a : u·a > u·q} count (the Eq.-1 estimator is shifted, not
+    re-estimated)."""
+    users, items = problem
+    eng = fresh_engine(problem)
+    qs = off_grid_queries(items, 3)
+    before = eng.query_batch(qs, k=K, c=C)
+    new = jax.random.normal(jax.random.PRNGKey(21), (10, D), jnp.float32)
+    eng.insert_items(new)
+    after = eng.query_batch(qs, k=K, c=C)
+    cnt = (np.asarray(users @ new.T)[:, :, None]
+           > np.asarray((users @ qs.T).astype(jnp.float32))[:, None, :]
+           ).sum(1)                                        # (n, B)
+    want_lo = np.clip(np.asarray(before.r_lo) + cnt.T, 1, M + 10 + 1)
+    want_up = np.clip(np.asarray(before.r_up) + cnt.T, 1, M + 10 + 1)
+    np.testing.assert_array_equal(np.asarray(after.r_lo), want_lo)
+    np.testing.assert_array_equal(np.asarray(after.r_up), want_up)
+
+
+# ------------------------------------------------ (a) cross-backend parity
+@pytest.mark.parametrize("B", [1, 16])
+def test_delta_path_parity_across_backends(problem, B):
+    """(a) After the scripted churn, delta-path results agree across
+    dense/fused/sharded at B ∈ {1, 16}: indices and the k-th-bound
+    statistics bitwise, est at float accuracy; dense vs fused also
+    bitwise on the full (B, n) bound vectors (sharded returns (B, k·P)
+    candidate-set bounds by contract)."""
+    users, items = problem
+    engines = {b: fresh_engine(problem, b) for b in ALL_BACKENDS}
+    for eng in engines.values():
+        churn(eng)
+    qs = off_grid_queries(items, B)
+    res = {b: engines[b].query_batch(qs, k=K, c=C) for b in ALL_BACKENDS}
+    ref = res["dense"]
+    assert engines["dense"].current_snapshot().corr is not None
+    for b in ("fused", "sharded"):
+        got = res[b]
+        np.testing.assert_array_equal(np.asarray(got.indices),
+                                      np.asarray(ref.indices),
+                                      err_msg=f"indices drift on {b}")
+        np.testing.assert_array_equal(np.asarray(got.R_lo_k),
+                                      np.asarray(ref.R_lo_k))
+        np.testing.assert_array_equal(np.asarray(got.R_up_k),
+                                      np.asarray(ref.R_up_k))
+        np.testing.assert_allclose(np.asarray(got.est_rank),
+                                   np.asarray(ref.est_rank), rtol=1e-5,
+                                   atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(res["fused"].r_lo),
+                                  np.asarray(ref.r_lo))
+    np.testing.assert_array_equal(np.asarray(res["fused"].r_up),
+                                  np.asarray(ref.r_up))
+    # deleted user masked identically everywhere
+    for b in ALL_BACKENDS:
+        assert 9 not in np.asarray(res[b].indices)
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_delta_query_is_batch_case_b1(problem, backend):
+    """`query` stays the B = 1 case of `query_batch` on the delta path."""
+    users, items = problem
+    eng = fresh_engine(problem, backend)
+    churn(eng)
+    q = off_grid_queries(items, 1)[0]
+    single = eng.query(q, k=K, c=C)
+    batched = eng.query_batch(q[None, :], k=K, c=C)
+    np.testing.assert_array_equal(np.asarray(single.indices),
+                                  np.asarray(batched.indices[0]))
+    np.testing.assert_array_equal(np.asarray(single.r_lo),
+                                  np.asarray(batched.r_lo[0]))
+
+
+# --------------------------------------------- (b) rebuild == from scratch
+@pytest.mark.parametrize("backend", ["dense", "sharded"])
+def test_insert_then_rebuild_equals_scratch(problem, backend):
+    """(b) insert + delete then rebuild == building from scratch on the
+    merged item set (same key): rank table bitwise, delta drained, query
+    results identical. Runs the sharded end-to-end build path too (16
+    inserts − 8 deletes keeps m divisible by 8 for the 8-device job)."""
+    users, items = problem
+    eng = fresh_engine(problem, backend)
+    ids = eng.insert_items(
+        jax.random.normal(jax.random.PRNGKey(31), (16, D), jnp.float32))
+    eng.delete_items(list(range(8)))
+    merged = eng.live_items()
+    assert merged.shape[0] == M + 16 - 8
+    rec = eng.rebuild()
+    assert rec is not None and rec.epoch_after == eng.epoch
+    snap = eng.current_snapshot()
+    assert snap.delta.is_empty and snap.corr is None
+    scratch = ReverseKRanksEngine.build(users, merged, CFG,
+                                        jax.random.PRNGKey(1),
+                                        backend=backend)
+    np.testing.assert_array_equal(
+        np.asarray(snap.rank_table.thresholds),
+        np.asarray(scratch.rank_table.thresholds))
+    np.testing.assert_array_equal(np.asarray(snap.rank_table.table),
+                                  np.asarray(scratch.rank_table.table))
+    assert int(snap.rank_table.m) == int(scratch.rank_table.m)
+    qs = off_grid_queries(items, 4)
+    got = eng.query_batch(qs, k=K, c=C)
+    want = scratch.query_batch(qs, k=K, c=C)
+    np.testing.assert_array_equal(np.asarray(got.indices),
+                                  np.asarray(want.indices))
+    # inserted-item ids survive the rebuild as live ids
+    assert set(ids) - set(eng.live_item_ids().tolist()) == set()
+
+
+def test_rebuild_rebases_concurrent_mutations(problem):
+    """Mutations that land while a rebuild is building are NOT lost: the
+    swap re-bases them as a residual delta on the new epoch."""
+    users, items = problem
+    eng = fresh_engine(problem)
+    eng.insert_items(jax.random.normal(jax.random.PRNGKey(41), (8, D),
+                                       jnp.float32))
+    # user 5 upserted BEFORE the rebuild captures, and AGAIN mid-build:
+    # the swap must keep the LATEST vector's row (a touched-set
+    # difference would silently keep the capture-time row)
+    eng.upsert_users(jax.random.normal(jax.random.PRNGKey(43), (1, D),
+                                       jnp.float32), indices=[5])
+    v_final = jax.random.normal(jax.random.PRNGKey(44), (1, D), jnp.float32)
+    # interleave: capture what rebuild will build, then mutate mid-build
+    # by monkeypatching the backend build hook to inject a mutation
+    orig = eng._backend.build_index
+    late_ids = []
+
+    def slow_build(u, it, cfg, key):
+        rt = orig(u, it, cfg, key)
+        late_ids.append(eng.insert_items(
+            jax.random.normal(jax.random.PRNGKey(42), (4, D), jnp.float32)))
+        eng.delete_users([11])
+        eng.upsert_users(v_final, indices=[5])
+        return rt
+
+    eng._backend.build_index = slow_build
+    try:
+        rec = eng.rebuild()
+    finally:
+        eng._backend.build_index = orig
+    assert rec is not None
+    snap = eng.current_snapshot()
+    # the 8 pre-rebuild inserts are merged into the base; the 4 late ones
+    # survive as residual delta; the late user deletion is still masked
+    assert int(snap.rank_table.m) == M + 8
+    assert snap.delta.n_added == 4
+    assert set(late_ids[0]) <= set(eng.live_item_ids().tolist())
+    res = eng.query_batch(off_grid_queries(items, 4), k=K, c=C)
+    assert 11 not in np.asarray(res.indices)
+    # user 5's row reflects v_final, not the capture-time vector
+    np.testing.assert_array_equal(np.asarray(snap.users[5]),
+                                  np.asarray(v_final[0]))
+    from repro.core.rank_table import recompute_user_rows
+    base = snap.base
+    thr5, tab5 = recompute_user_rows(v_final, base.samples, base.weights,
+                                     CFG, max_norm=base.max_norm)
+    np.testing.assert_allclose(np.asarray(snap.rank_table.table)[5],
+                               np.asarray(tab5)[0], rtol=1e-6, atol=0)
+
+
+# ------------------------------------------------------------- user churn
+def test_upsert_user_rows_match_scratch(problem):
+    """An upserted user's threshold/table rows equal a from-scratch build
+    on the modified user matrix (same key, same samples)."""
+    users, items = problem
+    eng = fresh_engine(problem)
+    v = jax.random.normal(jax.random.PRNGKey(51), (1, D), jnp.float32)
+    eng.upsert_users(v, indices=[5])
+    users2 = users.at[5].set(v[0])
+    rt2 = build_rank_table(users2, items, CFG, jax.random.PRNGKey(1))
+    snap = eng.current_snapshot()
+    np.testing.assert_allclose(np.asarray(snap.rank_table.thresholds),
+                               np.asarray(rt2.thresholds), rtol=1e-6,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(snap.rank_table.table),
+                               np.asarray(rt2.table), rtol=1e-6, atol=0)
+    # untouched rows are bit-identical (only row 5 was recomputed)
+    mask = np.ones(N, bool)
+    mask[5] = False
+    np.testing.assert_array_equal(
+        np.asarray(snap.rank_table.table)[mask],
+        np.asarray(rt2.table)[mask])
+
+
+def test_append_users_and_query(problem):
+    users, items = problem
+    eng = fresh_engine(problem)
+    vecs = jax.random.normal(jax.random.PRNGKey(52), (3, D), jnp.float32)
+    idx = eng.upsert_users(vecs)
+    assert list(idx) == [N, N + 1, N + 2]
+    assert eng.n == N + 3
+    snap = eng.current_snapshot()
+    assert snap.rank_table.thresholds.shape == (N + 3, CFG.tau)
+    res = eng.query_batch(off_grid_queries(items, 4), k=K, c=C)
+    assert res.indices.shape == (4, K)
+
+
+def test_delete_users_masked_everywhere(problem):
+    users, items = problem
+    eng = fresh_engine(problem)
+    qs = off_grid_queries(items, 4)
+    before = eng.query_batch(qs, k=K, c=C)
+    victim = int(np.asarray(before.indices)[0, 0])
+    eng.delete_users([victim])
+    after = eng.query_batch(qs, k=K, c=C)
+    assert victim not in np.asarray(after.indices)
+    # dead rows are pruned, never accepted
+    assert np.all(np.isinf(np.asarray(after.r_lo)[:, victim]))
+
+
+def test_dead_user_never_outranks_shifted_live_user():
+    """Regression: a live user whose insertion-shifted estimate exceeds
+    m'+1 must still outrank a deleted user — a FINITE dead sentinel
+    (m'+2) loses to est = m_base+1+shift and can even pass the Lemma-1
+    accept test when c·R↓_k exceeds it; the +inf sentinel cannot."""
+    from repro.core.query import select_topk
+    from repro.core.rank_table import apply_delta_corrections
+    m_base, n_add, n_del = 10, 4, 2
+    m_new = m_base - n_del + n_add                          # 12
+    scores = jnp.zeros((3, 1), jnp.float32)
+    # user 1: bottom-ranked (est = m_base+1 = 11) and beaten by all 4
+    # inserted items → shifted est 15 > old sentinel m'+2 = 14
+    corr = DeltaCorrection(
+        add_scores=jnp.asarray([[-1.0] * 4, [1.0] * 4, [-1.0] * 4],
+                               jnp.float32),
+        del_scores=jnp.zeros((3, 0), jnp.float32),
+        user_live=jnp.asarray([True, True, False]),
+        m_new=jnp.asarray(m_new, jnp.int32))
+    r_lo = jnp.asarray([[2.0], [10.0], [3.0]])
+    r_up = jnp.asarray([[4.0], [11.0], [5.0]])
+    est = jnp.asarray([[3.0], [11.0], [4.0]])
+    g_lo, g_up, g_est = apply_delta_corrections(scores, r_lo, r_up, est,
+                                                corr)
+    assert float(g_est[1, 0]) == 15.0       # above the old finite sentinel
+    res = select_topk(g_lo.T, g_up.T, g_est.T, k=2, c=2.0,
+                      m_items=corr.m_new)
+    assert 2 not in np.asarray(res.indices)         # dead user excluded
+    np.testing.assert_array_equal(np.asarray(res.indices)[0],
+                                  np.asarray([0, 1]))
+
+
+# --------------------------------------------------- stats + maintenance
+def test_delta_stats_and_stale_weight(problem):
+    eng = fresh_engine(problem)
+    st = eng.delta_stats()
+    assert st.delta_ratio == 0.0 and st.stale_weight == 0.0
+    eng.insert_items(jax.random.normal(jax.random.PRNGKey(61), (8, D),
+                                       jnp.float32))
+    # delete an item that the build SAMPLED: its stratum weight becomes
+    # stale estimator mass (the error-budget trigger)
+    sampled_id = int(eng.current_snapshot().base.sample_ids[0])
+    eng.delete_items([sampled_id])
+    st = eng.delta_stats()
+    assert st.n_added == 8 and st.n_deleted == 1
+    assert st.delta_ratio == pytest.approx(9 / M)
+    assert st.stale_weight > 0.0
+    assert st.m_live == M + 8 - 1
+
+
+def test_maintenance_loop_triggers_rebuild(problem):
+    eng = fresh_engine(problem)
+    policy = MaintenancePolicy(max_delta_ratio=0.03)
+    with MaintenanceLoop(eng, policy=policy, poll_ms=5.0) as ml:
+        eng.insert_items(jax.random.normal(jax.random.PRNGKey(71),
+                                           (24, D), jnp.float32))
+        ml.wake()
+        deadline = time.monotonic() + 60
+        while not ml.rebuilds and time.monotonic() < deadline:
+            time.sleep(0.01)
+    assert ml.rebuilds, "maintenance loop never rebuilt"
+    rec = ml.rebuilds[0]
+    assert "delta_ratio" in rec.reason
+    assert eng.delta_stats().delta_ratio == 0.0
+    assert int(eng.current_snapshot().rank_table.m) == M + 24
+
+
+def test_engine_without_items_rejects_item_mutations(problem):
+    users, items = problem
+    rt = build_rank_table(users, items, CFG, jax.random.PRNGKey(1))
+    eng = ReverseKRanksEngine(users=users, rank_table=rt, config=CFG)
+    with pytest.raises(ValueError, match="base item set"):
+        eng.insert_items(jnp.zeros((1, D)))
+    with pytest.raises(ValueError, match="base item set"):
+        eng.rebuild()
+    eng.delete_users([3])                     # mask-only: allowed
+    res = eng.query_batch(off_grid_queries(items, 2), k=K, c=C)
+    assert 3 not in np.asarray(res.indices)
+
+
+# ------------------------------------- (c) hot-swap under live scheduling
+@pytest.mark.concurrency
+def test_swap_under_load_never_mixes_epochs(problem):
+    """(c) A snapshot hot-swap concurrent with in-flight MicroBatcher
+    submissions: zero dropped futures, every future resolves bitwise
+    against EXACTLY one epoch's reference, and every tick is pinned to
+    one epoch."""
+    users, items = problem
+    eng = fresh_engine(problem)
+    qs = off_grid_queries(items, 8)
+    snap0 = eng.current_snapshot()
+    # a high-norm insert moves many users' counts, so the two epochs are
+    # distinguishable on every query
+    new = 4.0 * jax.random.normal(jax.random.PRNGKey(81), (6, D),
+                                  jnp.float32)
+
+    results, errors = [], []
+
+    def submitter(mb, stop):
+        i = 0
+        while not stop.is_set():
+            try:
+                f = mb.submit(qs[i % 8], K, C)
+                results.append((i % 8, f))
+            except Exception as e:             # pragma: no cover - fail loud
+                errors.append(e)
+                return
+            i += 1
+            time.sleep(0.001)
+
+    with MicroBatcher(eng, max_batch=4, max_wait_ms=2.0) as mb:
+        stop = threading.Event()
+        t = threading.Thread(target=submitter, args=(mb, stop))
+        t.start()
+        try:
+            while len(mb.tick_log) < 3:        # epoch-0 traffic flowing
+                time.sleep(0.005)
+            eng.insert_items(new)              # the hot swap
+            snap1 = eng.current_snapshot()
+            deadline = time.monotonic() + 60
+            while (not any(t_.epoch == snap1.epoch for t_ in mb.tick_log)
+                   and time.monotonic() < deadline):
+                time.sleep(0.005)
+        finally:
+            stop.set()
+            t.join()
+        resolved = [(qi, f.result(timeout=120)) for qi, f in results]
+        log = mb.tick_log
+    assert not errors
+    assert sum(t_.batch for t_ in log) == len(resolved)   # zero dropped
+
+    ref0 = jax.device_get(eng.query_batch_at(snap0, qs, K, C))
+    ref1 = jax.device_get(eng.query_batch_at(snap1, qs, K, C))
+    # epochs must be distinguishable for "exactly one" to mean anything
+    for i in range(8):
+        assert not np.array_equal(np.asarray(ref0.r_lo[i]),
+                                  np.asarray(ref1.r_lo[i]))
+
+    def matches(res, ref, i):
+        return all(np.array_equal(np.asarray(getattr(res, f)),
+                                  np.asarray(getattr(ref, f)[i]))
+                   for f in ("indices", "r_lo", "r_up", "R_lo_k", "R_up_k"))
+
+    seen = {snap0.epoch: 0, snap1.epoch: 0}
+    for qi, res in resolved:
+        m0, m1 = matches(res, ref0, qi), matches(res, ref1, qi)
+        assert m0 != m1, f"future for query {qi} torn between epochs"
+        seen[snap0.epoch if m0 else snap1.epoch] += 1
+    assert seen[snap0.epoch] > 0 and seen[snap1.epoch] > 0
+    epochs = [t_.epoch for t_ in log]
+    assert epochs == sorted(epochs)            # ticks never roll back
+    assert set(epochs) == {snap0.epoch, snap1.epoch}
+
+
+# --------------------------------------- (d) cache epoch invalidation
+def test_cache_stale_epoch_hits_are_zero(problem):
+    """(d) After a swap, the hit rate for stale-epoch keys is exactly 0:
+    every pre-swap entry misses and is recomputed on the new epoch."""
+    users, items = problem
+    eng = fresh_engine(problem, "cached:dense")
+    ref = fresh_engine(problem, "dense")
+    cache = eng._backend
+    qs = off_grid_queries(items, 6)
+    eng.query_batch(qs, k=K, c=C)              # fill
+    h0 = cache.hits
+    eng.query_batch(qs, k=K, c=C)
+    assert cache.hits - h0 == 6                # warm within the epoch
+    for mutate in (
+            lambda: eng.insert_items(jax.random.normal(
+                jax.random.PRNGKey(91), (4, D), jnp.float32)),
+            lambda: eng.delete_users([2]),
+            lambda: eng.rebuild()):
+        mutate()
+        h = cache.hits
+        got = eng.query_batch(qs, k=K, c=C)
+        assert cache.hits == h, "stale-epoch cache hit served post-swap"
+        ref._snapshots = eng._snapshots        # same state, uncached
+        want = ref.query_batch(qs, k=K, c=C)
+        np.testing.assert_array_equal(np.asarray(got.indices),
+                                      np.asarray(want.indices))
+    # and warm again within the new epoch
+    h = cache.hits
+    eng.query_batch(qs, k=K, c=C)
+    assert cache.hits - h == 6
+
+
+# ----------------------------------------------------- back-pressure
+def test_microbatcher_backpressure(problem):
+    """`max_depth` admission: past the bound submits fail fast with
+    QueueFull, accepted futures all resolve, and the rejection count +
+    high-watermark surface in the stats."""
+    users, items = problem
+    eng = fresh_engine(problem)
+
+    class SlowEngine:
+        def query_batch(self, qs, k, c):
+            time.sleep(0.05)
+            return eng.query_batch(qs, k=k, c=c)
+
+    qs = off_grid_queries(items, 8)
+    rejected = 0
+    with MicroBatcher(SlowEngine(), max_batch=2, max_wait_ms=1.0,
+                      max_depth=3) as mb:
+        futs = []
+        for i in range(30):
+            try:
+                futs.append(mb.submit(qs[i % 8], K, C))
+            except QueueFull:
+                rejected += 1
+        for f in futs:
+            assert f.result(timeout=120).indices.shape == (K,)
+        st = mb.stats()
+        log = mb.tick_log
+    assert rejected > 0
+    assert st.rejected == rejected
+    assert st.depth_hwm <= 3
+    assert sum(t.rejected for t in log) <= rejected   # rest pre-first-tick
+    assert st.requests == len(futs)
+
+    with pytest.raises(ValueError, match="max_depth"):
+        MicroBatcher(eng, max_depth=0)
+
+
+# ------------------------------------------- sharded build-path routing
+def test_sharded_build_routes_through_build_sharded(problem, monkeypatch):
+    """`build(backend="sharded")` and maintenance-triggered rebuilds run
+    Algorithm 1 through `distributed.build_sharded` (row-sharded
+    end-to-end), and the resulting table matches the dense build."""
+    from repro.core import distributed as dist
+    users, items = problem
+    calls = []
+    orig = dist.build_sharded
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(dist, "build_sharded", counting)
+    eng = fresh_engine(problem, "sharded")
+    assert len(calls) == 1
+    dense_rt = build_rank_table(users, items, CFG, jax.random.PRNGKey(1))
+    np.testing.assert_allclose(
+        np.asarray(eng.current_snapshot().rank_table.table),
+        np.asarray(dense_rt.table), rtol=1e-6, atol=1e-6)
+    eng.insert_items(jax.random.normal(jax.random.PRNGKey(95), (16, D),
+                                       jnp.float32))
+    eng.delete_items(list(range(8)))
+    eng.rebuild()                 # same path for maintenance rebuilds
+    assert len(calls) == 2
+    assert int(eng.current_snapshot().rank_table.m) == M + 8
+
+
+def test_sharded_mutation_shape_guards(problem):
+    """Churn off the mesh multiple must not wedge the sharded backend:
+    rebuilds over a non-divisible live m fall back to the dense build
+    (instead of an opaque shard_map error on every maintenance retry),
+    and an append that would break n-divisibility fails fast with a
+    clear error BEFORE publishing."""
+    users, items = problem
+    eng = fresh_engine(problem, "sharded")
+    P = jax.device_count()
+    eng.insert_items(jax.random.normal(jax.random.PRNGKey(97), (3, D),
+                                       jnp.float32))
+    rec = eng.rebuild()           # m = M+3: not divisible for P > 1
+    assert rec is not None
+    assert int(eng.current_snapshot().rank_table.m) == M + 3
+    res = eng.query_batch(off_grid_queries(items, 4), k=K, c=C)
+    assert res.indices.shape == (4, K)
+    if P > 1:
+        with pytest.raises(ValueError, match="divisible by the mesh"):
+            eng.upsert_users(jax.random.normal(jax.random.PRNGKey(98),
+                                               (1, D), jnp.float32))
+        assert eng.n == N         # nothing published by the failed append
+    eng.upsert_users(jax.random.normal(jax.random.PRNGKey(99), (P, D),
+                                       jnp.float32))   # mesh-multiple: ok
+    assert eng.n == N + P
