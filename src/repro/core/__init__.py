@@ -7,7 +7,9 @@ Modules:
   query       — §4.3 O(nd) query processing (batched-first)
   qsrp        — QSRP baseline (ICDE'24), extended to c-approximation
   metrics     — §5 accuracy / overall-ratio criteria
-  backends    — pluggable query-execution backends (dense/fused/sharded)
+  backends    — pluggable query-execution backends (dense/fused/sharded,
+                the "pruned:<inner>" two-phase wrapper, "cached:<inner>")
+  pruning     — block-summary pruning: the coarse-to-fine §4.3 scan
   engine      — public ReverseKRanksEngine API (incl. the PR-3 mutation
                 API: insert/delete items, upsert/delete users, rebuild)
   distributed — multi-pod sharded build + query (shard_map)

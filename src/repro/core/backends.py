@@ -40,10 +40,12 @@ Registering a new backend::
 from __future__ import annotations
 
 import importlib
+from collections import OrderedDict
 from typing import Callable, Dict, Optional, Type
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import query as query_mod
 from repro.core.types import DeltaCorrection, QueryResult, RankTable, \
@@ -303,3 +305,220 @@ class ShardedBackend(QueryBackend):
         if delta is None:
             return fn(rt, users, qs)
         return fn(rt, users, qs, delta)
+
+
+@register_backend("pruned")
+class PrunedBackend(QueryBackend):
+    """Two-phase block-pruned execution (PR 4, `repro.core.pruning`).
+
+    Wraps an inner backend: phase A scores per-block summaries against the
+    whole query batch and certifies which user tiles can still hold
+    non-Lemma-1-pruned users; phase B runs the inner backend's step-1 math
+    over the surviving tiles only, with skipped users materialized at a
+    dominated sentinel so the §4.3 selection returns BIT-IDENTICAL
+    indices to the full scan (see the pruning module docstring for the
+    invariants). Resolves as `"pruned"` (dense inner) or
+    `"pruned:<inner>"`:
+
+      pruned:dense    gathered-row phase B, one jit region;
+      pruned:fused    masked-grid Pallas kernel — skipped tiles are never
+                      DMA'd (`ops.bound_ranks_batched_pruned`);
+      pruned:sharded  per-shard summaries; each shard gathers its own
+                      surviving tiles before the unchanged tree-merge
+                      (`distributed.make_pruned_batch_query_fn`);
+      other inners    generic composition over `inner.bound_ranks` on the
+                      compacted sub-problem.
+
+    Summaries are cached per index GENERATION (array identity of
+    users/thresholds/table, same contract as the serving cache), so
+    mutations and rebuild hot-swaps regenerate them automatically;
+    `build_index` pre-warms the cache so the first query after a build
+    pays no summary pass.
+
+    Fallbacks (always full-scan-correct, surfaced in `stats.fallback`):
+      * `max_union_frac` — when phase A keeps more than this fraction of
+        blocks, the gather would re-stream nearly everything; dispatch
+        the inner backend directly (adversarial-case overhead is then
+        phase A alone, the ≤ 1.1× acceptance bound);
+      * `delta_guard` — past this |delta|/m ratio the widened envelopes
+        stop pruning; skip phase A entirely;
+      * sharded tile alignment — n must split into whole blocks per
+        shard, else the sharded inner runs unpruned.
+    """
+
+    _SUMMARY_CACHE = 4          # index generations kept warm
+
+    def __init__(self, inner="dense", *, mesh=None,
+                 block_size: Optional[int] = None,
+                 max_union_frac: float = 0.5, delta_guard: float = 0.25):
+        super().__init__(mesh=mesh)
+        from repro.core import pruning
+        self._pruning = pruning
+        self.inner = get_backend(inner, mesh=mesh)
+        self.name = f"pruned:{self.inner.name}"
+        self.block_size = int(block_size or pruning.DEFAULT_BLOCK)
+        self.max_union_frac = float(max_union_frac)
+        self.delta_guard = float(delta_guard)
+        self._summaries: "OrderedDict[tuple, tuple]" = OrderedDict()
+        self._sharded_fns: dict = {}
+        self.stats = pruning.PruneStats()   # last query_batch's accounting
+
+    # ----------------------------------------------------------- plumbing
+    def bound_ranks(self, rt, users, qs):
+        """Full (B, n) bounds are a debugging surface; pruning applies to
+        the end-to-end query (sentinels would surprise bound callers)."""
+        return self.inner.bound_ranks(rt, users, qs)
+
+    def build_index(self, users, items, cfg, key):
+        rt = self.inner.build_index(users, items, cfg, key)
+        self.summary_for(rt, users)         # pre-warm this generation
+        return rt
+
+    def check_users_shape(self, n):
+        return self.inner.check_users_shape(n)
+
+    def summary_for(self, rt: RankTable, users: jax.Array):
+        """The `BlockSummary` for this index generation (identity-cached;
+        a mutation or rebuild swaps the arrays and lazily regenerates)."""
+        key = (id(users), id(rt.thresholds), id(rt.table), self.block_size)
+        hit = self._summaries.get(key)
+        if hit is not None:
+            self._summaries.move_to_end(key)
+            return hit[1]
+        summary = self._pruning.build_block_summary(
+            users, rt, block_size=self.block_size)
+        # the value keeps the keyed arrays alive, so their id()s cannot
+        # be recycled while the entry exists (cf. serve.cache weakrefs)
+        self._summaries[key] = ((users, rt.thresholds, rt.table), summary)
+        while len(self._summaries) > self._SUMMARY_CACHE:
+            self._summaries.popitem(last=False)
+        return summary
+
+    # -------------------------------------------------------------- query
+    def _full_scan(self, rt, users, qs, *, k, c, delta, why: str,
+                   n_blocks: int) -> QueryResult:
+        self.stats = self._pruning.PruneStats(
+            n_blocks=n_blocks, kept_union=n_blocks, kept_per_query=1.0,
+            fallback=why)
+        if delta is None:
+            return self.inner.query_batch(rt, users, qs, k=k, c=c)
+        return self.inner.query_batch(rt, users, qs, k=k, c=c, delta=delta)
+
+    def query_batch(self, rt, users, qs, *, k, c, delta=None):
+        P = self._pruning
+        n = users.shape[0]
+        bs = self.block_size
+        nb = -(-n // bs)
+        sharded = isinstance(self.inner, ShardedBackend)
+        if sharded:
+            nshards = self.inner.mesh.devices.size
+            if n % (nshards * bs):
+                # tiles must not straddle shard boundaries
+                return self._full_scan(rt, users, qs, k=k, c=c, delta=delta,
+                                       why="align", n_blocks=nb)
+        if delta is not None:
+            m_base = max(int(rt.m), 1)
+            if (delta.n_add + delta.n_del) / m_base > self.delta_guard:
+                return self._full_scan(rt, users, qs, k=k, c=c, delta=delta,
+                                       why="delta-guard", n_blocks=nb)
+        summary = self.summary_for(rt, users)
+        if delta is None:
+            keep, _ = P.phase_a(summary, qs, k=k, block_size=bs)
+        else:
+            keep, _ = P.phase_a(summary, qs, k=k, block_size=bs,
+                                n_add=float(delta.n_add),
+                                n_del=float(delta.n_del),
+                                user_live=delta.user_live, with_live=True)
+        keep_np = np.asarray(keep)                          # host sync
+        union = np.flatnonzero(keep_np.any(axis=0))
+        per_q = float(keep_np.mean())
+        if union.size > self.max_union_frac * nb:
+            res = self._full_scan(rt, users, qs, k=k, c=c, delta=delta,
+                                  why="dense", n_blocks=nb)
+            self.stats.kept_union = int(union.size)
+            self.stats.kept_per_query = per_q
+            return res
+        self.stats = P.PruneStats(n_blocks=nb, kept_union=int(union.size),
+                                  kept_per_query=per_q)
+        min_blocks = -(-k // bs)
+        if sharded:
+            return self._sharded_query(rt, users, qs, keep_np, k=k, c=c,
+                                       delta=delta, min_blocks=min_blocks)
+        ids_np = P.bucket_blocks(union, n_blocks=nb, min_blocks=min_blocks)
+        ids = jnp.asarray(ids_np)
+        # padding tiles repeat kept ids; mark them invalid so a user is
+        # never a selection candidate twice
+        blk_valid = jnp.asarray(np.arange(ids_np.size) < max(union.size, 1))
+        stock_dense = (type(self.inner) is DenseBackend
+                       and _stock_pipeline(self.inner, DenseBackend))
+        if stock_dense and delta is None:
+            return P.pruned_query_batch(rt, users, qs, ids, blk_valid,
+                                        keep, k, c, block_size=bs)
+        if stock_dense:
+            return P.pruned_query_batch_delta(rt, users, qs, delta, ids,
+                                              blk_valid, keep, k, c,
+                                              block_size=bs)
+        # compacted step 1 on the inner backend (masked-grid kernel for
+        # the stock fused path, generic gather otherwise)
+        if (type(self.inner) is FusedBackend
+                and type(self.inner).bound_ranks is FusedBackend.bound_ranks):
+            from repro.kernels import ops as kops
+            r_lo, r_up, est = kops.bound_ranks_batched_pruned(
+                users, qs, rt.thresholds, rt.table, ids, m=int(rt.m),
+                block_n=bs)
+        else:
+            ridx = P.row_indices(ids, bs)
+            g = jnp.minimum(ridx, n - 1)
+            sub_rt = RankTable(rt.thresholds[g], rt.table[g], rt.m)
+            r_lo, r_up, est = self.inner.bound_ranks(sub_rt, users[g], qs)
+        if delta is None:
+            return P.finish_compacted(r_lo, r_up, est, ids, blk_valid,
+                                      keep, rt.m, k, c, n=n, block_size=bs)
+        return P.delta_finish_compacted(users, qs, delta, r_lo, r_up, est,
+                                        ids, blk_valid, keep, k, c, n=n,
+                                        block_size=bs)
+
+    def _sharded_query(self, rt, users, qs, keep_np, *, k, c, delta,
+                       min_blocks):
+        from repro.core import distributed as D
+        P = self._pruning
+        mesh = self.inner.mesh
+        nshards = mesh.devices.size
+        n = users.shape[0]
+        bs = self.block_size
+        nb = keep_np.shape[1]
+        nb_loc = nb // nshards
+        union = keep_np.any(axis=0)
+        per_shard = union.reshape(nshards, nb_loc)
+        width = P.bucket_width(int(per_shard.sum(axis=1).max()),
+                               n_blocks=nb_loc, min_blocks=min_blocks)
+        ids = np.zeros((nshards, width), np.int32)
+        valid = np.zeros((nshards, width), bool)
+        for s in range(nshards):
+            kept = np.flatnonzero(per_shard[s])
+            if kept.size == 0:
+                continue                    # ids stay 0, valid stays False
+            reps = -(-width // kept.size)
+            ids[s] = np.tile(kept, reps)[:width]
+            # the duplicate tail stays invalid so repeated rows cannot
+            # produce duplicate candidates in the tree-merge
+            valid[s, :kept.size] = True
+        shape = None if delta is None else (delta.n_add, delta.n_del)
+        fkey = (k, float(c), n, width, shape)
+        fn = self._sharded_fns.get(fkey)
+        if fn is None:
+            fn = D.make_pruned_batch_query_fn(
+                mesh, k=k, n=n, c=float(c), block_size=bs,
+                with_delta=delta is not None)
+            self._sharded_fns[fkey] = fn
+        args = (rt, users, qs, jnp.asarray(ids), jnp.asarray(valid),
+                jnp.asarray(keep_np))
+        if delta is None:
+            return fn(*args)
+        return fn(*args, delta)
+
+
+@register_wrapper("pruned")
+def _make_pruned(inner: str, *, mesh=None) -> PrunedBackend:
+    """Registry hook: `get_backend("pruned:<inner>")` lands here."""
+    return PrunedBackend(inner, mesh=mesh)

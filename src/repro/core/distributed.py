@@ -222,6 +222,123 @@ def make_batch_query_fn(mesh: Mesh, k: int, n: int, c: float, *,
     return batch_query_fn
 
 
+def make_pruned_batch_query_fn(mesh: Mesh, k: int, n: int, c: float, *,
+                               block_size: int, with_delta: bool = False):
+    """Block-pruned twin of `make_batch_query_fn` (PR 4): each shard
+    gathers only its SURVIVING user tiles before the per-shard top-k, so
+    the local n·(d+2τ)/P stream shrinks to the kept fraction while the
+    tree-merge wire budget stays O(B·k·P).
+
+    The returned fn takes, after (rank_table, users, Q):
+      ids   (P, W) int32 — per-shard LOCAL block ids to execute; the
+            caller pads every shard to the same width W (SPMD needs
+            uniform shapes) by repeating kept ids;
+      valid (P, W) bool — False marks the repeated padding columns (and
+            whole shards with nothing kept), whose rows are forced to
+            +inf so duplicates can never become duplicate candidates;
+      keep  (B, nb) bool, replicated — the PER-QUERY phase-A keep mask
+            over GLOBAL block ids; rows executed only because another
+            query (or the padding) needed them read as +inf for queries
+            that pruned them, exactly like the single-process sentinel
+            materialization.
+
+    Correctness matches the single-process argument (`core.pruning`):
+    every user that can influence R↓_k/R↑_k or the top-k lives in a kept
+    tile of its own shard, +inf dominates every admissible key, and the
+    per-shard k-smallest of {kept exact values ∪ +inf} reproduces the
+    exact global order statistics through the unchanged all-gather
+    merge. Requires n % (P · block_size) == 0 (tiles must not straddle
+    shards — `PrunedBackend` falls back to the full scan otherwise).
+    """
+    nshards = mesh.devices.size
+    shard_n = n // nshards
+    nb_loc = shard_n // block_size
+
+    def local_part(thr, tab, m_items, u_shard, qs, ids, valid, keep,
+                   *delta):
+        ids_loc = ids[0]                                    # (W,)
+        valid_loc = valid[0]
+        ridx = (ids_loc[:, None] * block_size
+                + jnp.arange(block_size, dtype=jnp.int32)[None, :]
+                ).reshape(-1)                               # (W·bs,) local
+        scores = (u_shard[ridx] @ qs.T).astype(jnp.float32)  # (W·bs, B)
+        r_lo, r_up, est = lookup_bounds_batch(
+            RankTable(thr[ridx], tab[ridx], m_items), scores)
+        if with_delta:
+            corr = DeltaCorrection(*delta)
+            sub = DeltaCorrection(add_scores=corr.add_scores[ridx],
+                                  del_scores=corr.del_scores[ridx],
+                                  user_live=corr.user_live[ridx],
+                                  m_new=corr.m_new)
+            r_lo, r_up, est = rt_mod.apply_delta_corrections(
+                scores, r_lo, r_up, est, sub)
+            m_eff = corr.selection_m()
+        else:
+            m_eff = m_items
+        shard_id = jax.lax.axis_index(AXIS)
+        gblk = shard_id * nb_loc + ids_loc                  # global ids (W,)
+        keep_rows = keep[:, gblk] & valid_loc[None, :]      # (B, W)
+        alive = jnp.repeat(keep_rows, block_size, axis=1)   # (B, W·bs)
+        inf = jnp.inf
+        r_lo = jnp.where(alive, r_lo.T, inf)                # (B, W·bs)
+        r_up = jnp.where(alive, r_up.T, inf)
+        est = jnp.where(alive, est.T, inf)
+        neg_lo, _ = jax.lax.top_k(-r_lo, k)
+        neg_up, _ = jax.lax.top_k(-r_up, k)
+        gl = jnp.moveaxis(jax.lax.all_gather(-neg_lo, AXIS), 0, 1)
+        gu = jnp.moveaxis(jax.lax.all_gather(-neg_up, AXIS), 0, 1)
+        R_lo_k = kth_smallest(gl.reshape(gl.shape[0], -1), k)      # (B,)
+        R_up_k = kth_smallest(gu.reshape(gu.shape[0], -1), k)
+        key_val, _, _, _ = lemma1_key(r_lo, r_up, est, R_lo_k=R_lo_k,
+                                      R_up_k=R_up_k, c=c, m_items=m_eff)
+        _, cand = jax.lax.top_k(-key_val, k)                # (B, k)
+        gidx = (jnp.take(ridx, cand) + shard_id * shard_n).astype(jnp.int32)
+        payload = jnp.stack(
+            [jnp.take_along_axis(est, cand, axis=-1),
+             jnp.take_along_axis(r_lo, cand, axis=-1),
+             jnp.take_along_axis(r_up, cand, axis=-1)], axis=-1)  # (B, k, 3)
+        return -neg_lo, -neg_up, payload, gidx
+
+    delta_specs = ((P(AXIS, None), P(AXIS, None), P(AXIS), P())
+                   if with_delta else ())
+    sharded = _shard_map(
+        local_part, mesh=mesh,
+        in_specs=(P(AXIS, None), P(AXIS, None), P(), P(AXIS, None),
+                  P(None, None), P(AXIS, None), P(AXIS, None),
+                  P(None, None)) + delta_specs,
+        out_specs=(P(None, AXIS), P(None, AXIS), P(None, AXIS, None),
+                   P(None, AXIS)))
+
+    @jax.jit
+    def batch_query_fn(rt: RankTable, users: jax.Array, qs: jax.Array,
+                       ids: jax.Array, valid: jax.Array, keep: jax.Array,
+                       corr: DeltaCorrection = None) -> QueryResult:
+        delta = tuple(corr) if with_delta else ()
+        all_lo, all_up, payload, gidx = sharded(
+            rt.thresholds, rt.table, rt.m, users, qs, ids, valid, keep,
+            *delta)                                         # (B, k·P, …)
+        est = payload[..., 0]
+        r_lo = payload[..., 1]
+        r_up = payload[..., 2]
+        R_lo_k = kth_smallest(all_lo, k)                    # (B,)
+        R_up_k = kth_smallest(all_up, k)
+        sel, guaranteed, accepted, pruned = lemma1_select(
+            r_lo, r_up, est, R_lo_k=R_lo_k, R_up_k=R_up_k, k=k, c=c,
+            m_items=corr.selection_m() if with_delta else rt.m)
+        return QueryResult(
+            indices=jnp.take_along_axis(gidx, sel, axis=-1).astype(
+                jnp.int32),
+            est_rank=jnp.take_along_axis(est, sel, axis=-1),
+            r_lo=r_lo, r_up=r_up,          # candidate-set bounds (B, k·P)
+            R_lo_k=R_lo_k, R_up_k=R_up_k,
+            guaranteed=guaranteed,
+            n_accepted=jnp.sum(accepted, axis=-1).astype(jnp.int32),
+            n_pruned=jnp.sum(pruned, axis=-1).astype(jnp.int32),
+        )
+
+    return batch_query_fn
+
+
 def make_query_fn(mesh: Mesh, k: int, n: int, c: float):
     """Single-query sharded execution: the B = 1 case of
     `make_batch_query_fn` (same shard_map, same merge; leading axis

@@ -10,6 +10,11 @@ name from the registry in `repro.core.backends`:
                        pass `mesh=` or it flattens all visible devices —
                        builds AND rebuilds row-sharded end-to-end via
                        `distributed.build_sharded`)
+    backend="pruned[:<inner>]"  two-phase block-pruned scan over any of
+                       the above (`repro.core.pruning`): per-block
+                       summaries certify which user tiles can hold
+                       answers, step 1 runs only over those — selected
+                       indices bit-identical to the inner full scan
 
 The API is BATCHED-FIRST: `query_batch` takes a (B, d) block of queries
 and executes step 1 as one (n, d) × (d, B) MXU matmul plus a single
@@ -117,6 +122,7 @@ class ReverseKRanksEngine:
         self._lock = threading.RLock()          # serializes mutations
         self._rebuild_lock = threading.Lock()   # one rebuild in flight
         self._next_item_id = m_base
+        self._corr_cost: dict = {}              # measured delta-cost cache
 
     @classmethod
     def build(cls, users: jax.Array, items: jax.Array, cfg: RankTableConfig,
@@ -198,16 +204,25 @@ class ReverseKRanksEngine:
                 "build_key=)")
         return snap
 
+    _KEEP_REMAP = object()      # _publish sentinel: carry snap.user_remap
+
     def _publish(self, snap: IndexSnapshot, *, users: jax.Array = None,
                  rank_table: RankTable = None,
                  delta: delta_mod.DeltaState = None,
                  base: delta_mod.BaseIndex = None,
-                 epoch: Optional[int] = None) -> IndexSnapshot:
-        """Install the next epoch (caller holds the mutation lock)."""
+                 epoch: Optional[int] = None,
+                 user_remap=_KEEP_REMAP) -> IndexSnapshot:
+        """Install the next epoch (caller holds the mutation lock).
+
+        `user_remap` defaults to carrying the previous snapshot's value
+        (ordinary mutations keep the last compaction visible to
+        clients); rebuilds pass an explicit array or None."""
         users = snap.users if users is None else users
         rank_table = snap.rank_table if rank_table is None else rank_table
         delta = snap.delta if delta is None else delta
         base = snap.base if base is None else base
+        if user_remap is ReverseKRanksEngine._KEEP_REMAP:
+            user_remap = snap.user_remap
         m_base = base.m_base if base is not None else int(rank_table.m)
         if (snap.corr is not None and users is snap.users
                 and base is snap.base
@@ -224,7 +239,7 @@ class ReverseKRanksEngine:
         new = IndexSnapshot(
             epoch=snap.epoch + 1 if epoch is None else epoch, users=users,
             rank_table=rank_table, config=snap.config, base=base,
-            delta=delta, corr=corr)
+            delta=delta, corr=corr, user_remap=user_remap)
         self._snapshots.publish(new)
         # refresh the introspection fields; consistent PAIRS always come
         # from current_snapshot(), these are best-effort mirrors
@@ -334,13 +349,59 @@ class ReverseKRanksEngine:
         snap = self.current_snapshot()
         return snap.delta.stats(snap.base)
 
+    def correction_overhead(self, *, batch: int = 8, k: int = 10,
+                            c: float = 2.0, iters: int = 2) -> float:
+        """MEASURED per-query delta-correction cost, as the wall-time
+        ratio (corrected query / static query) of a small probe batch on
+        this engine's backend — the delta-aware half of the rebuild
+        policy (`MaintenancePolicy.max_correction_overhead`).
+
+        The probe times the real serving path (the (n, |delta|) count
+        pass rides inside it), so the number reflects this host and this
+        backend, not a model. Results are cached per bucketed correction
+        SHAPE — the delta buffer pads score sets to power-of-two widths,
+        so a streaming workload re-measures only O(log |delta|) times per
+        epoch lineage. Returns 1.0 on an unmutated index (no probe run).
+        """
+        snap = self.current_snapshot()
+        if snap.corr is None:
+            return 1.0
+        key = (snap.corr.n_add, snap.corr.n_del, snap.users.shape[0],
+               batch, k, float(c))
+        hit = self._corr_cost.get(key)
+        if hit is not None:
+            return hit
+        qs = snap.users[:min(batch, snap.users.shape[0])]
+
+        def run(delta) -> None:
+            if delta is None:
+                r = self._backend.query_batch(snap.rank_table, snap.users,
+                                              qs, k=k, c=c)
+            else:
+                r = self._backend.query_batch(snap.rank_table, snap.users,
+                                              qs, k=k, c=c, delta=delta)
+            jax.block_until_ready(r.indices)
+
+        times = {}
+        for name, delta in (("static", None), ("delta", snap.corr)):
+            run(delta)                          # warmup: compile both
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                run(delta)
+            times[name] = (time.perf_counter() - t0) / iters
+        ratio = times["delta"] / max(times["static"], 1e-9)
+        self._corr_cost[key] = ratio
+        return ratio
+
     def live_items(self) -> jax.Array:
         return self._require_base("live_items").live_items()
 
     def live_item_ids(self) -> np.ndarray:
         return self._require_base("live_item_ids").live_item_ids()
 
-    def rebuild(self, reason: str = "manual") -> Optional[RebuildRecord]:
+    def rebuild(self, reason: str = "manual",
+                compact_dead_above: Optional[float] = None
+                ) -> Optional[RebuildRecord]:
         """Full Algorithm 1 over the live item set on this engine's
         backend, then an atomic hot-swap to the new epoch.
 
@@ -350,6 +411,15 @@ class ReverseKRanksEngine:
         upserted or appended mid-build are re-estimated against the new
         sample — so no mutation is ever lost to a rebuild. Returns None
         if another rebuild is already in flight.
+
+        `compact_dead_above` (PR 4): when the tombstoned-user fraction at
+        swap time exceeds this threshold, dead rows are COMPACTED out of
+        the users/table arrays instead of surviving as masked dead
+        weight; the old→new index remap is surfaced on the published
+        snapshot (`IndexSnapshot.user_remap`, −1 for dropped rows) so
+        clients can translate the ids they hold. Compaction is skipped —
+        never failed — when the shrunken n would violate the backend's
+        shape contract (e.g. sharded divisibility). None disables it.
         """
         if not self._rebuild_lock.acquire(blocking=False):
             return None
@@ -401,18 +471,45 @@ class ReverseKRanksEngine:
                     tab = tab.at[j].set(rows_tab.astype(tab.dtype))
                 delta_new = delta_mod.residual_after_rebuild(
                     snap.base, now.delta, live_ids)
+                remap = None
+                n_dropped = 0
+                live = delta_new.user_live
+                if (compact_dead_above is not None and live.size
+                        and 1.0 - float(live.mean()) > compact_dead_above):
+                    keep = np.flatnonzero(live)
+                    try:
+                        # a shape the backend cannot query (e.g. sharded
+                        # divisibility) skips compaction, never fails the
+                        # rebuild — dead rows stay masked until a later
+                        # rebuild can drop them legally
+                        self._backend.check_users_shape(int(keep.size))
+                        ok = keep.size > 0
+                    except ValueError:
+                        ok = False
+                    if ok:
+                        n_dropped = int(live.size - keep.size)
+                        remap = np.full(live.size, -1, np.int64)
+                        remap[keep] = np.arange(keep.size)
+                        j = jnp.asarray(keep)
+                        users_now = users_now[j]
+                        thr = thr[j]
+                        tab = tab[j]
+                        delta_new = dataclasses.replace(
+                            delta_new,
+                            user_live=np.ones(keep.size, bool))
                 swapped = self._publish(
                     now, users=users_now,
                     rank_table=RankTable(thresholds=thr, table=tab,
                                          m=rt_new.m),
-                    delta=delta_new, base=base_new)
+                    delta=delta_new, base=base_new, user_remap=remap)
             # epoch captured from the published snapshot, not self.epoch:
             # a mutation racing in after the lock releases must not be
             # misattributed to this swap
             return RebuildRecord(
                 epoch_before=snap.epoch, epoch_after=swapped.epoch,
                 reason=reason, build_s=build_s,
-                swap_s=time.monotonic() - t1, stats=stats)
+                swap_s=time.monotonic() - t1, stats=stats,
+                users_compacted=n_dropped)
         finally:
             self._rebuild_lock.release()
 

@@ -22,6 +22,19 @@ Policy knobs:
                        (Eq. (1) mass estimated by samples whose item no
                        longer exists — pure noise) exceeds this fraction
                        of m_base: the rank-error budget.
+  max_correction_overhead — rebuild when the MEASURED per-query cost of
+                       the delta correction (`engine.correction_overhead`
+                       — the real serving path timed on this host/backend
+                       at rebuild-decision time) exceeds this ratio of
+                       the static query. This is the delta-aware COST
+                       model: the ratio triggers optimize total serving
+                       cost proxies, this one measures it. inf disables
+                       the probe entirely (no timing cost per poll).
+  compact_dead_above — loop rebuilds pass this to
+                       `engine.rebuild(compact_dead_above=)`: past this
+                       tombstoned-user fraction, dead rows are compacted
+                       out at swap time and the old→new remap published
+                       on the snapshot. None leaves dead rows masked.
   min_interval_s     — floor between rebuilds, so a mutation storm
                        cannot wedge the loop into back-to-back builds.
 """
@@ -40,16 +53,26 @@ from repro.index.delta import DeltaStats
 class MaintenancePolicy:
     max_delta_ratio: float = 0.05
     max_stale_fraction: float = 0.02
+    max_correction_overhead: float = float("inf")
+    compact_dead_above: Optional[float] = None
     min_interval_s: float = 0.0
 
-    def trigger(self, stats: DeltaStats) -> Optional[str]:
-        """Reason string when `stats` demands a rebuild, else None."""
+    def trigger(self, stats: DeltaStats,
+                correction_overhead: Optional[float] = None
+                ) -> Optional[str]:
+        """Reason string when a rebuild is demanded, else None.
+        `correction_overhead` is the measured delta/static query cost
+        ratio (None when the caller did not probe it)."""
         if stats.delta_ratio > self.max_delta_ratio:
             return (f"delta_ratio {stats.delta_ratio:.4f} > "
                     f"{self.max_delta_ratio}")
         if stats.stale_fraction > self.max_stale_fraction:
             return (f"stale_fraction {stats.stale_fraction:.4f} > "
                     f"{self.max_stale_fraction}")
+        if (correction_overhead is not None
+                and correction_overhead > self.max_correction_overhead):
+            return (f"correction_overhead {correction_overhead:.2f}x > "
+                    f"{self.max_correction_overhead}x")
         return None
 
 
@@ -63,6 +86,7 @@ class RebuildRecord:
     build_s: float          # off-lock Algorithm 1 wall time
     swap_s: float           # under-lock re-base + publish wall time
     stats: DeltaStats       # delta accounting at capture time
+    users_compacted: int = 0    # tombstoned rows dropped by the swap
 
 
 class MaintenanceLoop:
@@ -133,11 +157,19 @@ class MaintenanceLoop:
             if (now - self._last_rebuild_t < self.policy.min_interval_s
                     or now < self._backoff_until):
                 continue
-            reason = self.policy.trigger(self.engine.delta_stats())
+            cost = None
+            if self.policy.max_correction_overhead != float("inf"):
+                # measured at rebuild-DECISION time, on the serving
+                # backend (cached per correction shape — cheap per poll)
+                cost = self.engine.correction_overhead()
+            reason = self.policy.trigger(self.engine.delta_stats(),
+                                         correction_overhead=cost)
             if reason is None:
                 continue
             try:
-                record = self.engine.rebuild(reason=reason)
+                record = self.engine.rebuild(
+                    reason=reason,
+                    compact_dead_above=self.policy.compact_dead_above)
             except Exception as e:      # keep maintaining; surface it
                 self.failures.append(e)
                 del self.failures[:-self._MAX_FAILURES]

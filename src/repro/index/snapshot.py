@@ -44,6 +44,13 @@ class IndexSnapshot:
     (None when the delta is empty — the static fast path); `base` is None
     for engines constructed without their item set, which can serve and
     mask users but not mutate items.
+
+    `user_remap` surfaces the LAST user-row compaction (PR 4): a
+    compacting rebuild drops tombstoned user rows, so indices returned by
+    queries change coordinates. `user_remap[old] = new` (−1 for dropped
+    rows) lets clients translate ids they hold; it is carried forward by
+    subsequent mutations and replaced (or cleared) by the next rebuild.
+    None means no compaction has happened on this index lineage.
     """
 
     epoch: int
@@ -53,6 +60,7 @@ class IndexSnapshot:
     base: Optional[BaseIndex]
     delta: DeltaState
     corr: Optional[DeltaCorrection]
+    user_remap: Optional[np.ndarray] = None
 
     @property
     def n(self) -> int:

@@ -85,6 +85,36 @@ def bound_ranks_batched(users: jax.Array, qs: jax.Array,
     return r_lo[:n, :B].T, r_up[:n, :B].T, est[:n, :B].T
 
 
+@functools.partial(jax.jit, static_argnames=("m", "block_n"))
+def bound_ranks_batched_pruned(users: jax.Array, qs: jax.Array,
+                               thresholds: jax.Array, table: jax.Array,
+                               block_ids: jax.Array, *, m: int,
+                               block_n: int = 256
+                               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Masked-grid batched step 1 (PR 4): like `bound_ranks_batched`, but
+    the Pallas grid runs only over the user tiles named in `block_ids`
+    ((nk,) int32, one id per block_n-row tile) via a scalar-prefetch
+    block index map — skipped tiles are never read from HBM.
+
+    Returns COMPACTED (r↓, r↑, est), each (B, nk·block_n) float32 in
+    block-list order (tile j of the outputs is user tile block_ids[j]);
+    the caller scatters back to user coordinates
+    (`core.pruning.scatter_select`). Tail-tile padding rows carry
+    well-defined junk exactly like the unpruned wrapper's — the scatter
+    drops them.
+    """
+    tau = thresholds.shape[1]
+    up = _pad_rows(users.astype(jnp.float32), block_n)
+    tp = _pad_cols_edge(_pad_rows(thresholds, block_n, value=0.0), _LANE)
+    bp = _pad_cols_edge(_pad_rows(table, block_n, value=1.0), _LANE)
+    qt = _pad_rows(qs.astype(jnp.float32), 8).T             # (d, Bp)
+    B = qs.shape[0]
+    r_lo, r_up, est = _us.bound_ranks_batched_masked_kernel_call(
+        up, qt, tp, bp, block_ids.astype(jnp.int32), m=m, tau_valid=tau,
+        block_n=block_n, interpret=INTERPRET)
+    return r_lo[:, :B].T, r_up[:, :B].T, est[:, :B].T
+
+
 @functools.partial(jax.jit, static_argnames=("block_n",))
 def build_table_rows(users: jax.Array, samples: jax.Array,
                      weights: jax.Array, thresholds: jax.Array, *,

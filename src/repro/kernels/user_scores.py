@@ -37,6 +37,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _bound_rank_kernel(u_ref, q_ref, thr_ref, tab_ref, rlo_ref, rup_ref,
@@ -171,6 +172,65 @@ def _bound_rank_batched_kernel(u_ref, qt_ref, thr_ref, tab_ref, rlo_ref,
     rup_ref[...] = r_up
     # sub-unit margin tie-break (matches ref_bound_ranks)
     est_ref[...] = jnp.clip(est, r_lo, r_up) - 0.5 * m_above / (1.0 + m_above)
+
+
+def bound_ranks_batched_masked_kernel_call(
+        users: jax.Array, qt: jax.Array, thresholds: jax.Array,
+        table: jax.Array, block_ids: jax.Array, *, m: int, tau_valid: int,
+        block_n: int = 256, interpret: bool = True
+        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Masked-grid twin of `bound_ranks_batched_kernel_call` (PR 4): the
+    grid runs over the KEPT block list instead of every user tile.
+
+    `block_ids` (nk,) int32 selects which user/threshold/table tiles each
+    grid step loads — the tile index maps read it as a SCALAR-PREFETCH
+    operand (`pltpu.PrefetchScalarGridSpec`), so the DMA engine fetches
+    exactly the surviving tiles and the n·(d + 2τ) HBM stream shrinks to
+    the kept fraction. Outputs are COMPACTED: grid step i writes tile i
+    of three (nk·block_n, B) arrays (the caller scatters them back to
+    user coordinates — writing through the same index map would leave
+    skipped tiles uninitialized).
+
+    Per-tile math is `_bound_rank_batched_kernel` verbatim — a kept
+    tile's (block_n, d) × (d, B) matmul sees the identical operand tile
+    as the full scan, so compacted results are bit-identical to the
+    corresponding rows of the unpruned kernel.
+    """
+    n, d = users.shape
+    taup = thresholds.shape[1]
+    B = qt.shape[1]
+    nk = block_ids.shape[0]
+    kern = functools.partial(_bound_rank_batched_kernel, m=m,
+                             tau_valid=tau_valid)
+
+    def tile(i, ids):
+        return (ids[i], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nk,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), tile),               # U tile (gathered)
+            pl.BlockSpec((d, B), lambda i, ids: (0, 0)),    # Qᵀ (replicated)
+            pl.BlockSpec((block_n, taup), tile),
+            pl.BlockSpec((block_n, taup), tile),
+        ],
+        out_specs=[pl.BlockSpec((block_n, B), lambda i, ids: (i, 0))] * 3,
+    )
+
+    def wrapped(ids_ref, u_ref, qt_ref, thr_ref, tab_ref, rlo_ref, rup_ref,
+                est_ref):
+        # the prefetched id array steers the index maps only; the tile
+        # body is the stock batched kernel
+        kern(u_ref, qt_ref, thr_ref, tab_ref, rlo_ref, rup_ref, est_ref)
+
+    out_shape = [jax.ShapeDtypeStruct((nk * block_n, B), jnp.float32)] * 3
+    return pl.pallas_call(
+        wrapped,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(block_ids, users, qt, thresholds, table)
 
 
 def bound_ranks_batched_kernel_call(users: jax.Array, qt: jax.Array,

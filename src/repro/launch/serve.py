@@ -9,7 +9,7 @@ Queries are submitted one at a time to `repro.serve.MicroBatcher`, which
 coalesces them into --max-batch-sized ticks dispatched through
 `engine.query_batch` (one rank-table pass per tick); --max-wait-ms is the
 latency-vs-throughput knob (how long a partial tick waits to fill).
---backend accepts any registry name (dense|fused|sharded) plus wrapped
+--backend accepts any registry name (dense|fused|sharded|pruned) plus wrapped
 specs such as "cached:fused" (within-tick dedupe + cross-tick per-query
 LRU; see repro.serve.cache). --max-depth bounds the queue (fail-fast
 back-pressure). --no-eval-exact skips the oracle pass.

@@ -22,7 +22,13 @@ from repro.core.rank_table import build_rank_table
 from repro.core.types import RankTableConfig
 from tests.conftest import make_problem
 
-ALL_BACKENDS = ("dense", "fused", "sharded")
+# "pruned"/"pruned:fused" ride the full parity matrix: per-query phase-A
+# masking makes even their materialized (B, n) bound arrays (skip
+# sentinels included) independent of batch-mates, so every comparison
+# below holds bitwise. "pruned:sharded" returns (B, k·P) candidate-SET
+# bounds whose tail is batch-dependent — its (relaxed to selected
+# outputs) parity lives in tests/test_pruning.py.
+ALL_BACKENDS = ("dense", "fused", "sharded", "pruned", "pruned:fused")
 K = 7
 
 
@@ -125,7 +131,8 @@ def test_backends_agree_with_core(problem, regimes, backend, regime):
 def test_registry_lists_and_errors():
     names = BK.available_backends()
     for name in ALL_BACKENDS:
-        assert name in names
+        # wrapper specs ("pruned:fused") resolve but list only by prefix
+        assert name.partition(":")[0] in names
     with pytest.raises(ValueError, match="unknown query backend"):
         BK.get_backend("no-such-backend")
     assert ReverseKRanksEngine.backends() == names

@@ -1,0 +1,360 @@
+"""Block-pruned query execution (the PR-4 tentpole, `repro.core.pruning`).
+
+Parity contract (matching tests/test_backends.py): `"pruned:<inner>"`
+must return BIT-IDENTICAL selected indices and table-derived statistics
+(R↓_k / R↑_k, integer-valued in rank space) to the UNPRUNED inner
+backend on every case — both Lemma-1 regimes, B ∈ {1, 16}, static and
+mutated indexes. `est_rank` compares at float accuracy: est is
+continuous in the score u·q, whose LOW BITS legitimately differ between
+the full-matrix matmul and the gathered kept-row matmul (same reason
+batched-vs-single est differs repo-wide). The full r↓/r↑ arrays carry
+the skip sentinel for pruned users and the n_accepted/n_pruned
+diagnostics count sentinels, so those compare only within the pruned
+backend itself, where per-query masking makes them B-independent.
+
+Problem geometry: users are drawn from cluster-contiguous Gaussian
+blobs, so summary blocks are coherent and phase A genuinely prunes
+(asserted); the adversarial case uses i.i.d. users where every block
+looks alike and the keep-everything fallback must engage. Sizes keep n
+divisible by 8 shards × block_size so the suite also runs under the CI
+job forcing 8 host devices (per-shard summaries + the pruned tree-merge).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backends as BK
+from repro.core import pruning as PR
+from repro.core.engine import ReverseKRanksEngine
+from repro.core.query import lookup_bounds_batch
+from repro.core.rank_table import build_rank_table
+from repro.core.types import RankTableConfig
+
+INNERS = ("dense", "fused", "sharded")
+K, BS = 7, 64                   # small block size so n=2048 has 32 blocks
+N, M, D, NCL = 2048, 512, 16, 16
+CFG_COARSE = RankTableConfig(tau=16, omega=4, s=8)
+
+
+def clustered_problem(key, n=N, m=M, d=D, n_clusters=NCL, spread=0.1):
+    """Cluster-contiguous users (the block-coherent favorable case)."""
+    kc, ku, ki, kn = jax.random.split(key, 4)
+    centers = jax.random.normal(kc, (n_clusters, d), jnp.float32) * 2.0
+    assign = jnp.arange(n) * n_clusters // n        # contiguous, any n
+    users = (centers[assign]
+             + spread * jax.random.normal(ku, (n, d), jnp.float32))
+    items = (centers[jax.random.randint(ki, (m,), 0, n_clusters)]
+             + spread * jax.random.normal(kn, (m, d), jnp.float32))
+    return users, items
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return clustered_problem(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def regimes(problem):
+    """(cfg, rank_table, c) pinning both Lemma-1 cases (cf.
+    tests/test_backends.py)."""
+    users, items = problem
+    exact_cfg = RankTableConfig(tau=64, omega=4, s=M // 4,
+                                threshold_mode="exact")
+    # clustered rank distributions are heavy-tailed, so closing the
+    # search (c·R↓_k ≥ R↑_k) for EVERY query needs a generous c
+    return {
+        "guaranteed": (exact_cfg,
+                       build_rank_table(users, items, exact_cfg,
+                                        jax.random.PRNGKey(0)), 32.0),
+        "non_guaranteed": (CFG_COARSE,
+                           build_rank_table(users, items, CFG_COARSE,
+                                            jax.random.PRNGKey(1)), 1.0),
+    }
+
+
+def off_grid_queries(items, B, seed=7):
+    # offset 18: item 1 happens to close the coarse-table search even at
+    # c = 1 on the clustered problem; starting at 18 keeps the anchor
+    # query (and the B = 1 case) in the non-guaranteed regime
+    base = items[(18 + jnp.arange(B) * 17) % items.shape[0]]
+    return base * (1.0 + 1e-4 * jax.random.normal(
+        jax.random.PRNGKey(seed), base.shape, jnp.float32))
+
+
+def pruned_engine(users, rt, cfg, inner, **knobs):
+    eng = ReverseKRanksEngine(users=users, rank_table=rt, config=cfg,
+                              backend=f"pruned:{inner}")
+    eng._backend.block_size = knobs.pop("block_size", BS)
+    for k, v in knobs.items():
+        setattr(eng._backend, k, v)
+    return eng
+
+
+def assert_selected_parity(got, want):
+    np.testing.assert_array_equal(np.asarray(got.indices),
+                                  np.asarray(want.indices))
+    np.testing.assert_allclose(np.asarray(got.est_rank),
+                               np.asarray(want.est_rank), rtol=1e-5,
+                               atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(got.R_lo_k),
+                                  np.asarray(want.R_lo_k))
+    np.testing.assert_array_equal(np.asarray(got.R_up_k),
+                                  np.asarray(want.R_up_k))
+    np.testing.assert_array_equal(np.asarray(got.guaranteed),
+                                  np.asarray(want.guaranteed))
+
+
+# ------------------------------------------------------------ summaries
+def test_envelopes_certify_members(problem, regimes):
+    """Every user's (r↓, r↑) must lie inside its block's phase-A
+    envelope bounds — the invariant all pruning correctness rests on."""
+    users, _ = problem
+    _, rt, _ = regimes["non_guaranteed"]
+    summ = PR.build_block_summary(users, rt, block_size=BS)
+    qs = off_grid_queries(problem[1], 8)
+    scores = (users @ qs.T).astype(jnp.float32)
+    r_lo, r_up, _ = lookup_bounds_batch(rt, scores)         # (n, B)
+    r_lo_opt, r_up_pes = PR._envelope_bounds(summ, qs)      # (nb, B)
+    r_lo, r_up = np.asarray(r_lo), np.asarray(r_up)
+    lo_env, up_env = np.asarray(r_lo_opt), np.asarray(r_up_pes)
+    for blk in range(summ.n_blocks):
+        rows = slice(blk * BS, min((blk + 1) * BS, N))
+        assert np.all(lo_env[blk] <= r_lo[rows].min(axis=0) + 1e-6)
+        assert np.all(up_env[blk] >= r_up[rows].max(axis=0) - 1e-6)
+
+
+def test_rhat_bounds_true_Rupk(problem, regimes):
+    users, _ = problem
+    _, rt, c = regimes["non_guaranteed"]
+    summ = PR.build_block_summary(users, rt, block_size=BS)
+    qs = off_grid_queries(problem[1], 8)
+    _, r_hat = PR.phase_a(summ, qs, k=K, block_size=BS)
+    ref = ReverseKRanksEngine(users=users, rank_table=rt,
+                              config=CFG_COARSE)
+    true_up = np.asarray(ref.query_batch(qs, k=K, c=c).R_up_k)
+    assert np.all(np.asarray(r_hat) >= true_up - 1e-6)
+
+
+def test_tail_block_summary():
+    """n not a multiple of block_size: the partial tail block's rows
+    count is exact and parity still holds."""
+    users, items = clustered_problem(jax.random.PRNGKey(3), n=1000, m=256)
+    rt = build_rank_table(users, items, CFG_COARSE, jax.random.PRNGKey(1))
+    summ = PR.build_block_summary(users, rt, block_size=BS)
+    rows = np.asarray(summ.rows)
+    assert rows.sum() == 1000 and rows[-1] == 1000 - (1000 // BS) * BS
+    ref = ReverseKRanksEngine(users=users, rank_table=rt,
+                              config=CFG_COARSE)
+    eng = pruned_engine(users, rt, CFG_COARSE, "dense",
+                        max_union_frac=1.1)
+    qs = off_grid_queries(items, 4)
+    assert_selected_parity(eng.query_batch(qs, k=K, c=1.0),
+                           ref.query_batch(qs, k=K, c=1.0))
+
+
+# ------------------------------------------------------- static parity
+@pytest.mark.parametrize("inner", INNERS)
+@pytest.mark.parametrize("B", [1, 16])
+@pytest.mark.parametrize("regime", ["guaranteed", "non_guaranteed"])
+def test_pruned_matches_inner(problem, regimes, inner, B, regime):
+    users, items = problem
+    cfg, rt, c = regimes[regime]
+    ref = ReverseKRanksEngine(users=users, rank_table=rt, config=cfg,
+                              backend=inner)
+    eng = pruned_engine(users, rt, cfg, inner)
+    qs = off_grid_queries(items, B)
+    want = ref.query_batch(qs, k=K, c=c)
+    got = eng.query_batch(qs, k=K, c=c)
+    if regime == "guaranteed":
+        assert bool(np.all(np.asarray(want.guaranteed)))
+    else:
+        assert not bool(np.asarray(want.guaranteed)[0])
+    assert_selected_parity(got, want)
+    st = eng._backend.stats
+    assert st.n_blocks == N // BS
+    # single-query == batched column (per-query masking makes the pruned
+    # result independent of its batch-mates)
+    one = eng.query(qs[0], k=K, c=c)
+    np.testing.assert_array_equal(np.asarray(one.indices),
+                                  np.asarray(got.indices[0]))
+    np.testing.assert_allclose(np.asarray(one.est_rank),
+                               np.asarray(got.est_rank[0]), rtol=1e-5,
+                               atol=1e-4)
+
+
+def test_pruning_actually_skips(problem, regimes):
+    """Clustered users + clustered queries: phase A must certify real
+    skips (the whole point), and phase B must still be exact."""
+    users, items = problem
+    cfg, rt, c = regimes["non_guaranteed"]
+    eng = pruned_engine(users, rt, cfg, "dense")
+    ref = ReverseKRanksEngine(users=users, rank_table=rt, config=cfg)
+    # queries from ONE cluster → the union keep set stays small
+    qs = items[:8] * (1.0 + 1e-4 * jax.random.normal(
+        jax.random.PRNGKey(5), (8, D), jnp.float32))
+    assert_selected_parity(eng.query_batch(qs, k=K, c=c),
+                           ref.query_batch(qs, k=K, c=c))
+    st = eng._backend.stats
+    assert st.fallback in ("", "dense")
+    assert st.kept_per_query < 0.8          # per-query pruning engaged
+    if not st.fallback:
+        assert st.kept_union < st.n_blocks
+
+
+def test_adversarial_all_blocks_survive():
+    """i.i.d. users: every block looks alike, phase A keeps everything,
+    and the dense fallback dispatches the inner backend unpruned."""
+    from tests.conftest import make_problem
+    users, items = make_problem(jax.random.PRNGKey(9), n=1024, m=256, d=D)
+    rt = build_rank_table(users, items, CFG_COARSE, jax.random.PRNGKey(1))
+    ref = ReverseKRanksEngine(users=users, rank_table=rt,
+                              config=CFG_COARSE)
+    eng = pruned_engine(users, rt, CFG_COARSE, "dense")
+    qs = off_grid_queries(items, 8)
+    assert_selected_parity(eng.query_batch(qs, k=K, c=1.0),
+                           ref.query_batch(qs, k=K, c=1.0))
+    st = eng._backend.stats
+    assert st.fallback == "dense" and st.kept_per_query > 0.5
+    # forcing phase B past the fallback must still be exact
+    eng2 = pruned_engine(users, rt, CFG_COARSE, "dense",
+                         max_union_frac=1.1)
+    assert_selected_parity(eng2.query_batch(qs, k=K, c=1.0),
+                           ref.query_batch(qs, k=K, c=1.0))
+    assert eng2._backend.stats.fallback == ""
+
+
+# -------------------------------------------------------- delta parity
+def churn(eng):
+    new = jax.random.normal(jax.random.PRNGKey(11), (16, D), jnp.float32)
+    ids = eng.insert_items(new)
+    eng.delete_items([3, 17, int(ids[1])])
+    eng.delete_users([9, N - 100])
+    return ids
+
+
+@pytest.mark.parametrize("inner", INNERS)
+@pytest.mark.parametrize("B", [1, 16])
+def test_delta_path_parity(problem, inner, B):
+    users, items = problem
+    ref = ReverseKRanksEngine.build(users, items, CFG_COARSE,
+                                    jax.random.PRNGKey(1), backend=inner)
+    eng = ReverseKRanksEngine.build(users, items, CFG_COARSE,
+                                    jax.random.PRNGKey(1),
+                                    backend=f"pruned:{inner}")
+    eng._backend.block_size = BS
+    churn(ref)
+    churn(eng)
+    qs = off_grid_queries(items, B)
+    want = ref.query_batch(qs, k=K, c=1.0)
+    got = eng.query_batch(qs, k=K, c=1.0)
+    assert eng._backend.stats.fallback in ("", "dense")
+    assert_selected_parity(got, want)
+
+
+def test_delta_guard_falls_back_to_full_scan(problem):
+    users, items = problem
+    eng = ReverseKRanksEngine.build(users, items, CFG_COARSE,
+                                    jax.random.PRNGKey(1),
+                                    backend="pruned:dense")
+    eng._backend.block_size = BS
+    ref = ReverseKRanksEngine.build(users, items, CFG_COARSE,
+                                    jax.random.PRNGKey(1))
+    big = jax.random.normal(jax.random.PRNGKey(5), (M // 3, D),
+                            jnp.float32)          # |delta|/m > guard 0.25
+    eng.insert_items(big)
+    ref.insert_items(big)
+    qs = off_grid_queries(items, 4)
+    assert_selected_parity(eng.query_batch(qs, k=K, c=1.0),
+                           ref.query_batch(qs, k=K, c=1.0))
+    assert eng._backend.stats.fallback == "delta-guard"
+
+
+def test_dead_users_never_selected(problem):
+    """Deleting a would-be winner: the pruned path must exclude it via
+    the live-count-aware R̂ seed exactly like the full scan."""
+    users, items = problem
+    ref = ReverseKRanksEngine.build(users, items, CFG_COARSE,
+                                    jax.random.PRNGKey(1))
+    qs = off_grid_queries(items, 4)
+    winners = np.unique(np.asarray(ref.query_batch(qs, k=K, c=1.0).indices))
+    eng = ReverseKRanksEngine.build(users, items, CFG_COARSE,
+                                    jax.random.PRNGKey(1),
+                                    backend="pruned:dense")
+    eng._backend.block_size = BS
+    ref.delete_users(winners[:3].tolist())
+    eng.delete_users(winners[:3].tolist())
+    got = eng.query_batch(qs, k=K, c=1.0)
+    assert_selected_parity(got, ref.query_batch(qs, k=K, c=1.0))
+    assert not np.isin(winners[:3], np.asarray(got.indices)).any()
+
+
+# ------------------------------------------------- lifecycle / registry
+def test_rebuild_regenerates_summaries(problem):
+    """A rebuild hot-swap changes the index generation; the summary
+    cache must miss and rebuild over the new arrays (identity-keyed)."""
+    users, items = problem
+    eng = ReverseKRanksEngine.build(users, items, CFG_COARSE,
+                                    jax.random.PRNGKey(1),
+                                    backend="pruned:dense")
+    bk = eng._backend
+    snap0 = eng.current_snapshot()
+    s0 = bk.summary_for(snap0.rank_table, snap0.users)
+    assert bk.summary_for(snap0.rank_table, snap0.users) is s0  # cached
+    eng.insert_items(jax.random.normal(jax.random.PRNGKey(2), (8, D)))
+    eng.rebuild(reason="test")
+    snap1 = eng.current_snapshot()
+    s1 = bk.summary_for(snap1.rank_table, snap1.users)
+    assert s1 is not s0
+    assert int(s1.m) == int(snap1.rank_table.m) == M + 8
+    # queries on the rebuilt index still parity-exact
+    ref = ReverseKRanksEngine(users=snap1.users,
+                              rank_table=snap1.rank_table,
+                              config=CFG_COARSE)
+    qs = off_grid_queries(items, 4)
+    assert_selected_parity(eng.query_batch(qs, k=K, c=1.0),
+                           ref.query_batch(qs, k=K, c=1.0))
+
+
+def test_upsert_users_regenerates_summaries(problem):
+    """User mutations change the user-array identity without a rebuild —
+    the stale box would mis-certify the upserted row's scores."""
+    users, items = problem
+    eng = ReverseKRanksEngine.build(users, items, CFG_COARSE,
+                                    jax.random.PRNGKey(1),
+                                    backend="pruned:dense")
+    eng._backend.block_size = BS
+    ref = ReverseKRanksEngine.build(users, items, CFG_COARSE,
+                                    jax.random.PRNGKey(1))
+    vec = 3.0 * jax.random.normal(jax.random.PRNGKey(13), (1, D))
+    eng.upsert_users(vec, indices=[100])
+    ref.upsert_users(vec, indices=[100])
+    qs = off_grid_queries(items, 4)
+    assert_selected_parity(eng.query_batch(qs, k=K, c=1.0),
+                           ref.query_batch(qs, k=K, c=1.0))
+
+
+def test_registry_and_engine_spec():
+    assert "pruned" in BK.available_backends()
+    bk = BK.get_backend("pruned")
+    assert isinstance(bk, BK.PrunedBackend)
+    assert bk.inner.name == "dense"
+    assert BK.get_backend("pruned:fused").inner.name == "fused"
+    with pytest.raises(ValueError, match="unknown query backend"):
+        BK.get_backend("pruned:no-such-inner")
+
+
+def test_sharded_alignment_fallback(problem):
+    """Tiles straddling shard boundaries are refused up front: the
+    sharded inner runs unpruned rather than mis-gathering."""
+    users, items = problem
+    rt = build_rank_table(users, items, CFG_COARSE, jax.random.PRNGKey(1))
+    eng = pruned_engine(users, rt, CFG_COARSE, "sharded",
+                        block_size=3 * BS)  # n % (P·bs) != 0 for any P>1
+    ref = ReverseKRanksEngine(users=users, rank_table=rt,
+                              config=CFG_COARSE, backend="sharded")
+    qs = off_grid_queries(items, 4)
+    got = eng.query_batch(qs, k=K, c=1.0)
+    assert_selected_parity(got, ref.query_batch(qs, k=K, c=1.0))
+    if jax.device_count() > 1:
+        assert eng._backend.stats.fallback == "align"
