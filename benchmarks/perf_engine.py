@@ -38,9 +38,18 @@ overhead in the adversarial no-skip case, and bit-identical selected
 indices on every measured batch. Run with:
     PYTHONPATH=src python -m benchmarks.perf_engine --pruned
 
+Part G (CPU, real execution): the PR-5 storage-tier benchmark — B = 16
+`query_batch` latency of the dense backend at StorageSpec ∈ {f32, bf16,
+int8} on the SAME index data (paired min-of-rounds, like --pruned), plus
+certified-containment and top-k-overlap checks on every measured batch.
+int8 storage streams ~4× fewer bytes on the scan PR 4 showed is the cost
+center. Acceptance: int8 ≥ 1.5× over f32-dense at n = 256k, d = 64,
+τ = 128, B = 16, recorded in BENCH_PR5.json. Run with:
+    PYTHONPATH=src python -m benchmarks.perf_engine --quant
+
 `--json PATH` dumps every executed mode's metrics machine-readably
 (latencies, ratios, skip rates — the perf trajectory artifact; see
-BENCH_PR4.json); `--smoke` shrinks sizes for CI.
+BENCH_PR4.json / BENCH_PR5.json); `--smoke` shrinks sizes for CI.
 
 Part E (CPU, real execution): the PR-3 dynamic-index benchmark — B = 16
 `query_batch` latency and rank quality of the DELTA PATH (streaming
@@ -68,6 +77,8 @@ VARIANTS = [
     ("tau128_f32", dict(tau=128, storage_dtype="float32")),
     ("tau500_bf16", dict(tau=500, storage_dtype="bfloat16")),
     ("tau128_bf16", dict(tau=128, storage_dtype="bfloat16")),
+    ("tau500_int8", dict(tau=500, storage_dtype="int8")),
+    ("tau128_int8", dict(tau=128, storage_dtype="int8")),
 ]
 
 
@@ -91,11 +102,14 @@ def roofline_mode():
     print(f"amazon-k query on flat{chips}: n={n:,} d={d}")
     for name, kw in VARIANTS:
         cfg = dataclasses.replace(DEFAULT_TABLE, **kw)
-        st = jnp.dtype(cfg.storage_dtype)
+        st = cfg.storage.table_dtype
+        vec = jax.ShapeDtypeStruct((n, 1), jnp.float32)
+        quant = ({f: vec for f in RankTable._QUANT_FIELDS}
+                 if cfg.storage.kind == "int8" else {})
         rt_sds = RankTable(
             thresholds=jax.ShapeDtypeStruct((n, cfg.tau), st),
             table=jax.ShapeDtypeStruct((n, cfg.tau), st),
-            m=jax.ShapeDtypeStruct((), jnp.int32))
+            m=jax.ShapeDtypeStruct((), jnp.int32), **quant)
         qfn = D.make_query_fn(mesh, k=10, n=n, c=2.0)
         compiled = jax.jit(qfn).lower(rt_sds, users_sds, q_sds).compile()
         roof = RL.analyze(compiled, chips=chips, model_flops=2.0 * n * d)
@@ -259,6 +273,59 @@ def serve_mode():
                 "offered_qps": rate, "achieved_qps": len(futs) / wall,
                 "fill": st.mean_fill, "p50_ms": st.p50_ms,
                 "p99_ms": st.p99_ms, "rejected": st.rejected}
+
+    _near_dup_cache_sweep(eng, users, items)
+
+
+def _near_dup_cache_sweep(eng, users, items):
+    """PR-5 satellite: near-duplicate query caching — hit rate vs rank
+    quality when the `CachingBackend` LRU key is quantized query bytes
+    (`quantize_key_bits`), on a hot-item workload with per-ask jitter.
+
+    A quantized key trades exactness for reuse: queries within ~half a
+    grid cell per coordinate share an entry, so the served result is the
+    exact answer of a NEIGHBORING query. Coarser grids (fewer bits) raise
+    the hit rate and the rank-quality cost — both measured here against
+    the exact oracle."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import metrics
+    from repro.core.exact import exact_ranks, reverse_k_ranks
+    from repro.serve.cache import CachingBackend
+
+    k, c = 10, 2.0
+    n_hot, n_asks, jitter = 6, 96, 1e-3
+    hot = items[:n_hot]
+    noise = jax.random.normal(jax.random.PRNGKey(3),
+                              (n_asks, hot.shape[1]), jnp.float32)
+    which = np.asarray(jax.random.randint(jax.random.PRNGKey(4), (n_asks,),
+                                          0, n_hot))
+    asks = hot[jnp.asarray(which)] * (1.0 + jitter * noise)
+    truths = {}
+    for h in range(n_hot):                      # oracle per HOT CENTER
+        truth = np.asarray(exact_ranks(users, items, hot[h]))
+        ex_idx, _ = reverse_k_ranks(users, items, hot[h], k)
+        truths[h] = (truth, ex_idx)
+    snap = eng.current_snapshot()
+    print(f"\nnear-duplicate caching: {n_hot} hot items × {n_asks} asks, "
+          f"jitter {jitter:g} (quality = overall-ratio vs exact at the "
+          f"hot centers)")
+    print(f"{'key bits':>8s} {'hit rate':>8s} {'ratio':>7s}")
+    for bits in (None, 10, 8, 6):
+        bk = CachingBackend("dense", quantize_key_bits=bits)
+        ratios = []
+        for i in range(n_asks):
+            res = bk.query_batch(snap.rank_table, snap.query_users(),
+                                 asks[i:i + 1], k=k, c=c)
+            truth, ex_idx = truths[int(which[i])]
+            ratios.append(metrics.overall_ratio(
+                np.asarray(res.indices[0]), np.asarray(ex_idx), truth))
+        hit_rate = bk.hits / max(bk.hits + bk.misses, 1)
+        ratio = float(np.mean(ratios))
+        print(f"{str(bits):>8s} {hit_rate:8.2f} {ratio:7.3f}")
+        METRICS.setdefault("serve", {})[f"neardup_bits{bits}"] = {
+            "hit_rate": hit_rate, "overall_ratio": ratio}
 
 
 def updates_mode():
@@ -511,6 +578,102 @@ def pruned_mode(smoke: bool = False):
               f"{' [smoke: informational]' if smoke else ''}")
 
 
+def quant_mode(smoke: bool = False):
+    """Acceptance (PR 5): int8 storage ≥ 1.5× over f32-dense at n = 256k
+    (d = 64, τ = 128, B = 16, paired min-of-rounds); bf16/int8 bounds
+    certifiably CONTAIN the f32 bounds on every measured batch."""
+    import dataclasses as dc
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from benchmarks.common import timeit
+    from repro.core import ReverseKRanksEngine, metrics
+    from repro.core.exact import exact_ranks, reverse_k_ranks
+    from repro.core.types import RankTableConfig
+
+    d, tau, B, k, c = 64, 128, 16, 10, 2.0
+    sizes = (16_384,) if smoke else (65_536, 262_144)
+    m = 2_048 if smoke else 4_096
+    cfg32 = RankTableConfig(tau=tau, omega=8, s=32)
+    entry = {"config": {"d": d, "tau": tau, "B": B, "k": k, "c": c, "m": m,
+                        "smoke": smoke},
+             "sizes": {}, "acceptance": {}}
+    METRICS["quant"] = entry
+    print(f"storage-spec sweep (dense backend): d={d} tau={tau} B={B} "
+          f"k={k} c={c} m={m:,}")
+    print(f"{'n':>8s} {'spec':>5s} {'ms/q':>8s} {'speedup':>7s} "
+          f"{'index MiB':>9s} {'topk∩f32':>8s} {'contain':>7s} "
+          f"{'ratio':>7s}")
+
+    checks = []
+    for n in sizes:
+        users, items, _ = zipf_clustered(jax.random.PRNGKey(0), n, m, d)
+        qs = items[:B] * (1.0 + 1e-4 * jax.random.normal(
+            jax.random.PRNGKey(7), (B, d), jnp.float32))
+        engines = {}
+        for spec in ("f32", "bf16", "int8"):
+            cfg = dc.replace(cfg32, storage_dtype=spec)
+            engines[spec] = ReverseKRanksEngine.build(
+                users, items, cfg, jax.random.PRNGKey(1))
+        # paired min-of-rounds: alternate specs within each round so
+        # background-load drift hits every spec equally
+        times = {s: float("inf") for s in engines}
+        for _ in range(3):
+            for s, eng in engines.items():
+                times[s] = min(times[s], timeit(
+                    lambda Q, e=eng: e.query_batch(Q, k=k, c=c).indices,
+                    qs, iters=3))
+        ref = engines["f32"].query_batch(qs, k=k, c=c)
+        # rank quality vs the EXACT oracle at the smallest size (the
+        # O(nmd) oracle is affordable there): a hot item's answer set is
+        # heavily rank-tied, so top-k overlap with f32 understates
+        # quality — overall-ratio is the §5 criterion that matters
+        truths = None
+        if n == sizes[0]:
+            truths = []
+            for qi in range(4):
+                truth = np.asarray(exact_ranks(users, items, qs[qi]))
+                ex_idx, _ = reverse_k_ranks(users, items, qs[qi], k)
+                truths.append((qi, truth, np.asarray(ex_idx)))
+        for s, eng in engines.items():
+            res = eng.query_batch(qs, k=k, c=c)
+            contain = bool(
+                np.all(np.asarray(res.r_lo) <= np.asarray(ref.r_lo) + 1e-4)
+                and np.all(np.asarray(res.r_up)
+                           >= np.asarray(ref.r_up) - 1e-4))
+            overlap = float(np.mean([
+                len(set(np.asarray(res.indices)[b])
+                    & set(np.asarray(ref.indices)[b])) / k
+                for b in range(B)]))
+            ratio = None
+            if truths is not None:
+                ratio = float(np.mean([metrics.overall_ratio(
+                    np.asarray(res.indices[qi]), ex, truth)
+                    for qi, truth, ex in truths]))
+            speedup = times["f32"] / times[s]
+            mib = eng.memory_bytes() / 2**20
+            rtxt = "      -" if ratio is None else f"{ratio:7.3f}"
+            print(f"{n:8,d} {s:>5s} {times[s]/B*1e3:8.3f} {speedup:6.2f}x "
+                  f"{mib:9.1f} {overlap:8.2f} {str(contain):>7s} {rtxt}")
+            entry["sizes"][f"n{n}_{s}"] = {
+                "ms_per_q": times[s] / B * 1e3, "speedup_vs_f32": speedup,
+                "index_mib": mib, "topk_overlap_f32": overlap,
+                "containment": contain, "overall_ratio": ratio}
+            if s != "f32":
+                assert contain, f"containment violated for {s} at n={n}"
+            if s == "int8" and n == sizes[-1]:
+                checks.append((n, speedup))
+
+    for n, speedup in checks:
+        ok = speedup >= 1.5
+        if not smoke:
+            entry["acceptance"][f"int8_speedup_n{n}_ge_1.5x"] = ok
+        print(f"n={n:,}: int8 ≥ 1.5x f32-dense: "
+              f"{'PASS' if ok else 'FAIL'} ({speedup:.2f}x)"
+              f"{' [smoke: informational]' if smoke else ''}")
+
+
 def _dump_json(path: str) -> None:
     import json
     import platform
@@ -518,7 +681,7 @@ def _dump_json(path: str) -> None:
 
     payload = {
         "schema": "perf_engine/1",
-        "pr": 4,
+        "pr": 5,
         "host": {"platform": platform.platform(),
                  "python": platform.python_version()},
         "unix_time": int(time.time()),
@@ -538,6 +701,7 @@ if __name__ == "__main__":
     ap.add_argument("--serve", action="store_true")
     ap.add_argument("--updates", action="store_true")
     ap.add_argument("--pruned", action="store_true")
+    ap.add_argument("--quant", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized problems (informational speedups)")
     ap.add_argument("--json", type=str, default=None, metavar="PATH",
@@ -555,5 +719,7 @@ if __name__ == "__main__":
         updates_mode()
     if args.pruned:
         pruned_mode(smoke=args.smoke)
+    if args.quant:
+        quant_mode(smoke=args.smoke)
     if args.json:
         _dump_json(args.json)

@@ -24,11 +24,12 @@ from repro.core.exact import exact_ranks, reverse_k_ranks
 from repro.core.query import query, query_batch
 from repro.core.rank_table import build_rank_table
 from repro.core.types import (DeltaCorrection, QueryResult, RankTable,
-                              RankTableConfig)
+                              RankTableConfig, StorageSpec, StoredUsers)
 
 __all__ = [
     "ReverseKRanksEngine", "exact_ranks", "reverse_k_ranks", "query",
     "query_batch", "build_rank_table", "DeltaCorrection", "QueryResult",
-    "RankTable", "RankTableConfig", "QueryBackend", "available_backends",
-    "get_backend", "register_backend",
+    "RankTable", "RankTableConfig", "StorageSpec", "StoredUsers",
+    "QueryBackend", "available_backends", "get_backend",
+    "register_backend",
 ]

@@ -49,7 +49,7 @@ import numpy as np
 
 from repro.core import query as query_mod
 from repro.core.types import DeltaCorrection, QueryResult, RankTable, \
-    RankTableConfig
+    RankTableConfig, StoredUsers, take_user_rows
 
 
 class QueryBackend:
@@ -98,17 +98,19 @@ class QueryBackend:
         bad append fails with a clear error instead of breaking every
         subsequent query."""
 
-    def _delta_query(self, rt: RankTable, users: jax.Array, qs: jax.Array,
+    def _delta_query(self, rt: RankTable, users, qs: jax.Array,
                      *, k: int, c: float, delta: DeltaCorrection
                      ) -> QueryResult:
         """Generic delta path for (B, n)-bounds backends: step-1 bounds,
         the shared correction (needs the u·q score matrix — one extra
-        (n, d) × (d, B) matmul), then selection against the live m."""
+        (n, d) × (d, B) matmul), then selection against the live m. The
+        score slack of quantized user storage rides into the correction's
+        certified count ranges (`apply_delta_corrections`)."""
         from repro.core import rank_table as rt_mod
         r_lo, r_up, est = self.bound_ranks(rt, users, qs)   # (B, n)
-        scores = (users @ qs.T).astype(jnp.float32)         # (n, B)
+        scores, slack = query_mod.user_scores_batch(users, qs)  # (n, B)
         r_lo, r_up, est = rt_mod.apply_delta_corrections(
-            scores, r_lo.T, r_up.T, est.T, delta)
+            scores, r_lo.T, r_up.T, est.T, delta, slack=slack)
         return query_mod.select_topk(r_lo.T, r_up.T, est.T, k=k, c=c,
                                      m_items=delta.selection_m())
 
@@ -222,8 +224,7 @@ class FusedBackend(QueryBackend):
 
     def bound_ranks(self, rt, users, qs):
         from repro.kernels import ops as kops
-        return kops.bound_ranks_batched(users, qs, rt.thresholds, rt.table,
-                                        m=int(rt.m))
+        return kops.bound_ranks_batched_stored(users, qs, rt)
 
     def query_batch(self, rt, users, qs, *, k, c, delta=None):
         if not _stock_pipeline(self, FusedBackend):
@@ -296,7 +297,11 @@ class ShardedBackend(QueryBackend):
         from repro.core import distributed as D
         n = users.shape[0]
         shape = None if delta is None else (delta.n_add, delta.n_del)
-        key = (k, float(c), n, shape)
+        # storage structure rides in the key only for bookkeeping — the
+        # built fn constructs its shard_map per argument structure at
+        # trace time, so one fn serves every spec of the same (k, c, n)
+        key = (k, float(c), n, shape, rt.spec_kind,
+               isinstance(users, StoredUsers))
         fn = self._fns.get(key)
         if fn is None:
             fn = D.make_batch_query_fn(self.mesh, k=k, n=n, c=float(c),
@@ -463,14 +468,14 @@ class PrunedBackend(QueryBackend):
         if (type(self.inner) is FusedBackend
                 and type(self.inner).bound_ranks is FusedBackend.bound_ranks):
             from repro.kernels import ops as kops
-            r_lo, r_up, est = kops.bound_ranks_batched_pruned(
-                users, qs, rt.thresholds, rt.table, ids, m=int(rt.m),
-                block_n=bs)
+            r_lo, r_up, est = kops.bound_ranks_batched_pruned_stored(
+                users, qs, rt, ids, block_n=bs)
         else:
             ridx = P.row_indices(ids, bs)
             g = jnp.minimum(ridx, n - 1)
-            sub_rt = RankTable(rt.thresholds[g], rt.table[g], rt.m)
-            r_lo, r_up, est = self.inner.bound_ranks(sub_rt, users[g], qs)
+            sub_rt = rt.take_rows(g)
+            r_lo, r_up, est = self.inner.bound_ranks(
+                sub_rt, take_user_rows(users, g), qs)
         if delta is None:
             return P.finish_compacted(r_lo, r_up, est, ids, blk_valid,
                                       keep, rt.m, k, c, n=n, block_size=bs)

@@ -29,9 +29,10 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import rank_table as rt_mod
-from repro.core.query import lemma1_key, lemma1_select, lookup_bounds_batch
+from repro.core.query import lemma1_key, lemma1_select, \
+    lookup_bounds_batch, user_scores_batch
 from repro.core.types import DeltaCorrection, QueryResult, RankTable, \
-    RankTableConfig, kth_smallest
+    RankTableConfig, StoredUsers, kth_smallest, take_user_rows
 
 AXIS = "shard"
 
@@ -58,6 +59,37 @@ def user_sharding(mesh: Mesh) -> NamedSharding:
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+# ------------------------------------------------- storage-spec sharding
+# The storage tier is row-aligned by construction: every optional field
+# (int8 affine scale/offset vectors, per-user score-slack coefficients)
+# is (n, 1) and shards EXACTLY like the rows it describes. These helpers
+# build the pytree in_specs for shard_map from the actual argument
+# structure, so one query fn serves every StorageSpec.
+
+def _rt_specs(rt: RankTable) -> RankTable:
+    s = lambda a: None if a is None else P(AXIS, None)
+    return RankTable(thresholds=P(AXIS, None), table=P(AXIS, None), m=P(),
+                     **{f: s(getattr(rt, f))
+                        for f in RankTable._QUANT_FIELDS})
+
+
+def _user_specs(users):
+    if not isinstance(users, StoredUsers):
+        return P(AXIS, None)
+    s = lambda a: None if a is None else P(AXIS, None)
+    return StoredUsers(rows=P(AXIS, None), scale=s(users.scale),
+                       row_slack=s(users.row_slack))
+
+
+def _corr_specs(corr: DeltaCorrection) -> DeltaCorrection:
+    s = lambda a: None if a is None else P(AXIS, None)
+    return DeltaCorrection(
+        add_scores=P(AXIS, None), del_scores=P(AXIS, None),
+        user_live=P(AXIS), m_new=P(),
+        add_scale=s(corr.add_scale), add_off=s(corr.add_off),
+        del_scale=s(corr.del_scale), del_off=s(corr.del_off))
 
 
 # ------------------------------------------------------------------- build
@@ -104,16 +136,25 @@ def build_sharded(users: jax.Array, items: jax.Array, cfg: RankTableConfig,
             smin, smax = smin - pad, smax + pad
         thr = rt_mod.threshold_grid(smin, smax, cfg.tau)
         table = rt_mod.estimate_table_rows(scores, w, thr)
-        st = jnp.dtype(cfg.storage_dtype)
-        return thr.astype(st), table.astype(st)
+        # the SAME pack path as the dense build — per-row quantization
+        # parameters are shard-local, so packing commutes with sharding
+        packed = cfg.storage.pack_table(thr, table)
+        return tuple(f for f in
+                     ((packed.thresholds, packed.table)
+                      + tuple(getattr(packed, q)
+                              for q in RankTable._QUANT_FIELDS))
+                     if f is not None)
 
-    thr, table = _shard_map(
+    n_out = 2 + len(RankTable._QUANT_FIELDS) \
+        if cfg.storage.kind == "int8" else 2
+    out = _shard_map(
         local_build, mesh=mesh,
         in_specs=(P(AXIS, None), P(None, None), P(None), P()),
-        out_specs=(P(AXIS, None), P(AXIS, None)))(
+        out_specs=tuple([P(AXIS, None)] * n_out))(
             users, samples, weights, max_norm)
-    return RankTable(thresholds=thr, table=table,
-                     m=jnp.asarray(m, jnp.int32))
+    extra = dict(zip(RankTable._QUANT_FIELDS, out[2:]))
+    return RankTable(thresholds=out[0], table=out[1],
+                     m=jnp.asarray(m, jnp.int32), **extra)
 
 
 # ------------------------------------------------------------------- query
@@ -150,17 +191,17 @@ def make_batch_query_fn(mesh: Mesh, k: int, n: int, c: float, *,
     nshards = mesh.devices.size
     shard_n = n // nshards
 
-    def local_part(thr, tab, m_items, u_shard, qs, *delta):
-        scores = (u_shard @ qs.T).astype(jnp.float32)       # (n_loc, B) MXU
-        r_lo, r_up, est = lookup_bounds_batch(
-            RankTable(thr, tab, m_items), scores)           # (n_loc, B)
+    def local_part(rt_loc, u_shard, qs, *delta):
+        scores, slack = user_scores_batch(u_shard, qs)      # (n_loc, B) MXU
+        r_lo, r_up, est = lookup_bounds_batch(rt_loc, scores,
+                                              slack)        # (n_loc, B)
         if with_delta:
-            corr = DeltaCorrection(*delta)
+            corr, = delta
             r_lo, r_up, est = rt_mod.apply_delta_corrections(
-                scores, r_lo, r_up, est, corr)
+                scores, r_lo, r_up, est, corr, slack=slack)
             m_eff = corr.selection_m()
         else:
-            m_eff = m_items
+            m_eff = rt_loc.m
         r_lo, r_up, est = r_lo.T, r_up.T, est.T             # (B, n_loc)
         neg_lo, _ = jax.lax.top_k(-r_lo, k)    # k smallest lower bounds / q
         neg_up, _ = jax.lax.top_k(-r_up, k)
@@ -185,21 +226,23 @@ def make_batch_query_fn(mesh: Mesh, k: int, n: int, c: float, *,
              jnp.take_along_axis(r_up, cand, axis=-1)], axis=-1)  # (B, k, 3)
         return -neg_lo, -neg_up, payload, gidx
 
-    delta_specs = ((P(AXIS, None), P(AXIS, None), P(AXIS), P())
-                   if with_delta else ())
-    sharded = _shard_map(
-        local_part, mesh=mesh,
-        in_specs=(P(AXIS, None), P(AXIS, None), P(), P(AXIS, None),
-                  P(None, None)) + delta_specs,
-        out_specs=(P(None, AXIS), P(None, AXIS), P(None, AXIS, None),
-                   P(None, AXIS)))
-
     @jax.jit
-    def batch_query_fn(rt: RankTable, users: jax.Array, qs: jax.Array,
+    def batch_query_fn(rt: RankTable, users, qs: jax.Array,
                        corr: DeltaCorrection = None) -> QueryResult:
-        delta = tuple(corr) if with_delta else ()
+        # in_specs are built from the ARGUMENT structure at trace time:
+        # int8 scale/offset vectors and quantized-user scale/slack rows
+        # shard alongside the rows they describe; the f32 structure
+        # lowers to exactly the pre-spec program (bit-identity)
+        delta = (corr,) if with_delta else ()
+        delta_specs = (_corr_specs(corr),) if with_delta else ()
+        sharded = _shard_map(
+            local_part, mesh=mesh,
+            in_specs=(_rt_specs(rt), _user_specs(users),
+                      P(None, None)) + delta_specs,
+            out_specs=(P(None, AXIS), P(None, AXIS), P(None, AXIS, None),
+                       P(None, AXIS)))
         all_lo, all_up, payload, gidx = sharded(
-            rt.thresholds, rt.table, rt.m, users, qs, *delta)  # (B, k·P, …)
+            rt, users, qs, *delta)                          # (B, k·P, …)
         est = payload[..., 0]
         r_lo = payload[..., 1]
         r_up = payload[..., 2]
@@ -254,27 +297,23 @@ def make_pruned_batch_query_fn(mesh: Mesh, k: int, n: int, c: float, *,
     shard_n = n // nshards
     nb_loc = shard_n // block_size
 
-    def local_part(thr, tab, m_items, u_shard, qs, ids, valid, keep,
-                   *delta):
+    def local_part(rt_loc, u_shard, qs, ids, valid, keep, *delta):
         ids_loc = ids[0]                                    # (W,)
         valid_loc = valid[0]
         ridx = (ids_loc[:, None] * block_size
                 + jnp.arange(block_size, dtype=jnp.int32)[None, :]
                 ).reshape(-1)                               # (W·bs,) local
-        scores = (u_shard[ridx] @ qs.T).astype(jnp.float32)  # (W·bs, B)
-        r_lo, r_up, est = lookup_bounds_batch(
-            RankTable(thr[ridx], tab[ridx], m_items), scores)
+        scores, slack = user_scores_batch(
+            take_user_rows(u_shard, ridx), qs)              # (W·bs, B)
+        r_lo, r_up, est = lookup_bounds_batch(rt_loc.take_rows(ridx),
+                                              scores, slack)
         if with_delta:
-            corr = DeltaCorrection(*delta)
-            sub = DeltaCorrection(add_scores=corr.add_scores[ridx],
-                                  del_scores=corr.del_scores[ridx],
-                                  user_live=corr.user_live[ridx],
-                                  m_new=corr.m_new)
+            corr, = delta
             r_lo, r_up, est = rt_mod.apply_delta_corrections(
-                scores, r_lo, r_up, est, sub)
+                scores, r_lo, r_up, est, corr.take_rows(ridx), slack=slack)
             m_eff = corr.selection_m()
         else:
-            m_eff = m_items
+            m_eff = rt_loc.m
         shard_id = jax.lax.axis_index(AXIS)
         gblk = shard_id * nb_loc + ids_loc                  # global ids (W,)
         keep_rows = keep[:, gblk] & valid_loc[None, :]      # (B, W)
@@ -299,24 +338,21 @@ def make_pruned_batch_query_fn(mesh: Mesh, k: int, n: int, c: float, *,
              jnp.take_along_axis(r_up, cand, axis=-1)], axis=-1)  # (B, k, 3)
         return -neg_lo, -neg_up, payload, gidx
 
-    delta_specs = ((P(AXIS, None), P(AXIS, None), P(AXIS), P())
-                   if with_delta else ())
-    sharded = _shard_map(
-        local_part, mesh=mesh,
-        in_specs=(P(AXIS, None), P(AXIS, None), P(), P(AXIS, None),
-                  P(None, None), P(AXIS, None), P(AXIS, None),
-                  P(None, None)) + delta_specs,
-        out_specs=(P(None, AXIS), P(None, AXIS), P(None, AXIS, None),
-                   P(None, AXIS)))
-
     @jax.jit
-    def batch_query_fn(rt: RankTable, users: jax.Array, qs: jax.Array,
+    def batch_query_fn(rt: RankTable, users, qs: jax.Array,
                        ids: jax.Array, valid: jax.Array, keep: jax.Array,
                        corr: DeltaCorrection = None) -> QueryResult:
-        delta = tuple(corr) if with_delta else ()
+        delta = (corr,) if with_delta else ()
+        delta_specs = (_corr_specs(corr),) if with_delta else ()
+        sharded = _shard_map(
+            local_part, mesh=mesh,
+            in_specs=(_rt_specs(rt), _user_specs(users),
+                      P(None, None), P(AXIS, None), P(AXIS, None),
+                      P(None, None)) + delta_specs,
+            out_specs=(P(None, AXIS), P(None, AXIS), P(None, AXIS, None),
+                       P(None, AXIS)))
         all_lo, all_up, payload, gidx = sharded(
-            rt.thresholds, rt.table, rt.m, users, qs, ids, valid, keep,
-            *delta)                                         # (B, k·P, …)
+            rt, users, qs, ids, valid, keep, *delta)        # (B, k·P, …)
         est = payload[..., 0]
         r_lo = payload[..., 1]
         r_up = payload[..., 2]

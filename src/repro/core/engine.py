@@ -117,7 +117,8 @@ class ReverseKRanksEngine:
             epoch=0, users=self.users, rank_table=self.rank_table,
             config=self.config, base=base,
             delta=delta_mod.DeltaState.empty(m_base, self.users.shape[0]),
-            corr=None)
+            corr=None,
+            stored_users=self.config.storage.pack_users(self.users))
         self._snapshots = SnapshotManager(snap)
         self._lock = threading.RLock()          # serializes mutations
         self._rebuild_lock = threading.Lock()   # one rebuild in flight
@@ -172,13 +173,14 @@ class ReverseKRanksEngine:
         if qs.ndim != 2:
             raise ValueError(
                 f"query_batch expects (B, d) queries; got {qs.shape}")
-        if snap.corr is None:
+        users = snap.query_users()      # spec-space storage (raw f32 on
+        if snap.corr is None:           # the exact spec — no-op path)
             # no delta kwarg on the static path: pre-PR-3 custom backends
             # with a (rt, users, qs, *, k, c) signature keep working on
             # never-mutated engines
-            return self._backend.query_batch(snap.rank_table, snap.users,
+            return self._backend.query_batch(snap.rank_table, users,
                                              qs, k=k, c=c)
-        return self._backend.query_batch(snap.rank_table, snap.users, qs,
+        return self._backend.query_batch(snap.rank_table, users, qs,
                                          k=k, c=c, delta=snap.corr)
 
     def query_batch(self, qs: jax.Array, k: int, c: float) -> QueryResult:
@@ -224,6 +226,12 @@ class ReverseKRanksEngine:
         if user_remap is ReverseKRanksEngine._KEEP_REMAP:
             user_remap = snap.user_remap
         m_base = base.m_base if base is not None else int(rank_table.m)
+        spec = self.config.storage
+        # the spec-space user storage tracks the f32 system of record:
+        # repacked only when the user matrix itself changed (O(nd), no
+        # table work), carried otherwise
+        stored = (snap.stored_users if users is snap.users
+                  else spec.pack_users(users))
         if (snap.corr is not None and users is snap.users
                 and base is snap.base
                 and delta.added_ids is snap.delta.added_ids
@@ -235,11 +243,13 @@ class ReverseKRanksEngine:
             corr = snap.corr._replace(
                 user_live=jnp.asarray(delta.user_live))
         else:
-            corr = delta_mod.build_correction(users, base, delta, m_base)
+            corr = delta_mod.build_correction(users, base, delta, m_base,
+                                              spec=spec)
         new = IndexSnapshot(
             epoch=snap.epoch + 1 if epoch is None else epoch, users=users,
             rank_table=rank_table, config=snap.config, base=base,
-            delta=delta, corr=corr, user_remap=user_remap)
+            delta=delta, corr=corr, user_remap=user_remap,
+            stored_users=stored)
         self._snapshots.publish(new)
         # refresh the introspection fields; consistent PAIRS always come
         # from current_snapshot(), these are best-effort mirrors
@@ -308,17 +318,16 @@ class ReverseKRanksEngine:
                 users_new = snap.users.at[jnp.asarray(idx)].set(vectors)
             thr_rows, tab_rows = self._user_rows(vectors, snap.base)
             rt = snap.rank_table
-            st = rt.thresholds.dtype
+            # the ONE storage pack path (shared with the builds): rows are
+            # re-estimated in f32 and materialized per spec — per-row
+            # quantization parameters make the update strictly local
+            packed = self.config.storage.pack_table(thr_rows, tab_rows)
             if indices is None:
-                thr = jnp.concatenate([rt.thresholds, thr_rows.astype(st)])
-                tab = jnp.concatenate([rt.table, tab_rows.astype(st)])
+                rt_new = rt.append_rows(packed)
             else:
-                j = jnp.asarray(idx)
-                thr = rt.thresholds.at[j].set(thr_rows.astype(st))
-                tab = rt.table.at[j].set(tab_rows.astype(st))
+                rt_new = rt.set_rows(jnp.asarray(idx), packed)
             self._publish(
-                snap, users=users_new,
-                rank_table=RankTable(thresholds=thr, table=tab, m=rt.m),
+                snap, users=users_new, rank_table=rt_new,
                 delta=snap.delta.with_users(touched=tuple(int(i)
                                                           for i in idx),
                                             n_users=users_new.shape[0]))
@@ -372,13 +381,17 @@ class ReverseKRanksEngine:
         if hit is not None:
             return hit
         qs = snap.users[:min(batch, snap.users.shape[0])]
+        # probe the REAL serving path: spec-space user storage, exactly
+        # what query_batch_at dispatches (a raw-f32 probe on a quantized
+        # engine would time a program production never runs)
+        users = snap.query_users()
 
         def run(delta) -> None:
             if delta is None:
-                r = self._backend.query_batch(snap.rank_table, snap.users,
+                r = self._backend.query_batch(snap.rank_table, users,
                                               qs, k=k, c=c)
             else:
-                r = self._backend.query_batch(snap.rank_table, snap.users,
+                r = self._backend.query_batch(snap.rank_table, users,
                                               qs, k=k, c=c, delta=delta)
             jax.block_until_ready(r.indices)
 
@@ -441,7 +454,7 @@ class ReverseKRanksEngine:
             with self._lock:
                 now = self.current_snapshot()
                 users_now = now.users
-                thr, tab = rt_new.thresholds, rt_new.table
+                rt_work = rt_new
                 n_built, n_now = snap.users.shape[0], users_now.shape[0]
                 # Stale rows = touched users whose VECTOR changed since
                 # capture, plus rows appended mid-build. Comparing
@@ -460,15 +473,20 @@ class ReverseKRanksEngine:
                     stale += [i for i, s in zip(existing, same) if not s]
                 touched = sorted(set(stale) | set(range(n_built, n_now)))
                 if n_now > n_built:     # users appended mid-build
-                    grow = (n_now - n_built, thr.shape[1])
-                    thr = jnp.concatenate([thr, jnp.zeros(grow, thr.dtype)])
-                    tab = jnp.concatenate([tab, jnp.ones(grow, tab.dtype)])
+                    # placeholder rows only: every appended index is in
+                    # `touched` and re-estimated below
+                    grow = (n_now - n_built, rt_work.tau)
+                    rt_work = rt_work.append_rows(
+                        self.config.storage.pack_table(
+                            jnp.zeros(grow, jnp.float32),
+                            jnp.ones(grow, jnp.float32)))
                 if touched:             # rows mutated mid-build
                     rows_thr, rows_tab = self._user_rows(
                         users_now[jnp.asarray(touched)], base_new)
                     j = jnp.asarray(np.asarray(touched))
-                    thr = thr.at[j].set(rows_thr.astype(thr.dtype))
-                    tab = tab.at[j].set(rows_tab.astype(tab.dtype))
+                    rt_work = rt_work.set_rows(
+                        j, self.config.storage.pack_table(rows_thr,
+                                                          rows_tab))
                 delta_new = delta_mod.residual_after_rebuild(
                     snap.base, now.delta, live_ids)
                 remap = None
@@ -492,15 +510,12 @@ class ReverseKRanksEngine:
                         remap[keep] = np.arange(keep.size)
                         j = jnp.asarray(keep)
                         users_now = users_now[j]
-                        thr = thr[j]
-                        tab = tab[j]
+                        rt_work = rt_work.take_rows(j)
                         delta_new = dataclasses.replace(
                             delta_new,
                             user_live=np.ones(keep.size, bool))
                 swapped = self._publish(
-                    now, users=users_now,
-                    rank_table=RankTable(thresholds=thr, table=tab,
-                                         m=rt_new.m),
+                    now, users=users_now, rank_table=rt_work,
                     delta=delta_new, base=base_new, user_remap=remap)
             # epoch captured from the published snapshot, not self.epoch:
             # a mutation racing in after the lock releases must not be
@@ -527,14 +542,26 @@ class ReverseKRanksEngine:
         return self.current_snapshot().users.shape[1]
 
     def memory_bytes(self) -> int:
-        """Index footprint (thresholds + table + delta correction), per
-        §4.2's O(n) claim — the delta adds O(n·|delta|) until rebuild."""
+        """Query-path storage footprint (thresholds + table + per-row
+        quantization parameters + the user storage the backends actually
+        scan + delta correction), per §4.2's O(n) claim — the delta adds
+        O(n·|delta|) until rebuild. User bytes are counted UNIFORMLY
+        (spec-space storage when quantized, the raw f32 matrix otherwise)
+        so spec footprints are comparable."""
         snap = self.current_snapshot()
         rt = snap.rank_table
-        total = int(rt.thresholds.size * rt.thresholds.dtype.itemsize
-                    + rt.table.size * rt.table.dtype.itemsize)
+        sz = lambda a: 0 if a is None else int(a.size * a.dtype.itemsize)
+        total = (sz(rt.thresholds) + sz(rt.table) + sz(rt.thr_scale)
+                 + sz(rt.thr_off) + sz(rt.tab_scale) + sz(rt.tab_off)
+                 + sz(rt.thr_dev))
+        if snap.stored_users is not None:
+            su = snap.stored_users
+            total += sz(su.rows) + sz(su.scale) + sz(su.row_slack)
+        else:
+            total += sz(snap.users)
         if snap.corr is not None:
-            total += int(snap.corr.add_scores.size * 4
-                         + snap.corr.del_scores.size * 4
-                         + snap.corr.user_live.size)
+            c = snap.corr
+            total += (sz(c.add_scores) + sz(c.del_scores)
+                      + int(c.user_live.size) + sz(c.add_scale)
+                      + sz(c.add_off) + sz(c.del_scale) + sz(c.del_off))
         return total

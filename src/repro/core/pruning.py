@@ -72,9 +72,9 @@ import numpy as np
 # package __init__ rebinds the `query` attribute to the query FUNCTION.
 from repro.core import rank_table as rt_mod
 from repro.core.query import _bucketize, lemma1_select, \
-    lookup_bounds_batch
-from repro.core.types import DeltaCorrection, QueryResult, RankTable, \
-    kth_smallest
+    lookup_bounds_batch, user_scores_batch
+from repro.core.types import DeltaCorrection, EPS_BF16, QueryResult, \
+    RankTable, StoredUsers, _I8_TRANSFORM_PAD, kth_smallest, take_user_rows
 
 # Summary block size. MUST match the fused kernel's user-tile block_n so a
 # kept block is exactly one kernel grid step (and the per-tile matmul is
@@ -113,6 +113,17 @@ class BlockSummary(NamedTuple):
     tab_max: jax.Array
     rows: jax.Array
     m: jax.Array
+    # Storage-spec extensions (PR 5), None on an exact f32 index:
+    #   user_slack: (nb, 1) f32 — max per-row certified score-error
+    #     coefficient in the block (quantized user rows); phase A widens
+    #     the box score range by user_slack · ‖q‖₁.
+    #   score_eps: () f32 — marks CERTIFIED-WIDENED f32 envelopes (the
+    #     quantized-table summary form): thr/tab envelopes are built over
+    #     dequantized ± quantization-error rows, and phase A additionally
+    #     widens the score side by score_eps · max|s| (the bf16
+    #     monotone-cast rounding; 0 for int8).
+    user_slack: Optional[jax.Array] = None
+    score_eps: Optional[jax.Array] = None
 
     @property
     def n_blocks(self) -> int:
@@ -152,31 +163,75 @@ def _pad_rows(x: jax.Array, total: int, value) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("block_size",))
-def build_block_summary(users: jax.Array, rt: RankTable,
+def build_block_summary(users, rt: RankTable,
                         block_size: int = DEFAULT_BLOCK) -> BlockSummary:
     """Fold (users, rank table) into per-block sketches — one O(n·(d+τ))
     pass at build/rebuild time, O(n/block · (d+τ)) resident thereafter.
 
-    Envelopes are computed over the STORED threshold/table values (the
-    storage dtype is exact under min/max), so phase A's comparisons see
-    exactly what the per-user lookup sees.
+    On an exact f32 index the envelopes are computed over the STORED
+    threshold/table values (exact under min/max), so phase A's
+    comparisons see exactly what the per-user lookup sees — the pre-spec
+    path, bit-identical. On a quantized index (bf16/int8 storage spec)
+    the envelopes are CERTIFIED f32 intervals: each stored row is widened
+    to the interval provably containing its true f32 values (± half a
+    quantization step for int8 codes, ± EPS_BF16 relative for bf16 table
+    entries) BEFORE the column min/max, so the phase-A bounds bracket
+    every member's widened (r↓, r↑) from the dequant-aware lookup —
+    Lemma-1 tile pruning stays exact at every spec.
     """
-    n, d = users.shape
+    if isinstance(users, StoredUsers):
+        u32 = users.rows.astype(jnp.float32)
+        if users.scale is not None:
+            u32 = u32 * users.scale
+        slack_rows = users.row_slack
+    else:
+        u32 = users.astype(jnp.float32)
+        slack_rows = None
+    n, d = u32.shape
     nb = -(-n // block_size)
     total = nb * block_size
     inf = jnp.inf
-    u32 = users.astype(jnp.float32)
     u_lo = _pad_rows(u32, total, inf).reshape(nb, block_size, d)
     u_hi = _pad_rows(u32, total, -inf).reshape(nb, block_size, d)
-    st = rt.thresholds.dtype
     tau = rt.thresholds.shape[1]
-    thr_lo = _pad_rows(rt.thresholds, total,
+    kind = rt.spec_kind
+    if kind == "f32":
+        if slack_rows is not None:
+            raise ValueError("quantized user storage requires a quantized "
+                             "rank table (uniform StorageSpec)")
+        thr_lo_rows = thr_hi_rows = rt.thresholds
+        tab_lo_rows = tab_hi_rows = rt.table
+        user_slack = score_eps = None
+        st = rt.thresholds.dtype
+    elif kind == "bf16":
+        thr32 = rt.thresholds.astype(jnp.float32)
+        tab32 = rt.table.astype(jnp.float32)
+        thr_lo_rows = thr_hi_rows = thr32
+        tab_lo_rows = tab32 * (1.0 - EPS_BF16)
+        tab_hi_rows = tab32 * (1.0 + EPS_BF16)
+        score_eps = jnp.asarray(EPS_BF16, jnp.float32)
+        st = jnp.float32
+    else:                                       # int8 per-row affine codes
+        half = 0.5 + _I8_TRANSFORM_PAD
+        thr32 = rt.thresholds.astype(jnp.float32) * rt.thr_scale + rt.thr_off
+        tab32 = rt.table.astype(jnp.float32) * rt.tab_scale + rt.tab_off
+        thr_lo_rows = thr32 - half * rt.thr_scale
+        thr_hi_rows = thr32 + half * rt.thr_scale
+        tab_lo_rows = tab32 - half * rt.tab_scale
+        tab_hi_rows = tab32 + half * rt.tab_scale
+        score_eps = jnp.asarray(0.0, jnp.float32)
+        st = jnp.float32
+    if kind != "f32":
+        user_slack = (None if slack_rows is None else _pad_rows(
+            slack_rows.astype(jnp.float32), total, 0.0
+        ).reshape(nb, block_size).max(axis=1, keepdims=True))
+    thr_lo = _pad_rows(thr_lo_rows, total,
                        jnp.asarray(inf, st)).reshape(nb, block_size, tau)
-    thr_hi = _pad_rows(rt.thresholds, total,
+    thr_hi = _pad_rows(thr_hi_rows, total,
                        jnp.asarray(-inf, st)).reshape(nb, block_size, tau)
-    tab_lo = _pad_rows(rt.table, total,
+    tab_lo = _pad_rows(tab_lo_rows, total,
                        jnp.asarray(inf, st)).reshape(nb, block_size, tau)
-    tab_hi = _pad_rows(rt.table, total,
+    tab_hi = _pad_rows(tab_hi_rows, total,
                        jnp.asarray(-inf, st)).reshape(nb, block_size, tau)
     rows = jnp.minimum(
         jnp.full((nb,), block_size, jnp.int32),
@@ -185,7 +240,7 @@ def build_block_summary(users: jax.Array, rt: RankTable,
         dim_min=u_lo.min(axis=1), dim_max=u_hi.max(axis=1),
         thr_min=thr_lo.min(axis=1), thr_max=thr_hi.max(axis=1),
         tab_min=tab_lo.min(axis=1), tab_max=tab_hi.max(axis=1),
-        rows=rows, m=rt.m)
+        rows=rows, m=rt.m, user_slack=user_slack, score_eps=score_eps)
 
 
 def _envelope_bounds(summary: BlockSummary, qs: jax.Array
@@ -210,9 +265,34 @@ def _envelope_bounds(summary: BlockSummary, qs: jax.Array
     slack = (_SCORE_SLACK * d) * (absmax @ jnp.abs(qs).T) + _SCORE_SLACK_ABS
     s_hi = s_hi + slack
     s_lo = s_lo - slack
+    if summary.user_slack is not None:
+        # quantized user rows: the members' certified score intervals are
+        # ± row_slack·‖q‖₁ around the dequantized score the box bounds
+        extra = summary.user_slack * jnp.sum(jnp.abs(qs), axis=1)[None, :]
+        s_hi = s_hi + extra
+        s_lo = s_lo - extra
 
     tau = summary.tau
     m_plus_1 = (summary.m + 1).astype(jnp.float32)
+    if summary.score_eps is not None:
+        # CERTIFIED-WIDENED envelopes (quantized table): thr/tab already
+        # carry the per-row quantization widening; the score side adds
+        # the bf16 monotone-cast rounding of the member comparison (the
+        # member compares in bf16, which can move a score by eps·|s|)
+        e = summary.score_eps * jnp.maximum(jnp.abs(s_lo), jnp.abs(s_hi)) \
+            + _SCORE_SLACK_ABS
+        idx_hi = _bucketize(summary.thr_min, s_hi + e)    # ≥ member idx_hi
+        r_lo_opt = jnp.where(
+            idx_hi == tau, 1.0,
+            jnp.take_along_axis(summary.tab_min,
+                                jnp.clip(idx_hi, 0, tau - 1), axis=1))
+        idx_lo = _bucketize(summary.thr_max, s_lo - e)    # ≤ member idx_lo
+        top = jnp.maximum(m_plus_1, summary.tab_max[:, :1])
+        r_up_pes = jnp.where(
+            idx_lo == 0, top,
+            jnp.take_along_axis(summary.tab_max,
+                                jnp.clip(idx_lo - 1, 0, tau - 1), axis=1))
+        return r_lo_opt, r_up_pes
     idx_hi = _bucketize(summary.thr_min, s_hi)    # ≥ member idx
     tab_min = summary.tab_min.astype(jnp.float32)
     r_lo_opt = jnp.where(
@@ -397,27 +477,25 @@ def finish_compacted(r_lo_c: jax.Array, r_up_c: jax.Array,
                         keep_q, m_items, k, c, n, block_size)
 
 
-def _gathered_bounds(rt: RankTable, users: jax.Array, qs: jax.Array,
+def _gathered_bounds(rt: RankTable, users, qs: jax.Array,
                      block_ids: jax.Array, block_size: int,
                      corr: Optional[DeltaCorrection] = None
                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Compacted step 1 (+ optional delta correction): gather kept rows,
     one (n_kept, d) × (d, B) matmul, one streamed pass over the kept
     threshold/table rows — the correction's count pass also only touches
-    kept rows. Returns (B, nk·bs) arrays."""
+    kept rows. Row gathers go through the storage-aware `take_rows`
+    helpers, so int8 scale vectors (and quantized-user slack rows) travel
+    with their rows. Returns (B, nk·bs) arrays."""
     n = users.shape[0]
     ridx = row_indices(block_ids, block_size)
     g = jnp.minimum(ridx, n - 1)
-    scores = (users[g] @ qs.T).astype(jnp.float32)          # (nk·bs, B)
-    r_lo, r_up, est = lookup_bounds_batch(
-        RankTable(rt.thresholds[g], rt.table[g], rt.m), scores)
+    scores, slack = user_scores_batch(take_user_rows(users, g),
+                                      qs)                   # (nk·bs, B)
+    r_lo, r_up, est = lookup_bounds_batch(rt.take_rows(g), scores, slack)
     if corr is not None:
-        sub = DeltaCorrection(add_scores=corr.add_scores[g],
-                              del_scores=corr.del_scores[g],
-                              user_live=corr.user_live[g],
-                              m_new=corr.m_new)
-        r_lo, r_up, est = rt_mod.apply_delta_corrections(scores, r_lo,
-                                                         r_up, est, sub)
+        r_lo, r_up, est = rt_mod.apply_delta_corrections(
+            scores, r_lo, r_up, est, corr.take_rows(g), slack=slack)
     return r_lo.T, r_up.T, est.T
 
 
@@ -460,7 +538,7 @@ def pruned_query_batch_delta(rt: RankTable, users: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("k", "n", "block_size"))
-def delta_finish_compacted(users: jax.Array, qs: jax.Array,
+def delta_finish_compacted(users, qs: jax.Array,
                            corr: DeltaCorrection, r_lo_c: jax.Array,
                            r_up_c: jax.Array, est_c: jax.Array,
                            block_ids: jax.Array, blk_valid: jax.Array,
@@ -473,11 +551,10 @@ def delta_finish_compacted(users: jax.Array, qs: jax.Array,
     selection."""
     ridx = row_indices(block_ids, block_size)
     g = jnp.minimum(ridx, n - 1)
-    scores = (users[g] @ qs.T).astype(jnp.float32)          # (rows, B)
-    sub = DeltaCorrection(add_scores=corr.add_scores[g],
-                          del_scores=corr.del_scores[g],
-                          user_live=corr.user_live[g], m_new=corr.m_new)
+    scores, slack = user_scores_batch(take_user_rows(users, g),
+                                      qs)                   # (rows, B)
     r_lo, r_up, est = rt_mod.apply_delta_corrections(
-        scores, r_lo_c.T, r_up_c.T, est_c.T, sub)
+        scores, r_lo_c.T, r_up_c.T, est_c.T, corr.take_rows(g),
+        slack=slack)
     return _finish_impl(r_lo.T, r_up.T, est.T, block_ids, blk_valid,
                         keep_q, corr.selection_m(), k, c, n, block_size)

@@ -28,12 +28,13 @@ from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import DeltaCorrection, QueryResult, RankTable, \
-    kth_smallest
+from repro.core.types import DeltaCorrection, EPS_BF16, QueryResult, \
+    RankTable, StoredUsers, _I8_TRANSFORM_PAD, kth_smallest
 
 # §Perf H4b (REFUTED): a gather-based bisection was hypothesized to touch
 # only ~log2(τ)·n elements instead of streaming the full (n, τ) rows.
@@ -67,9 +68,199 @@ def _bucketize(thresholds: jax.Array, uq: jax.Array) -> jax.Array:
     return lo
 
 
-def lookup_bounds_batch(rt: RankTable, uq: jax.Array
+# Row-block size for the tiled dequantizing matmul: XLA CPU lowers a
+# convert feeding a dot into a NAIVE (non-GEMM) loop, and a standalone
+# full-matrix convert is a DRAM-streaming write of the 4× f32 copy —
+# both measured several times slower than f32 GEMM at (256k, 64). A
+# sequential lax.map over row blocks keeps each converted tile
+# cache-resident between its convert and its oneDNN GEMM: 24 ms vs 83 ms
+# fused / 73 ms barrier at (262144, 64) × (64, 16).
+_DEQUANT_MM_BLOCK = 1024
+
+
+def _dequant_matmul(rows: jax.Array, scale: Optional[jax.Array],
+                    qs: jax.Array) -> jax.Array:
+    """(rows·qs.T)·scale with rows in a storage dtype — f32 accumulate,
+    tiled so the dequantized copy never round-trips through DRAM."""
+    n = rows.shape[0]
+    qt = qs.T.astype(jnp.float32)
+
+    def block(args):
+        rb, sb = args
+        out = rb.astype(jnp.float32) @ qt
+        return out if sb is None else out * sb
+
+    nb = n // _DEQUANT_MM_BLOCK
+    if nb < 2:
+        return block((rows, scale))
+    head = nb * _DEQUANT_MM_BLOCK
+    rb = rows[:head].reshape(nb, _DEQUANT_MM_BLOCK, rows.shape[1])
+    sb = (None if scale is None
+          else scale[:head].reshape(nb, _DEQUANT_MM_BLOCK, 1))
+    out = jax.lax.map(block, (rb, sb)).reshape(head, -1)
+    if head < n:
+        out = jnp.concatenate([out, block((rows[head:],
+                                           None if scale is None
+                                           else scale[head:]))])
+    return out
+
+
+def user_scores_batch(users, qs: jax.Array
+                      ) -> tuple[jax.Array, Optional[jax.Array]]:
+    """Step-1 scores for either user representation.
+
+    `users` is a raw (n, d) array (f32 spec — the expression is exactly
+    the pre-spec `(users @ qs.T).astype(f32)`, so the f32 path stays
+    bit-identical) or a `StoredUsers` (bf16/int8 rows dequantized with
+    f32 accumulation, tiled — see `_dequant_matmul`). Returns
+    (scores, slack), each (n, B); slack is the certified
+    |stored-score − f32-score| bound (None when exact) that the
+    dequant-aware lookup folds into the (r↓, r↑) widening.
+    """
+    if not isinstance(users, StoredUsers):
+        return (users @ qs.T).astype(jnp.float32), None
+    scores = _dequant_matmul(users.rows, users.scale, qs)   # (n, B)
+    slack = users.row_slack * jnp.sum(jnp.abs(qs), axis=1)[None, :]
+    return scores, slack
+
+
+def _searchsorted_rows(rows: jax.Array, vals: jax.Array, side: str
+                       ) -> jax.Array:
+    """Vmapped per-row searchsorted: rows (n, τ) ascending, vals (n, B)."""
+    return jax.vmap(functools.partial(jnp.searchsorted, side=side))(rows,
+                                                                    vals)
+
+
+def _est_from_grid(uq: jax.Array, idx: jax.Array, thr_up: jax.Array,
+                   thr_lo: jax.Array, thr_edge_lo: jax.Array,
+                   thr_edge_hi: jax.Array, r_lo: jax.Array,
+                   r_up: jax.Array, tau: int, m_plus_1: jax.Array
+                   ) -> jax.Array:
+    """The §4.3-step-3 interpolated estimate + margin-decayed out-of-range
+    refinement + sub-unit tie-break, on caller-supplied DEQUANTIZED f32
+    grid values (shared by the bf16 and int8 lookup paths; the f32 path
+    keeps its original inline body for bit-identity).
+
+    thr_up/thr_lo are the thresholds bracketing `idx`; thr_edge_lo/hi the
+    per-row grid endpoints, (n, 1). The estimate interpolates between the
+    CERTIFIED (widened) bounds, so clip keeps it admissible.
+    """
+    span = jnp.maximum(thr_lo - thr_up, 1e-12)
+    frac = jnp.clip((uq - thr_up) / span, 0.0, 1.0)
+    interior = (idx > 0) & (idx < tau)
+    est_in = r_up + (r_lo - r_up) * frac
+    rng = jnp.maximum(thr_edge_hi - thr_edge_lo, 1e-12)
+    m_above = jnp.maximum(uq - thr_edge_hi, 0.0) / rng
+    m_below = jnp.maximum(thr_edge_lo - uq, 0.0) / rng
+    est_above = 1.0 + (r_up - 1.0) / (1.0 + tau * m_above)
+    est_below = m_plus_1 - (m_plus_1 - r_lo) * jnp.exp(-tau * m_below)
+    est = jnp.where(interior, est_in,
+                    jnp.where(idx == tau, est_above, est_below))
+    est = jnp.clip(est, r_lo, r_up)
+    return est - 0.5 * m_above / (1.0 + m_above)
+
+
+def _lookup_bounds_bf16(rt: RankTable, uq: jax.Array,
+                        slack: Optional[jax.Array]
                         ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Rank-table lookup (§4.3 step 1) for a (n, B) score block.
+    """Certified lookup on a bf16-stored table.
+
+    Bucketize via the MONOTONE CAST, two-sided: with t̃ = bf16(t) and a
+    score interval [s−δ, s+δ] around the true f32 score,
+      t ≤ s+δ ⟹ t̃ ≤ bf16(s+δ)   so  idx_hi = #{t̃ ≤ bf16(s+δ)} ≥ idx*;
+      t̃ < bf16(s−δ) ⟹ t < s−δ   so  idx_lo = #{t̃ < bf16(s−δ)} ≤ idx*.
+    Table reads widen by EPS_BF16 in the certified direction:
+    r↑ = T̃[idx_lo−1]·(1+ε) ≥ T[idx*−1] (T non-increasing, idx_lo ≤ idx*)
+    and r↓ = T̃[idx_hi]·(1−ε) ≤ T[idx*] — quantization error is folded
+    into the bounds, never into the selection semantics.
+    """
+    n, tau = rt.thresholds.shape
+    thr, tab = rt.thresholds, rt.table
+    s_hi = uq if slack is None else uq + slack
+    s_lo = uq if slack is None else uq - slack
+    idx_hi = _searchsorted_rows(thr, s_hi.astype(thr.dtype), "right")
+    idx_lo = _searchsorted_rows(thr, s_lo.astype(thr.dtype), "left")
+    m_plus_1 = (rt.m + 1).astype(jnp.float32)
+    up_col = jnp.clip(idx_lo - 1, 0, tau - 1)
+    lo_col = jnp.clip(idx_hi, 0, tau - 1)
+    t_up = jnp.take_along_axis(tab, up_col, axis=1).astype(jnp.float32)
+    t_lo = jnp.take_along_axis(tab, lo_col, axis=1).astype(jnp.float32)
+    r_up = jnp.where(idx_lo == 0, m_plus_1, t_up * (1.0 + EPS_BF16))
+    r_lo = jnp.where(idx_hi == tau, 1.0, t_lo * (1.0 - EPS_BF16))
+    thr32 = lambda c: jnp.take_along_axis(thr, c, axis=1).astype(jnp.float32)
+    est = _est_from_grid(
+        uq, idx_hi, thr32(jnp.clip(idx_hi - 1, 0, tau - 1)), thr32(lo_col),
+        thr[:, :1].astype(jnp.float32),
+        thr[:, tau - 1:tau].astype(jnp.float32), r_lo, r_up, tau, m_plus_1)
+    return r_lo, r_up, est
+
+
+def _lookup_bounds_int8(rt: RankTable, uq: jax.Array,
+                        slack: Optional[jax.Array]
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Certified lookup on an int8-stored table — CLOSED-FORM bucketize.
+
+    Algorithm 1 builds each row's thresholds as a UNIFORM grid
+    (`threshold_grid`), so in the row's code units the true thresholds
+    sit within `thr_dev` (measured at pack time, ~f32-rounding tiny) of
+    the exact affine grid G_j = −127 + j·Δ, Δ = 254/(τ−1). The bucketize
+    therefore needs NO search and NO threshold-stream read at all:
+
+        idx_hi = #{j : G_j − dev' ≤ s' + δ'} = ⌊(s'+δ'+127+dev')/Δ⌋ + 1
+        idx_lo = #{j : G_j + dev' ≤ s' − δ'} = ⌊(s'−δ'−127−dev')/Δ⌋ + 1
+
+    (clipped to [0, τ]), with s' = (s−off)/sc, δ' the user-quantization
+    score slack in code units, and dev' = thr_dev + pad covering the f32
+    rounding of the transform and the division. Since thr_dev bounds the
+    TRUE-threshold deviation, idx_lo ≤ idx* ≤ idx_hi is certified even
+    for a non-uniform packed table (dev is then just large). Table reads
+    dequantize and widen by (½+pad)·scale in the certified direction —
+    r↓ rounds down, r↑ rounds up. HBM traffic of the whole lookup: the
+    int8 TABLE gathers plus five (n, 1) vectors — the thresholds array
+    is never touched on the query path.
+    """
+    n, tau = rt.thresholds.shape
+    tab_q = rt.table
+    sc_t, off_t = rt.thr_scale, rt.thr_off                  # (n, 1)
+    sc_b, off_b = rt.tab_scale, rt.tab_off
+    s_n = (uq - off_t) / sc_t                               # (n, B) in codes
+    d_n = 0.0 if slack is None else slack / sc_t
+    dev = rt.thr_dev + 20.0 * _I8_TRANSFORM_PAD             # (n, 1)
+    delta = 254.0 / (tau - 1)
+    # #{j : −127 + jΔ ≤ v} = ⌊(v + 127)/Δ⌋ + 1, v = s' ± (δ' + dev);
+    # the float-side clip guards the int32 cast against overflow when a
+    # degenerate row scale blows s' up
+    count = lambda v: jnp.clip(
+        jnp.floor((v + 127.0) / delta), -1.0, float(tau)
+    ).astype(jnp.int32) + 1
+    idx_hi = jnp.clip(count(s_n + d_n + dev), 0, tau)
+    idx_lo = jnp.clip(count(s_n - d_n - dev), 0, tau)
+    m_plus_1 = (rt.m + 1).astype(jnp.float32)
+    up_col = jnp.clip(idx_lo - 1, 0, tau - 1)
+    lo_col = jnp.clip(idx_hi, 0, tau - 1)
+    deq_tab = lambda c: (jnp.take_along_axis(tab_q, c, axis=1).astype(
+        jnp.float32) * sc_b + off_b)
+    widen = (0.5 + _I8_TRANSFORM_PAD) * sc_b                # (n, 1)
+    r_up = jnp.where(idx_lo == 0, m_plus_1, deq_tab(up_col) + widen)
+    r_lo = jnp.where(idx_hi == tau, 1.0, deq_tab(lo_col) - widen)
+    # est thresholds in closed form too (G_c·sc + off) — zero gathers
+    grid_at = lambda c: ((c.astype(jnp.float32) * delta - 127.0) * sc_t
+                         + off_t)
+    est = _est_from_grid(
+        uq, idx_hi, grid_at(jnp.clip(idx_hi - 1, 0, tau - 1)),
+        grid_at(lo_col),
+        -127.0 * sc_t + off_t, 127.0 * sc_t + off_t,
+        r_lo, r_up, tau, m_plus_1)
+    return r_lo, r_up, est
+
+
+def lookup_bounds_batch(rt: RankTable, uq: jax.Array,
+                        slack: Optional[jax.Array] = None
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Rank-table lookup (§4.3 step 1) for a (n, B) score block — THE one
+    dequant-aware bound path: every backend (dense, fused-generic,
+    sharded per shard, pruned per gathered block) lands here, dispatched
+    on the table's storage spec (`RankTable.spec_kind`, static at trace).
 
     uq[i, b] = u_i · q_b; each threshold/table ROW is streamed once and
     bucketizes all B queries — the bandwidth amortization the batched
@@ -80,10 +271,26 @@ def lookup_bounds_batch(rt: RankTable, uq: jax.Array
     Out-of-range: u·q < t_1 ⇒ (r↓, r↑) = (T_1, m+1);
                   u·q ≥ t_τ ⇒ (r↓, r↑) = (1, T_τ).
 
+    `slack` (quantized user matrices) is the certified per-(row, query)
+    score-error bound; quantized specs fold it plus their own storage
+    error into the returned bounds — r↓ rounds DOWN, r↑ rounds UP — so
+    the f32-spec bounds (and hence the table's true bracketing) are
+    certifiably contained in the returned interval, and Lemma-1 selection
+    over them stays sound (the bound-widening proof obligation; see
+    `types.StorageSpec`).
+
     Returns (r_lo, r_up, est), each (n, B) — bounds plus the §4.3-step-3
     linear interpolation of the rank at u·q's position between its two
     thresholds.
     """
+    kind = rt.spec_kind
+    if kind == "int8":
+        return _lookup_bounds_int8(rt, uq, slack)
+    if kind == "bf16":
+        return _lookup_bounds_bf16(rt, uq, slack)
+    if slack is not None:
+        raise ValueError("score slack requires a quantized rank table "
+                         "(an exact f32 table cannot widen its bounds)")
     n, tau = rt.thresholds.shape
     # _bucketize compares in the table's storage dtype: promotion to f32
     # would materialize a full-size HBM copy of a bf16 table, erasing the
@@ -139,16 +346,17 @@ def lookup_bounds(rt: RankTable, uq: jax.Array
 
 
 @jax.jit
-def bound_ranks_batch(rt: RankTable, users: jax.Array, qs: jax.Array
+def bound_ranks_batch(rt: RankTable, users, qs: jax.Array
                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Dense-backend step 1 for a (B, d) query block.
 
     One (n, d) × (d, B) MXU matmul + one streamed pass over the table.
+    `users` is a raw (n, d) array or a `StoredUsers` (quantized specs).
     Returns (r_lo, r_up, est), each (B, n) — the `QueryBackend.bound_ranks`
     orientation (query-major, user axis last, ready for per-query top-k).
     """
-    scores = (users @ qs.T).astype(jnp.float32)             # (n, B)
-    r_lo, r_up, est = lookup_bounds_batch(rt, scores)
+    scores, slack = user_scores_batch(users, qs)            # (n, B)
+    r_lo, r_up, est = lookup_bounds_batch(rt, scores, slack)
     return r_lo.T, r_up.T, est.T
 
 
@@ -228,7 +436,7 @@ def select_topk(r_lo: jax.Array, r_up: jax.Array, est: jax.Array, *, k: int,
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
-def query_batch(rt: RankTable, users: jax.Array, qs: jax.Array, k: int,
+def query_batch(rt: RankTable, users, qs: jax.Array, k: int,
                 c: float) -> QueryResult:
     """Batched c-approximate reverse k-ranks queries (Definition 3, §4.3).
 
@@ -236,22 +444,22 @@ def query_batch(rt: RankTable, users: jax.Array, qs: jax.Array, k: int,
     is ONE matmul + ONE pass over the rank table for the whole batch (not
     B re-reads — see the module docstring).
     """
-    scores = (users @ qs.T).astype(jnp.float32)             # step 1: O(nd·B)
-    r_lo, r_up, est = lookup_bounds_batch(rt, scores)
+    scores, slack = user_scores_batch(users, qs)            # step 1: O(nd·B)
+    r_lo, r_up, est = lookup_bounds_batch(rt, scores, slack)
     return select_topk(r_lo.T, r_up.T, est.T, k=k, c=c, m_items=rt.m)
 
 
 @jax.jit
-def _delta_bounds_batch(rt: RankTable, users: jax.Array, qs: jax.Array,
+def _delta_bounds_batch(rt: RankTable, users, qs: jax.Array,
                         corr: DeltaCorrection
                         ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Step 1 + delta correction for a (B, d) block → corrected
     (r↓, r↑, est), each (B, n)."""
     from repro.core import rank_table as rt_mod
-    scores = (users @ qs.T).astype(jnp.float32)             # (n, B)
-    r_lo, r_up, est = lookup_bounds_batch(rt, scores)
+    scores, slack = user_scores_batch(users, qs)            # (n, B)
+    r_lo, r_up, est = lookup_bounds_batch(rt, scores, slack)
     r_lo, r_up, est = rt_mod.apply_delta_corrections(scores, r_lo, r_up,
-                                                     est, corr)
+                                                     est, corr, slack=slack)
     return r_lo.T, r_up.T, est.T
 
 

@@ -120,10 +120,11 @@ def build_rank_table_sorted(users: jax.Array, items_sorted: jax.Array,
     smin, smax = _threshold_range(users, items_sorted, scores, cfg)
     thresholds = threshold_grid(smin, smax, cfg.tau)
     table = estimate_table_rows(scores, weights, thresholds)
-    st = jnp.dtype(cfg.storage_dtype)
-    return RankTable(thresholds=thresholds.astype(st),
-                     table=table.astype(st),
-                     m=jnp.asarray(m, jnp.int32))
+    # Algorithm 1 always estimates in f32; the storage SPEC decides how
+    # the result is materialized (f32/bf16/int8-with-per-row-scales) —
+    # the one pack path shared with the sharded build and the upsert.
+    return cfg.storage.pack_table(thresholds, table,
+                                  m=jnp.asarray(m, jnp.int32))
 
 
 def sort_items_by_norm(items: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -240,9 +241,52 @@ def _count_above(sorted_scores: jax.Array, scores: jax.Array) -> jax.Array:
     return (sorted_scores.shape[1] - idx).astype(jnp.float32)
 
 
+def _count_above_range(sorted_q: jax.Array, scale, off, scores: jax.Array,
+                       slack) -> tuple[jax.Array, jax.Array]:
+    """Certified (count_lo, count_hi) brackets of #{x_true > s_true} per
+    (row, query), for SPEC-SPACE stored score sets (quantized delta rows).
+
+    x_true is the f32 score the stored entry quantized; s_true is the f32
+    query score bracketed by `scores ± slack`. count_lo counts entries
+    CERTAINLY above, count_hi those POSSIBLY above — the delta shift then
+    widens r↓ by count_lo terms and r↑ by count_hi terms, keeping the
+    corrected bounds certified (see `apply_delta_corrections`).
+
+    int8 rows are left-padded with the reserved −128 sentinel: a compare
+    value clipped to [−128, 127] always lands the sentinel in the
+    not-above set, so padding can never inflate either count. bf16 rows
+    pad with −inf and use the monotone-cast compare.
+    """
+    width = sorted_q.shape[1]
+    if width == 0:
+        z = jnp.zeros(scores.shape, jnp.float32)
+        return z, z
+    s_lo = scores if slack is None else scores - slack
+    s_hi = scores if slack is None else scores + slack
+    ss = lambda vals, side: jax.vmap(functools.partial(
+        jnp.searchsorted, side=side, method="scan_unrolled"))(sorted_q, vals)
+    if scale is None:                           # bf16 storage
+        st = sorted_q.dtype
+        # possibly above: x_true > s_true ⟹ x̃ = cast(x_true) ≥ cast(s−δ)
+        hi = width - ss(s_lo.astype(st), "left")
+        # certainly above: x̃ > cast(s+δ) ⟹ x_true > s+δ ≥ s_true
+        lo = width - ss(s_hi.astype(st), "right")
+    else:                                       # int8 per-row affine codes
+        from repro.core.types import _I8_TRANSFORM_PAD
+        half = 0.5 + _I8_TRANSFORM_PAD
+        code = lambda v: jnp.clip(jnp.floor((v - off) / scale),
+                                  -128.0, 127.0).astype(jnp.int8)
+        # possibly above: x̃·sc+off+sc/2 > s−δ ⟺ x̃ > (s−δ−off)/sc − ½
+        hi = width - ss(code(s_lo - half * scale), "right")
+        # certainly above: x̃·sc+off−sc/2 > s+δ ⟺ x̃ > (s+δ−off)/sc + ½
+        lo = width - ss(code(s_hi + half * scale), "right")
+    return lo.astype(jnp.float32), hi.astype(jnp.float32)
+
+
 def apply_delta_corrections(scores: jax.Array, r_lo: jax.Array,
                             r_up: jax.Array, est: jax.Array,
-                            corr: DeltaCorrection
+                            corr: DeltaCorrection,
+                            slack: Optional[jax.Array] = None
                             ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Fuse a delta buffer into table-estimated ranks (user-major).
 
@@ -272,13 +316,35 @@ def apply_delta_corrections(scores: jax.Array, r_lo: jax.Array,
     every live estimate — including insertion-shifted estimates above
     m'+1, which a finite sentinel does not dominate — identically on
     every backend.
+
+    SPEC SPACE (PR 5): quantized engines store the delta score sets in
+    the storage spec and the user scores carry a certified `slack`. The
+    exact count is then replaced by a certified count RANGE
+    (`_count_above_range`): r↓ shifts by the smallest possible net count,
+    r↑ by the largest, est by the midpoint — the corrected bounds still
+    bracket every shift the exact f32 engine could have applied. The f32
+    spec takes the pre-spec exact branch verbatim (bit-identity).
     """
-    shift = (_count_above(corr.add_scores, scores)
-             - _count_above(corr.del_scores, scores))
+    quantized = (corr.add_scale is not None or corr.del_scale is not None
+                 or corr.add_scores.dtype != jnp.float32
+                 or corr.del_scores.dtype != jnp.float32
+                 or slack is not None)
+    if not quantized:
+        shift_lo = shift_hi = shift_mid = (
+            _count_above(corr.add_scores, scores)
+            - _count_above(corr.del_scores, scores))
+    else:
+        add_lo, add_hi = _count_above_range(
+            corr.add_scores, corr.add_scale, corr.add_off, scores, slack)
+        del_lo, del_hi = _count_above_range(
+            corr.del_scores, corr.del_scale, corr.del_off, scores, slack)
+        shift_lo = add_lo - del_hi
+        shift_hi = add_hi - del_lo
+        shift_mid = 0.5 * (shift_lo + shift_hi)
     m_new = corr.m_new.astype(jnp.float32)
-    r_lo = jnp.clip(r_lo + shift, 1.0, m_new + 1.0)
-    r_up = jnp.clip(r_up + shift, 1.0, m_new + 1.0)
-    est = est + shift
+    r_lo = jnp.clip(r_lo + shift_lo, 1.0, m_new + 1.0)
+    r_up = jnp.clip(r_up + shift_hi, 1.0, m_new + 1.0)
+    est = est + shift_mid
     dead = ~corr.user_live[:, None]
     return (jnp.where(dead, jnp.inf, r_lo),
             jnp.where(dead, jnp.inf, r_up),

@@ -41,7 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import rank_table as rt_mod
-from repro.core.types import DeltaCorrection, RankTableConfig
+from repro.core.types import DeltaCorrection, RankTableConfig, StorageSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -252,15 +252,27 @@ def _bucket(width: int) -> int:
 
 
 def _sorted_padded(scores: jax.Array, width: int) -> jax.Array:
-    pad = _bucket(width) - width
-    out = jnp.sort(scores.astype(jnp.float32), axis=1)
-    if pad:
-        out = jnp.pad(out, ((0, 0), (pad, 0)), constant_values=-jnp.inf)
+    """f32 sort + bucket-pad (the pre-spec correction rows; kept for
+    tests building hand-rolled corrections)."""
+    out, _, _ = StorageSpec().pack_scores(
+        jnp.sort(scores.astype(jnp.float32), axis=1),
+        _bucket(width) - width)
     return out
 
 
+def _packed_scores(users: jax.Array, items: jax.Array, width: int,
+                   spec: StorageSpec):
+    """Score `items` against every user, sort per row, materialize in
+    spec space, left-pad to the power-of-two bucket with the absent
+    sentinel (−inf; −128 for int8 — `rank_table._count_above_range`
+    guarantees the sentinel is never counted)."""
+    raw = jnp.sort((users @ items.T).astype(jnp.float32), axis=1)
+    return spec.pack_scores(raw, _bucket(width) - width)
+
+
 def build_correction(users: jax.Array, base: Optional[BaseIndex],
-                     delta: DeltaState, m_base: int
+                     delta: DeltaState, m_base: int,
+                     spec: Optional[StorageSpec] = None
                      ) -> Optional[DeltaCorrection]:
     """Materialize the query-time `DeltaCorrection` for one snapshot.
 
@@ -270,23 +282,36 @@ def build_correction(users: jax.Array, base: Optional[BaseIndex],
     sets are padded to power-of-two buckets (`_bucket`) so streaming
     mutations reuse compiled query programs instead of retracing per
     delta size.
+
+    `spec` (PR 5): the engine's storage spec — correction rows are
+    QUANTIZED ON INSERT (scored in f32 against the f32 system of record,
+    then packed), so the whole delta path streams spec-space bytes; the
+    query-time count becomes a certified range that
+    `apply_delta_corrections` folds into the widened bounds. The f32 spec
+    stores exactly the pre-spec f32 rows (bit-identity).
     """
     if delta.is_empty:
         return None
+    spec = StorageSpec() if spec is None else spec
     n = users.shape[0]
+    add_sc = add_off = del_sc = del_off = None
     if delta.n_added:
-        add = _sorted_padded(users @ delta.added_items.T, delta.n_added)
+        add, add_sc, add_off = _packed_scores(users, delta.added_items,
+                                              delta.n_added, spec)
     else:
         add = jnp.zeros((n, 0), jnp.float32)
     if delta.n_deleted:
         dead = base.items[jnp.asarray(np.flatnonzero(~delta.base_live))]
-        dele = _sorted_padded(users @ dead.T, delta.n_deleted)
+        dele, del_sc, del_off = _packed_scores(users, dead,
+                                               delta.n_deleted, spec)
     else:
         dele = jnp.zeros((n, 0), jnp.float32)
     m_new = m_base - delta.n_deleted + delta.n_added
     return DeltaCorrection(add_scores=add, del_scores=dele,
                            user_live=jnp.asarray(delta.user_live),
-                           m_new=jnp.asarray(m_new, jnp.int32))
+                           m_new=jnp.asarray(m_new, jnp.int32),
+                           add_scale=add_sc, add_off=add_off,
+                           del_scale=del_sc, del_off=del_off)
 
 
 def residual_after_rebuild(old_base: BaseIndex, delta_now: DeltaState,

@@ -32,7 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.types import DeltaCorrection, RankTable, RankTableConfig
+from repro.core.types import DeltaCorrection, RankTable, RankTableConfig, \
+    StoredUsers
 from repro.index.delta import BaseIndex, DeltaState
 
 
@@ -51,6 +52,13 @@ class IndexSnapshot:
     rows) lets clients translate ids they hold; it is carried forward by
     subsequent mutations and replaced (or cleared) by the next rebuild.
     None means no compaction has happened on this index lineage.
+
+    `stored_users` (PR 5) is the storage-spec materialization of `users`
+    (bf16/int8 rows + per-user scales); None on the exact f32 spec, where
+    backends receive the raw array (the bit-identical no-op path). It is
+    re-packed whenever a mutation changes `users`, so it is always the
+    spec-space image of this generation's user matrix; `users` itself
+    stays the f32 system of record (mutations, delta scoring, rebuilds).
     """
 
     epoch: int
@@ -61,6 +69,12 @@ class IndexSnapshot:
     delta: DeltaState
     corr: Optional[DeltaCorrection]
     user_remap: Optional[np.ndarray] = None
+    stored_users: Optional[StoredUsers] = None
+
+    def query_users(self):
+        """What backends scan: the spec-space storage, or the raw f32
+        matrix on the exact spec."""
+        return self.users if self.stored_users is None else self.stored_users
 
     @property
     def n(self) -> int:

@@ -8,18 +8,28 @@ code path runs compiled by flipping `repro.kernels.INTERPRET`.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import QueryResult, RankTable
+from repro.core.types import QueryResult, RankTable, StoredUsers
 from repro.kernels import exact_rank as _er
 from repro.kernels import table_build as _tb
 from repro.kernels import user_scores as _us
 
-# Flipped to False on real TPU backends; interpret=True executes the same
-# kernel bodies in Python on CPU for validation.
-INTERPRET = True
+
+def _interpret_default() -> bool:
+    """interpret=True executes the kernel bodies in Python on CPU for
+    validation; on a real TPU set REPRO_INTERPRET=0 to run them compiled
+    (the ROADMAP "TPU validation" procedure — no source edit needed)."""
+    return os.environ.get("REPRO_INTERPRET", "1").strip().lower() not in (
+        "0", "false", "no", "off")
+
+
+# Flipped to False on real TPU backends — via the REPRO_INTERPRET env var
+# at import time, or by assigning repro.kernels.ops.INTERPRET directly.
+INTERPRET = _interpret_default()
 
 _LANE = 128     # TPU lane width: pad τ and other minor dims to multiples.
 
@@ -165,16 +175,15 @@ def query_fused(rt: RankTable, users: jax.Array, q: jax.Array, k: int,
     return select_topk(r_lo, r_up, est, k=k, c=c, m_items=rt.m)
 
 
-def query_fused_batch(rt: RankTable, users: jax.Array, qs: jax.Array,
+def query_fused_batch(rt: RankTable, users, qs: jax.Array,
                       k: int, c: float) -> QueryResult:
     """Batched §4.3 queries with step 1 on the batched Pallas kernel —
     one table pass for the whole (B, d) query block; selection (steps 2-3)
     via the shared shape-polymorphic `select_topk`. Every QueryResult
-    field gains a leading B axis."""
+    field gains a leading B axis. Dispatches on the storage spec
+    (`bound_ranks_batched_stored`); the f32 spec is the pre-spec path."""
     from repro.core.query import select_topk
-    m = int(rt.m)
-    r_lo, r_up, est = bound_ranks_batched(users, qs, rt.thresholds,
-                                          rt.table, m=m)
+    r_lo, r_up, est = bound_ranks_batched_stored(users, qs, rt)
     return select_topk(r_lo, r_up, est, k=k, c=c, m_items=rt.m)
 
 
@@ -182,3 +191,142 @@ def query_fused_batch(rt: RankTable, users: jax.Array, qs: jax.Array,
 # delta path is the generic `QueryBackend._delta_query` composed over
 # `bound_ranks_batched` (see `repro.core.backends.FusedBackend`), so the
 # delta pipeline exists exactly once.
+
+
+# --------------------------------------------- storage-spec dispatch (PR 5)
+def _stored_parts(users, rt: RankTable):
+    """Normalize (users, rt) into the quantized kernels' operand set.
+
+    Raw f32 user matrices against a quantized table are served with
+    identity scale and zero slack — the kernels' dequant math degenerates
+    to the exact path, so mixed inputs (tests, debugging) stay correct.
+    """
+    if isinstance(users, StoredUsers):
+        rows = users.rows
+        n = rows.shape[0]
+        uscale = (jnp.ones((n, 1), jnp.float32) if users.scale is None
+                  else users.scale)
+        uslack = (jnp.zeros((n, 1), jnp.float32) if users.row_slack is None
+                  else users.row_slack)
+    else:
+        rows = users
+        n = rows.shape[0]
+        uscale = jnp.ones((n, 1), jnp.float32)
+        uslack = jnp.zeros((n, 1), jnp.float32)
+    return rows, uscale, uslack
+
+
+def _pad_vec(x: jax.Array, mult: int, value: float) -> jax.Array:
+    return _pad_rows(x, mult, value=value)
+
+
+
+def _pad_quant_operands(kind: str, rows, uscale, uslack, thresholds,
+                        table, thr_sc, thr_off, thr_dev, tab_sc, tab_off,
+                        block_n: int):
+    """Shared operand padding for the quantized kernel wrappers (full-grid
+    and masked-grid) — the pad VALUES encode kernel soundness assumptions:
+    scale pads 1.0 (no div-by-zero on junk rows), slack/offset/dev pad
+    0.0, table pads 1.0, thresholds edge-pad to stay ascending. The int8
+    kernel's closed-form bucketize never reads thresholds, so no padded
+    copy is materialized for it."""
+    up = _pad_rows(rows, block_n)
+    usc = _pad_vec(uscale, block_n, 1.0)
+    usl = _pad_vec(uslack, block_n, 0.0)
+    tp = (None if kind == "int8" else
+          _pad_cols_edge(_pad_rows(thresholds, block_n, value=0.0), _LANE))
+    bp = _pad_cols_edge(_pad_rows(table, block_n, value=1.0), _LANE)
+    if kind == "int8":
+        quant = (_pad_vec(thr_sc, block_n, 1.0),
+                 _pad_vec(thr_off, block_n, 0.0),
+                 _pad_vec(thr_dev, block_n, 0.0),
+                 _pad_vec(tab_sc, block_n, 1.0),
+                 _pad_vec(tab_off, block_n, 0.0))
+    else:
+        quant = (None,) * 5
+    return (up, usc, usl, tp, bp) + quant
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "m", "block_n"))
+def _bound_ranks_batched_stored_impl(kind: str, rows, uscale, uslack, qs,
+                                     thresholds, table, thr_sc, thr_off,
+                                     thr_dev, tab_sc, tab_off, *, m: int,
+                                     block_n: int = 256):
+    """Pad + invoke the quantized batched kernel; returns (B, n) f32."""
+    n, tau = thresholds.shape[0], thresholds.shape[1]
+    B = qs.shape[0]
+    up, usc, usl, tp, bp, tsc, tof, tdv, bsc, bof = _pad_quant_operands(
+        kind, rows, uscale, uslack, thresholds, table, thr_sc, thr_off,
+        thr_dev, tab_sc, tab_off, block_n)
+    qt = _pad_rows(qs.astype(jnp.float32), 8).T             # (d, Bp)
+    r_lo, r_up, est = _us.bound_ranks_batched_quant_kernel_call(
+        kind, up, usc, usl, qt, tp, bp, tsc, tof, tdv, bsc, bof, m=m,
+        tau_valid=tau, block_n=block_n, interpret=INTERPRET)
+    return r_lo[:n, :B].T, r_up[:n, :B].T, est[:n, :B].T
+
+
+def bound_ranks_batched_stored(users, qs: jax.Array, rt: RankTable, *,
+                               block_n: int = 256
+                               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Spec-dispatched batched fused step 1 — THE fused-backend entry.
+
+    f32 storage with a raw user matrix routes to the pre-spec
+    `bound_ranks_batched` (bit-identical no-op); bf16/int8 route to the
+    quantized kernels, whose outputs carry the certified widening (r↓
+    rounded down, r↑ up) exactly like the dense dequant-aware lookup.
+    """
+    kind = rt.spec_kind
+    if kind == "f32" and not isinstance(users, StoredUsers):
+        return bound_ranks_batched(users, qs, rt.thresholds, rt.table,
+                                   m=int(rt.m), block_n=block_n)
+    if kind == "f32":
+        raise ValueError("quantized user storage requires a quantized "
+                         "rank table (uniform StorageSpec)")
+    rows, uscale, uslack = _stored_parts(users, rt)
+    return _bound_ranks_batched_stored_impl(
+        kind, rows, uscale, uslack, qs, rt.thresholds, rt.table,
+        rt.thr_scale, rt.thr_off, rt.thr_dev, rt.tab_scale, rt.tab_off,
+        m=int(rt.m), block_n=block_n)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "m", "block_n"))
+def _bound_ranks_batched_pruned_stored_impl(kind: str, rows, uscale,
+                                            uslack, qs, thresholds, table,
+                                            thr_sc, thr_off, thr_dev,
+                                            tab_sc, tab_off, block_ids, *,
+                                            m: int, block_n: int = 256):
+    tau = thresholds.shape[1]
+    B = qs.shape[0]
+    up, usc, usl, tp, bp, tsc, tof, tdv, bsc, bof = _pad_quant_operands(
+        kind, rows, uscale, uslack, thresholds, table, thr_sc, thr_off,
+        thr_dev, tab_sc, tab_off, block_n)
+    qt = _pad_rows(qs.astype(jnp.float32), 8).T
+    r_lo, r_up, est = _us.bound_ranks_batched_quant_masked_kernel_call(
+        kind, up, usc, usl, qt, tp, bp, tsc, tof, tdv, bsc, bof,
+        block_ids.astype(jnp.int32), m=m, tau_valid=tau, block_n=block_n,
+        interpret=INTERPRET)
+    return r_lo[:, :B].T, r_up[:, :B].T, est[:, :B].T
+
+
+def bound_ranks_batched_pruned_stored(users, qs: jax.Array, rt: RankTable,
+                                      block_ids: jax.Array, *,
+                                      block_n: int = 256
+                                      ) -> tuple[jax.Array, jax.Array,
+                                                 jax.Array]:
+    """Spec-dispatched masked-grid (pruned) step 1: skipped tiles are
+    never DMA'd at ANY storage spec; kept tiles match the full-grid
+    quantized kernel exactly. Returns compacted (B, nk·block_n) arrays
+    in block-list order (see `bound_ranks_batched_pruned`)."""
+    kind = rt.spec_kind
+    if kind == "f32" and not isinstance(users, StoredUsers):
+        return bound_ranks_batched_pruned(users, qs, rt.thresholds,
+                                          rt.table, block_ids,
+                                          m=int(rt.m), block_n=block_n)
+    if kind == "f32":
+        raise ValueError("quantized user storage requires a quantized "
+                         "rank table (uniform StorageSpec)")
+    rows, uscale, uslack = _stored_parts(users, rt)
+    return _bound_ranks_batched_pruned_stored_impl(
+        kind, rows, uscale, uslack, qs, rt.thresholds, rt.table,
+        rt.thr_scale, rt.thr_off, rt.thr_dev, rt.tab_scale, rt.tab_off,
+        block_ids, m=int(rt.m), block_n=block_n)

@@ -39,6 +39,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.query import _est_from_grid
+from repro.core.types import EPS_BF16, _I8_TRANSFORM_PAD
+
+# QUANTIZED-STORAGE VARIANTS (PR 5): the same grid and the same per-tile
+# structure, but the HBM operands are the storage-tier arrays — bf16
+# rows, or int8 codes plus (block_n, 1) per-row scale/offset vectors that
+# ride the same tile index maps. The DMA moves the quantized bytes (the
+# ~2×/4× bandwidth win); dequantization is VPU work on VMEM-resident
+# tiles (the "int8-input / f32-accumulate" shape: the MXU matmul runs on
+# in-register f32 casts of the int8 user tile). Quantization error is
+# folded into the outputs — r↓ rounds down, r↑ rounds up, mirroring the
+# dense `query._lookup_bounds_{bf16,int8}` certification — so Lemma-1
+# selection over kernel outputs stays sound at every spec.
+
 
 def _bound_rank_kernel(u_ref, q_ref, thr_ref, tab_ref, rlo_ref, rup_ref,
                        est_ref, *, m: int, tau_valid: int):
@@ -266,3 +280,220 @@ def bound_ranks_batched_kernel_call(users: jax.Array, qt: jax.Array,
         out_shape=out_shape,
         interpret=interpret,
     )(users, qt, thresholds, table)
+
+
+def _est_tail(score, idx_hi, thr_up, thr_lo, edge_lo, edge_hi, r_lo, r_up,
+              tau_valid: int, m: int):
+    """§4.3-step-3 estimate on dequantized f32 grid values — THE shared
+    implementation (`query._est_from_grid`); kernels call it on
+    VMEM-resident tiles so the dense and fused quantized paths cannot
+    drift on the interpolation/margin-decay/tie-break math."""
+    return _est_from_grid(score, idx_hi, thr_up, thr_lo, edge_lo, edge_hi,
+                          r_lo, r_up, tau_valid, float(m + 1))
+
+
+def _bound_rank_batched_bf16_kernel(u_ref, uslack_ref, qt_ref, thr_ref,
+                                    tab_ref, rlo_ref, rup_ref, est_ref, *,
+                                    m: int, tau_valid: int):
+    """bf16-storage twin of `_bound_rank_batched_kernel`.
+
+    Certification mirrors `query._lookup_bounds_bf16`: the score interval
+    [s−δ, s+δ] (δ = per-row slack · ‖q‖₁, covering the bf16 user rows) is
+    cast to bf16 — the cast is monotone, so a two-sided count brackets the
+    true bucketize index — and table reads widen by EPS_BF16 in the
+    certified direction. All compares are VPU work on the VMEM-resident
+    bf16 tile; HBM moved only bf16 bytes.
+    """
+    u = u_ref[...].astype(jnp.float32)                    # (Bn, d) ← bf16
+    qt = qt_ref[...].astype(jnp.float32)                  # (d, B)
+    thr = thr_ref[...]                                    # (Bn, τp) bf16
+    taup = thr.shape[1]
+    score = jax.lax.dot_general(
+        u, qt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (Bn, B)
+    slack = uslack_ref[...] * jnp.sum(jnp.abs(qt), axis=0)[None, :]
+    s_hi = (score + slack).astype(thr.dtype)              # (Bn, B) bf16
+    s_lo = (score - slack).astype(thr.dtype)
+
+    col = jax.lax.broadcasted_iota(jnp.int32, thr.shape, 1)
+    valid = (col < tau_valid)[:, None, :]
+    le_hi = (thr[:, None, :] <= s_hi[:, :, None]) & valid
+    idx_hi = jnp.sum(le_hi.astype(jnp.int32), axis=2)     # ≥ idx*
+    lt_lo = (thr[:, None, :] < s_lo[:, :, None]) & valid
+    idx_lo = jnp.sum(lt_lo.astype(jnp.int32), axis=2)     # ≤ idx*
+
+    tab = tab_ref[...].astype(jnp.float32)                # (Bn, τp)
+    up_col = jnp.clip(idx_lo - 1, 0, taup - 1)
+    lo_col = jnp.clip(idx_hi, 0, tau_valid - 1)
+    t_up = jnp.take_along_axis(tab, up_col, axis=1)
+    t_lo = jnp.take_along_axis(tab, lo_col, axis=1)
+    r_up = jnp.where(idx_lo == 0, float(m + 1), t_up * (1.0 + EPS_BF16))
+    r_lo = jnp.where(idx_hi == tau_valid, 1.0, t_lo * (1.0 - EPS_BF16))
+
+    thr32 = thr.astype(jnp.float32)
+    thr_up = jnp.take_along_axis(thr32, jnp.clip(idx_hi - 1, 0, taup - 1),
+                                 axis=1)
+    thr_lo = jnp.take_along_axis(thr32, lo_col, axis=1)
+    edge_lo = thr32[:, :1]
+    edge_hi = jnp.take_along_axis(
+        thr32, jnp.full((thr.shape[0], 1), tau_valid - 1, jnp.int32),
+        axis=1)
+    rlo_ref[...] = r_lo
+    rup_ref[...] = r_up
+    est_ref[...] = _est_tail(score, idx_hi, thr_up, thr_lo, edge_lo,
+                             edge_hi, r_lo, r_up, tau_valid, m)
+
+
+def _bound_rank_batched_int8_kernel(u_ref, uscale_ref, uslack_ref, qt_ref,
+                                    thr_sc_ref, thr_off_ref, thr_dev_ref,
+                                    tab_ref, tab_sc_ref, tab_off_ref,
+                                    rlo_ref, rup_ref, est_ref, *, m: int,
+                                    tau_valid: int):
+    """int8-storage twin of `_bound_rank_batched_kernel` — int8 inputs,
+    f32 accumulate, CLOSED-FORM bucketize.
+
+    The user tile is cast in-register and scaled per row; the bucketize
+    is the uniform-grid closed form of `query._lookup_bounds_int8`
+    (thresholds are an affine grid in code units within the certified
+    per-row `thr_dev`), so the threshold matrix is NEVER DMA'd — the HBM
+    stream per tile is the int8 user rows + int8 table codes + five
+    (block_n, 1) f32 vectors, the ~4× bandwidth cut on the scan. Table
+    codes dequantize per row and widen by (½ + pad)·scale in the
+    certified direction.
+    """
+    u = u_ref[...].astype(jnp.float32)                    # (Bn, d) ← int8
+    qt = qt_ref[...].astype(jnp.float32)                  # (d, B)
+    score = jax.lax.dot_general(
+        u, qt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * uscale_ref[...]
+    slack = uslack_ref[...] * jnp.sum(jnp.abs(qt), axis=0)[None, :]
+
+    sc_t = thr_sc_ref[...]                                # (Bn, 1)
+    off_t = thr_off_ref[...]
+    s_n = (score - off_t) / sc_t                          # (Bn, B) in codes
+    d_n = slack / sc_t
+    dev = thr_dev_ref[...] + 20.0 * _I8_TRANSFORM_PAD
+    delta = 254.0 / (tau_valid - 1)
+    count = lambda v: jnp.clip(
+        jnp.floor((v + 127.0) / delta), -1.0, float(tau_valid)
+    ).astype(jnp.int32) + 1
+    idx_hi = jnp.clip(count(s_n + d_n + dev), 0, tau_valid)   # ≥ idx*
+    idx_lo = jnp.clip(count(s_n - d_n - dev), 0, tau_valid)   # ≤ idx*
+
+    tab_f = tab_ref[...].astype(jnp.float32)
+    taup = tab_f.shape[1]
+    sc_b = tab_sc_ref[...]
+    off_b = tab_off_ref[...]
+    deq = lambda c: jnp.take_along_axis(tab_f, c, axis=1) * sc_b + off_b
+    widen = (0.5 + _I8_TRANSFORM_PAD) * sc_b
+    up_col = jnp.clip(idx_lo - 1, 0, taup - 1)
+    lo_col = jnp.clip(idx_hi, 0, tau_valid - 1)
+    r_up = jnp.where(idx_lo == 0, float(m + 1), deq(up_col) + widen)
+    r_lo = jnp.where(idx_hi == tau_valid, 1.0, deq(lo_col) - widen)
+
+    grid_at = lambda c: ((c.astype(jnp.float32) * delta - 127.0) * sc_t
+                         + off_t)
+    thr_up = grid_at(jnp.clip(idx_hi - 1, 0, taup - 1))
+    thr_lo = grid_at(lo_col)
+    edge_lo = -127.0 * sc_t + off_t
+    edge_hi = 127.0 * sc_t + off_t
+    rlo_ref[...] = r_lo
+    rup_ref[...] = r_up
+    est_ref[...] = _est_tail(score, idx_hi, thr_up, thr_lo, edge_lo,
+                             edge_hi, r_lo, r_up, tau_valid, m)
+
+
+def _quant_kernel_and_operands(kind: str, users, uscale, uslack, qt,
+                               thresholds, table, thr_sc, thr_off,
+                               thr_dev, tab_sc, tab_off, *, m: int,
+                               tau_valid: int):
+    """(kernel, operands, per-operand block factories) for a storage kind.
+
+    Each factory maps (block_n, d, taup, B) → the operand's block shape;
+    vector operands are (block_n, 1) tiles riding the same row index map.
+    Shared by the full-grid and the masked-grid (pruned) callers. The
+    int8 kernel takes NO threshold operand (closed-form bucketize).
+    """
+    if kind == "bf16":
+        kern = functools.partial(_bound_rank_batched_bf16_kernel, m=m,
+                                 tau_valid=tau_valid)
+        ops = (users, uslack, qt, thresholds, table)
+        shapes = (lambda b, d, t, B: (b, d), lambda b, d, t, B: (b, 1),
+                  "q", lambda b, d, t, B: (b, t), lambda b, d, t, B: (b, t))
+        return kern, ops, shapes
+    kern = functools.partial(_bound_rank_batched_int8_kernel, m=m,
+                             tau_valid=tau_valid)
+    ops = (users, uscale, uslack, qt, thr_sc, thr_off, thr_dev, table,
+           tab_sc, tab_off)
+    vec = lambda b, d, t, B: (b, 1)
+    shapes = (lambda b, d, t, B: (b, d), vec, vec, "q", vec, vec, vec,
+              lambda b, d, t, B: (b, t), vec, vec)
+    return kern, ops, shapes
+
+
+def bound_ranks_batched_quant_kernel_call(
+        kind: str, users, uscale, uslack, qt, thresholds, table, thr_sc,
+        thr_off, thr_dev, tab_sc, tab_off, *, m: int, tau_valid: int,
+        block_n: int = 256, interpret: bool = True
+        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Raw quantized-storage batched pallas_call (inputs pre-padded, see
+    ops._bound_ranks_batched_stored_impl). Returns three (n, B) f32."""
+    n, d = users.shape
+    taup = table.shape[1]
+    B = qt.shape[1]
+    nb = n // block_n
+    kern, ops, shapes = _quant_kernel_and_operands(
+        kind, users, uscale, uslack, qt, thresholds, table, thr_sc,
+        thr_off, thr_dev, tab_sc, tab_off, m=m, tau_valid=tau_valid)
+    in_specs = [
+        pl.BlockSpec((d, B), lambda i: (0, 0)) if s == "q"
+        else pl.BlockSpec(s(block_n, d, taup, B), lambda i: (i, 0))
+        for s in shapes]
+    out_spec = pl.BlockSpec((block_n, B), lambda i: (i, 0))
+    out_shape = [jax.ShapeDtypeStruct((n, B), jnp.float32)] * 3
+    return pl.pallas_call(
+        kern, grid=(nb,), in_specs=in_specs,
+        out_specs=[out_spec] * 3, out_shape=out_shape,
+        interpret=interpret)(*ops)
+
+
+def bound_ranks_batched_quant_masked_kernel_call(
+        kind: str, users, uscale, uslack, qt, thresholds, table, thr_sc,
+        thr_off, thr_dev, tab_sc, tab_off, block_ids: jax.Array, *, m: int,
+        tau_valid: int, block_n: int = 256, interpret: bool = True
+        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Masked-grid (pruned) twin of the quantized batched call: the grid
+    runs only over the kept tiles named by the scalar-prefetch
+    `block_ids`, exactly like `bound_ranks_batched_masked_kernel_call` —
+    the (block_n, 1) scale/offset/slack vectors ride the same gathered
+    tile index map as the rows they describe. Outputs are COMPACTED
+    (nk·block_n, B) arrays in block-list order."""
+    n, d = users.shape
+    taup = table.shape[1]
+    B = qt.shape[1]
+    nk = block_ids.shape[0]
+    kern, ops, shapes = _quant_kernel_and_operands(
+        kind, users, uscale, uslack, qt, thresholds, table, thr_sc,
+        thr_off, thr_dev, tab_sc, tab_off, m=m, tau_valid=tau_valid)
+
+    def tile(i, ids):
+        return (ids[i], 0)
+
+    in_specs = [
+        pl.BlockSpec((d, B), lambda i, ids: (0, 0)) if s == "q"
+        else pl.BlockSpec(s(block_n, d, taup, B), tile)
+        for s in shapes]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nk,),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((block_n, B), lambda i, ids: (i, 0))] * 3,
+    )
+
+    def wrapped(ids_ref, *refs):
+        kern(*refs)
+
+    out_shape = [jax.ShapeDtypeStruct((nk * block_n, B), jnp.float32)] * 3
+    return pl.pallas_call(
+        wrapped, grid_spec=grid_spec, out_shape=out_shape,
+        interpret=interpret)(block_ids, *ops)

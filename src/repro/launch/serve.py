@@ -65,6 +65,11 @@ def main():
     ap.add_argument("--tau", type=int, default=500)
     ap.add_argument("--omega", type=int, default=10)
     ap.add_argument("--s", type=int, default=64)
+    ap.add_argument("--storage", default="f32",
+                    choices=("f32", "bf16", "int8"),
+                    help="storage spec for users/thresholds/table (PR 5): "
+                         "f32 exact; bf16/int8 quantized with certified "
+                         "bound widening")
     ap.add_argument("--queries", type=int, default=50)
     ap.add_argument("--backend", default="dense",
                     help="query-execution backend: one of "
@@ -107,7 +112,8 @@ def main():
                  f"it cannot be combined with --backend {args.backend}")
 
     users, items = build_embeddings(args)
-    cfg = RankTableConfig(tau=args.tau, omega=args.omega, s=args.s)
+    cfg = RankTableConfig(tau=args.tau, omega=args.omega, s=args.s,
+                          storage_dtype=args.storage)
     backend = "fused" if args.kernels else args.backend
 
     t0 = time.time()

@@ -48,7 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import backends as BK
-from repro.core.types import QueryResult, RankTable
+from repro.core.types import QueryResult, RankTable, StoredUsers
 
 # Never let dedupe shrink a multi-query dispatch to one column: width-1
 # matmuls lower as matvecs with a different accumulation order, which
@@ -65,18 +65,52 @@ class CachingBackend(BK.QueryBackend):
     candidate-set results are only ≈ 8·k·P). Size it from the per-entry
     cost: the default 512 is ~80 MiB at n = 20k; a million-user index
     wants either a smaller capacity or the sharded inner backend.
+
+    NEAR-DUPLICATE caching (PR 5, opt-in): `quantize_key_bits = b` keys
+    the LRU on the QUANTIZED query bytes instead of the exact bytes —
+    each coordinate is snapped to a 2^(b−1)-level grid under a
+    power-of-two per-query scale (the storage tier's quantizer, applied
+    to the key only). Queries within roughly half a grid step per
+    coordinate then SHARE an entry: a hot item's jittered re-asks become
+    hits at a bounded quality cost (the served result is the exact
+    answer of a query within the cell — the rank perturbation is the
+    same order as the c-approximation slack for small cells). The
+    default None keeps the exact-byte contract (bitwise cached ==
+    uncached); with quantization enabled the bit-identity contract
+    deliberately WEAKENS to per-cell identity — measure the
+    hit-rate/overall-ratio tradeoff with `perf_engine --serve`.
     """
 
-    def __init__(self, inner="dense", *, capacity: int = 512, mesh=None):
+    def __init__(self, inner="dense", *, capacity: int = 512, mesh=None,
+                 quantize_key_bits: Optional[int] = None):
         super().__init__(mesh=mesh)
         self.inner = BK.get_backend(inner, mesh=mesh)
         self.name = f"cached:{self.inner.name}"
         self.capacity = int(capacity)
+        if quantize_key_bits is not None and not (
+                2 <= int(quantize_key_bits) <= 15):
+            raise ValueError("quantize_key_bits must be in [2, 15] "
+                             f"(int16 grid); got {quantize_key_bits}")
+        self.quantize_key_bits = (None if quantize_key_bits is None
+                                  else int(quantize_key_bits))
         self._lru: "OrderedDict[tuple, QueryResult]" = OrderedDict()
         self._epoch: Optional[tuple] = None
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+
+    def _key_bytes(self, row: np.ndarray) -> bytes:
+        if self.quantize_key_bits is None:
+            return row.tobytes()
+        amax = float(np.max(np.abs(row)))
+        if amax == 0.0 or not np.isfinite(amax):
+            return row.tobytes()
+        # power-of-two scale bucket: near-duplicates keep the same
+        # exponent except at bucket edges (a bounded miss source)
+        exp = int(np.ceil(np.log2(amax)))
+        levels = float(2 ** (self.quantize_key_bits - 1) - 1)
+        q = np.round(row * (levels / 2.0 ** exp)).astype(np.int16)
+        return q.tobytes() + exp.to_bytes(2, "little", signed=True)
 
     # ----------------------------------------------------------- plumbing
     def bound_ranks(self, rt, users, qs):
@@ -108,7 +142,9 @@ class CachingBackend(BK.QueryBackend):
         recycled by a rebuilt index landing at the same address, silently
         serving stale results, while strong references would pin the old
         table in memory."""
-        arrays = (rt.thresholds, rt.table, users)
+        if isinstance(users, StoredUsers):
+            users = users.rows          # tuples aren't weakref'able; the
+        arrays = (rt.thresholds, rt.table, users)   # rows array is 1:1
         if delta is not None:
             arrays += (delta.add_scores, delta.del_scores, delta.user_live)
         if (self._epoch is None or len(self._epoch) != len(arrays)
@@ -128,7 +164,7 @@ class CachingBackend(BK.QueryBackend):
     def query_batch(self, rt, users, qs, *, k, c, delta=None):
         self._check_epoch(rt, users, delta)
         rows = np.asarray(jax.device_get(qs))
-        keys = [(rows[i].tobytes(), int(k), float(c))
+        keys = [(self._key_bytes(rows[i]), int(k), float(c))
                 for i in range(rows.shape[0])]
 
         per_query: list = [None] * len(keys)

@@ -1,0 +1,69 @@
+"""Generate the PR-5 pre-refactor f32 goldens (run ONCE on the pre-refactor
+tree; the committed .npz pins the storage-tier refactor's f32 no-op claim).
+
+    PYTHONPATH=src python tests/goldens/make_pr5_goldens.py
+
+The golden records the dense backend's QueryResult fields for the
+test_backends problem in both Lemma-1 regimes at B in {1, 16}, plus a
+delta-path result (inserts + deletes + dead users). test_storage.py
+asserts every backend at StorageSpec f32 still reproduces these BITWISE
+after the precision-polymorphic storage refactor.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import ReverseKRanksEngine
+from repro.core.rank_table import build_rank_table
+from repro.core.types import RankTableConfig
+from tests.conftest import make_problem
+
+K = 7
+OUT = os.path.join(os.path.dirname(__file__), "pr5_f32.npz")
+
+
+def main():
+    users, items = make_problem(jax.random.PRNGKey(42), n=512, m=400, d=16)
+    regimes = {
+        "guaranteed": (RankTableConfig(tau=128, omega=4, s=items.shape[0] // 4,
+                                       threshold_mode="exact"),
+                       jax.random.PRNGKey(0), 4.0),
+        "non_guaranteed": (RankTableConfig(tau=16, omega=4, s=8),
+                           jax.random.PRNGKey(1), 1.0),
+    }
+    out = {}
+    for regime, (cfg, key, c) in regimes.items():
+        rt = build_rank_table(users, items, cfg, key)
+        eng = ReverseKRanksEngine(users=users, rank_table=rt, config=cfg)
+        for B in (1, 16):
+            base = items[(1 + jnp.arange(B) * 17) % items.shape[0]]
+            qs = base * (1.0 + 1e-4 * jax.random.normal(
+                jax.random.PRNGKey(100 + B), base.shape, jnp.float32))
+            res = eng.query_batch(qs, k=K, c=c)
+            tag = f"{regime}_B{B}"
+            out[f"{tag}_qs"] = np.asarray(qs)
+            for f in ("indices", "est_rank", "r_lo", "r_up", "R_lo_k",
+                      "R_up_k"):
+                out[f"{tag}_{f}"] = np.asarray(getattr(res, f))
+
+    # delta path: inserts + deletes + dead users on the sampled regime
+    cfg, key, c = regimes["non_guaranteed"]
+    eng = ReverseKRanksEngine.build(users, items, cfg, key)
+    _, new_items = make_problem(jax.random.PRNGKey(77), n=1, m=24, d=16)
+    eng.insert_items(new_items)
+    eng.delete_items([3, 44, 101, 257])
+    eng.delete_users([7, 300])
+    qs = out["non_guaranteed_B16_qs"]
+    res = eng.query_batch(jnp.asarray(qs), k=K, c=c)
+    for f in ("indices", "est_rank", "r_lo", "r_up", "R_lo_k", "R_up_k"):
+        out[f"delta_B16_{f}"] = np.asarray(getattr(res, f))
+    out["delta_new_items"] = np.asarray(new_items)
+
+    np.savez_compressed(OUT, **out)
+    print(f"wrote {OUT}: {sorted(out)[:4]}... ({len(out)} arrays)")
+
+
+if __name__ == "__main__":
+    main()

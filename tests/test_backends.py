@@ -171,6 +171,56 @@ def test_backend_instance_passthrough(problem, regimes):
     assert res.indices.shape == (3, K)
 
 
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+@pytest.mark.parametrize("B", [1, 16])
+@pytest.mark.parametrize("spec", ["float32", "bfloat16", "int8"])
+def test_storage_spec_parity_matrix(problem, spec, backend, B):
+    """PR-5 parity matrix: at EVERY storage spec, query_batch is the B=1
+    case of query (batch-shape independence), and every backend selects
+    identically to the dense backend on the same quantized index — the
+    dequant-aware bound path is shared, so backends cannot drift. (f32
+    bit-parity against the pre-refactor goldens and bf16/int8 certified
+    containment live in tests/test_storage.py.)"""
+    users, items = problem
+    cfg = RankTableConfig(tau=16, omega=4, s=8, storage_dtype=spec)
+    rt = build_rank_table(users, items, cfg, jax.random.PRNGKey(1))
+    eng = ReverseKRanksEngine(users=users, rank_table=rt, config=cfg,
+                              backend=backend)
+    dense = ReverseKRanksEngine(users=users, rank_table=rt, config=cfg)
+    base = items[(1 + jnp.arange(B) * 17) % items.shape[0]]
+    qs = base * (1.0 + 1e-4 * jax.random.normal(
+        jax.random.PRNGKey(100 + B), base.shape, jnp.float32))
+    batched = eng.query_batch(qs, k=K, c=1.0)
+    want = dense.query_batch(qs, k=K, c=1.0)
+    np.testing.assert_array_equal(np.asarray(batched.indices),
+                                  np.asarray(want.indices))
+    # dequantized order statistics compare at float accuracy across
+    # program shapes (FMA contraction is shape-dependent); exact for f32
+    tol = dict(rtol=0) if spec == "float32" else dict(rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(batched.R_lo_k),
+                               np.asarray(want.R_lo_k), **tol)
+    np.testing.assert_allclose(np.asarray(batched.R_up_k),
+                               np.asarray(want.R_up_k), **tol)
+    for b in range(B):
+        single = eng.query(qs[b], k=K, c=1.0)
+        np.testing.assert_array_equal(np.asarray(batched.indices[b]),
+                                      np.asarray(single.indices))
+        if spec == "float32":
+            # gathered table entries: exact across batch shapes
+            np.testing.assert_array_equal(np.asarray(batched.r_lo[b]),
+                                          np.asarray(single.r_lo))
+            np.testing.assert_array_equal(np.asarray(batched.r_up[b]),
+                                          np.asarray(single.r_up))
+        else:
+            # dequantized bounds (code·scale + offset − widen): XLA may
+            # or may not contract the multiply-add into an FMA depending
+            # on the program shape — float accuracy, not bitwise
+            np.testing.assert_allclose(np.asarray(batched.r_lo[b]),
+                                       np.asarray(single.r_lo), rtol=1e-6)
+            np.testing.assert_allclose(np.asarray(batched.r_up[b]),
+                                       np.asarray(single.r_up), rtol=1e-6)
+
+
 @pytest.mark.parametrize("backend", ["dense", "fused"])
 def test_bound_ranks_orientation(problem, regimes, backend):
     """`QueryBackend.bound_ranks` returns (B, n) query-major arrays that
