@@ -338,7 +338,13 @@ class PrunedBackend(QueryBackend):
     users/thresholds/table, same contract as the serving cache), so
     mutations and rebuild hot-swaps regenerate them automatically;
     `build_index` pre-warms the cache so the first query after a build
-    pays no summary pass.
+    pays no summary pass. `use_cones=False` drops the PR 6 norm-band +
+    angular-cone sketches and prunes on coordinate boxes alone (an A/B
+    surface for the bench; the default keeps the intersected — strictly
+    tighter — envelopes). A build-time cluster reorder
+    (`Engine.build(cluster_reorder=True)` / rebuild) is invisible here:
+    the reordered snapshot arrays key a fresh summary generation, and n
+    is unchanged, so the sharded tile-alignment contract is unaffected.
 
     Fallbacks (always full-scan-correct, surfaced in `stats.fallback`):
       * `max_union_frac` — when phase A keeps more than this fraction of
@@ -355,7 +361,8 @@ class PrunedBackend(QueryBackend):
 
     def __init__(self, inner="dense", *, mesh=None,
                  block_size: Optional[int] = None,
-                 max_union_frac: float = 0.5, delta_guard: float = 0.25):
+                 max_union_frac: float = 0.5, delta_guard: float = 0.25,
+                 use_cones: bool = True):
         super().__init__(mesh=mesh)
         from repro.core import pruning
         self._pruning = pruning
@@ -364,6 +371,7 @@ class PrunedBackend(QueryBackend):
         self.block_size = int(block_size or pruning.DEFAULT_BLOCK)
         self.max_union_frac = float(max_union_frac)
         self.delta_guard = float(delta_guard)
+        self.use_cones = bool(use_cones)
         self._summaries: "OrderedDict[tuple, tuple]" = OrderedDict()
         self._sharded_fns: dict = {}
         self.stats = pruning.PruneStats()   # last query_batch's accounting
@@ -385,13 +393,15 @@ class PrunedBackend(QueryBackend):
     def summary_for(self, rt: RankTable, users: jax.Array):
         """The `BlockSummary` for this index generation (identity-cached;
         a mutation or rebuild swaps the arrays and lazily regenerates)."""
-        key = (id(users), id(rt.thresholds), id(rt.table), self.block_size)
+        key = (id(users), id(rt.thresholds), id(rt.table), self.block_size,
+               self.use_cones)
         hit = self._summaries.get(key)
         if hit is not None:
             self._summaries.move_to_end(key)
             return hit[1]
         summary = self._pruning.build_block_summary(
-            users, rt, block_size=self.block_size)
+            users, rt, block_size=self.block_size,
+            with_cones=self.use_cones)
         # the value keeps the keyed arrays alive, so their id()s cannot
         # be recycled while the entry exists (cf. serve.cache weakrefs)
         self._summaries[key] = ((users, rt.thresholds, rt.table), summary)

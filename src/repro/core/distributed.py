@@ -292,6 +292,16 @@ def make_pruned_batch_query_fn(mesh: Mesh, k: int, n: int, c: float, *,
     exact global order statistics through the unchanged all-gather
     merge. Requires n % (P · block_size) == 0 (tiles must not straddle
     shards — `PrunedBackend` falls back to the full scan otherwise).
+
+    Reorder contract (PR 6): a build/rebuild-time cluster reorder is a
+    GLOBAL row permutation applied to users/table BEFORE sharding, so
+    each shard's local tiles are contiguous rows of the already-permuted
+    matrix — shard-local block ids, the divisibility contract and the
+    tree-merge are all unchanged (n is invariant under a permutation).
+    The permuted snapshot answers in its own row coordinates, identical
+    to every other backend on that snapshot; translation to pre-remap
+    client ids happens once, host-side, via `IndexSnapshot.user_remap` —
+    never inside the shard_map.
     """
     nshards = mesh.devices.size
     shard_n = n // nshards

@@ -86,8 +86,24 @@ from repro.core import rank_table as rt_mod
 from repro.core.backends import QueryBackend, available_backends, get_backend
 from repro.core.types import QueryResult, RankTable, RankTableConfig
 from repro.index import delta as delta_mod
+
+
 from repro.index.maintenance import RebuildRecord
-from repro.index.snapshot import IndexSnapshot, SnapshotManager
+from repro.index.snapshot import IndexSnapshot, SnapshotManager, \
+    compose_remaps
+
+
+def _cluster_layout(users):
+    """(perm, old→new remap) from `pruning.kmeans_layout`, or
+    (None, None) when the matrix is too small or the layout is already
+    the k-means order (an identity reorder must not publish a remap)."""
+    from repro.core import pruning
+    perm = pruning.kmeans_layout(users)
+    if perm is None or np.array_equal(perm, np.arange(perm.size)):
+        return None, None
+    remap = np.full(perm.size, -1, np.int64)
+    remap[perm] = np.arange(perm.size, dtype=np.int64)
+    return perm, remap
 
 
 @dataclasses.dataclass
@@ -99,6 +115,9 @@ class ReverseKRanksEngine:
     mesh: Any = None          # only consumed by the "sharded" backend
     items: Any = None         # base item set; enables the mutation API
     build_key: Any = None     # Algorithm-1 key (re-derives sampling state)
+    user_remap: Any = None    # lineage old→new row map the constructor's
+    # user matrix ALREADY reflects (build(cluster_reorder=True) permutes
+    # rows before constructing); seeds the epoch-0 snapshot
 
     def __post_init__(self):
         self._backend = get_backend(self.backend, mesh=self.mesh)
@@ -117,7 +136,7 @@ class ReverseKRanksEngine:
             epoch=0, users=self.users, rank_table=self.rank_table,
             config=self.config, base=base,
             delta=delta_mod.DeltaState.empty(m_base, self.users.shape[0]),
-            corr=None,
+            corr=None, user_remap=self.user_remap,
             stored_users=self.config.storage.pack_users(self.users))
         self._snapshots = SnapshotManager(snap)
         self._lock = threading.RLock()          # serializes mutations
@@ -128,15 +147,28 @@ class ReverseKRanksEngine:
     @classmethod
     def build(cls, users: jax.Array, items: jax.Array, cfg: RankTableConfig,
               key: jax.Array, backend: Union[str, QueryBackend] = "dense",
-              mesh: Any = None) -> "ReverseKRanksEngine":
+              mesh: Any = None, cluster_reorder: bool = False
+              ) -> "ReverseKRanksEngine":
         """Run Algorithm 1 and return a query-ready, MUTABLE engine.
 
         The build executes on the requested backend's substrate
         (`QueryBackend.build_index`): "sharded" runs
         `distributed.build_sharded`, keeping the table row-sharded
         end-to-end instead of building on one device and re-sharding.
+
+        `cluster_reorder` (PR 6): k-means-cluster the user matrix and
+        physically reorder its rows BEFORE the build so the pruned
+        backends' summary tiles are geometrically tight by construction
+        (`pruning.kmeans_layout`). The old→new permutation is published
+        as the epoch-0 snapshot's `user_remap`, exactly like a
+        compaction's; n is unchanged, so backend shape contracts hold.
         """
         bk = get_backend(backend, mesh=mesh)
+        remap = None
+        if cluster_reorder:
+            perm, remap = _cluster_layout(users)
+            if perm is not None:
+                users = jnp.asarray(users)[jnp.asarray(perm)]
         rt = bk.build_index(users, items, cfg, key)
         # construct from the ORIGINAL (backend, mesh) spec so the engine's
         # introspection fields survive (eng.mesh must not silently become
@@ -147,7 +179,7 @@ class ReverseKRanksEngine:
                    backend=bk if isinstance(backend, QueryBackend)
                    else backend,
                    mesh=None if isinstance(backend, QueryBackend) else mesh,
-                   items=items, build_key=key)
+                   items=items, build_key=key, user_remap=remap)
 
     @property
     def backend_name(self) -> str:
@@ -217,8 +249,9 @@ class ReverseKRanksEngine:
         """Install the next epoch (caller holds the mutation lock).
 
         `user_remap` defaults to carrying the previous snapshot's value
-        (ordinary mutations keep the last compaction visible to
-        clients); rebuilds pass an explicit array or None."""
+        (ordinary mutations keep the lineage's coordinate map visible to
+        clients); rebuilds pass the explicit COMPOSED map — lineage ∘
+        compaction ∘ reorder (`snapshot.compose_remaps`)."""
         users = snap.users if users is None else users
         rank_table = snap.rank_table if rank_table is None else rank_table
         delta = snap.delta if delta is None else delta
@@ -413,7 +446,8 @@ class ReverseKRanksEngine:
         return self._require_base("live_item_ids").live_item_ids()
 
     def rebuild(self, reason: str = "manual",
-                compact_dead_above: Optional[float] = None
+                compact_dead_above: Optional[float] = None,
+                reorder_clusters: bool = False
                 ) -> Optional[RebuildRecord]:
         """Full Algorithm 1 over the live item set on this engine's
         backend, then an atomic hot-swap to the new epoch.
@@ -433,6 +467,14 @@ class ReverseKRanksEngine:
         clients can translate the ids they hold. Compaction is skipped —
         never failed — when the shrunken n would violate the backend's
         shape contract (e.g. sharded divisibility). None disables it.
+
+        `reorder_clusters` (PR 6): after any compaction, k-means-cluster
+        the (compacted) user matrix and physically reorder rows/table so
+        pruned-backend tiles are tight (`pruning.kmeans_layout`); n is
+        unchanged, so no shape contract can fail. The published
+        `user_remap` is the COMPOSITION lineage-remap ∘ compaction ∘
+        reorder — a rebuild that does neither carries the lineage's
+        remap forward unchanged (it is never cleared).
         """
         if not self._rebuild_lock.acquire(blocking=False):
             return None
@@ -514,9 +556,22 @@ class ReverseKRanksEngine:
                         delta_new = dataclasses.replace(
                             delta_new,
                             user_live=np.ones(keep.size, bool))
+                reordered = False
+                if reorder_clusters:
+                    perm, rmap = _cluster_layout(np.asarray(users_now))
+                    if perm is not None:
+                        reordered = True
+                        j = jnp.asarray(perm)
+                        users_now = users_now[j]
+                        rt_work = rt_work.take_rows(j)
+                        delta_new = dataclasses.replace(
+                            delta_new, user_live=np.asarray(
+                                delta_new.user_live)[perm])
+                        remap = compose_remaps(remap, rmap)
                 swapped = self._publish(
                     now, users=users_now, rank_table=rt_work,
-                    delta=delta_new, base=base_new, user_remap=remap)
+                    delta=delta_new, base=base_new,
+                    user_remap=compose_remaps(now.user_remap, remap))
             # epoch captured from the published snapshot, not self.epoch:
             # a mutation racing in after the lock releases must not be
             # misattributed to this swap
@@ -524,7 +579,7 @@ class ReverseKRanksEngine:
                 epoch_before=snap.epoch, epoch_after=swapped.epoch,
                 reason=reason, build_s=build_s,
                 swap_s=time.monotonic() - t1, stats=stats,
-                users_compacted=n_dropped)
+                users_compacted=n_dropped, users_reordered=reordered)
         finally:
             self._rebuild_lock.release()
 

@@ -52,6 +52,58 @@ envelope bucketize reuses `query._bucketize`, so the storage-dtype cast
 (bf16 tables) is applied on both sides of the comparison and stays
 monotone.
 
+Geometry sketches (PR 6): every block additionally stores a NORM BAND
+[n↓, n↑] ⊇ {‖u‖₂ : u ∈ block} and an ANGULAR CONE (μ̂, cos r) with
+û·μ̂ ≥ cos r for every member direction û = u/‖u‖. In exact arithmetic
+s = u·q = ‖u‖·‖q‖·cos∠(u, q), and the spherical triangle inequality
+gives ∠(u, q) ∈ [max(0, θ − r), min(π, θ + r)] with θ = ∠(q, μ̂), so the
+block score range is also contained in
+
+    ‖q‖ · [ n(c↓)·c↓ , n(c↑)·c↑ ],   c↑ = cos(max(0, θ − r)),
+                                     c↓ = cos(min(π, θ + r)),
+
+where n(c) = n↑ if c ≥ 0 else n↓ (the norm extremizing a signed
+cosine). Phase A INTERSECTS this range with the coordinate-box range:
+the true score lies in both, so the intersection is certified and never
+looser than either sketch alone — boxes win on axis-aligned mass,
+cones on tight direction bundles with spread coordinates. cos(θ ∓ r)
+is evaluated trig-free through the cosine addition formulas, with the
+clamped boundary cases selected by the equivalent tests cosθ ≥ cos r
+(θ ≤ r) and cosθ ≤ −cos r (θ + r ≥ π). Certification under f32:
+
+  * every unit-vector dot (cos r at build, cosθ at query) is widened by
+    a rounding slack covering the d-term accumulation AND the operand
+    normalizations (build-side cos r rounds DOWN — the cone only
+    widens; query-side cosθ widens in the direction that extremizes
+    each bound);
+  * n↓/n↑ and ‖q‖ carry relative slacks for the sum-of-squares + sqrt;
+  * the final products add the same member-dot slack the box path uses,
+    with Σ|u_j·q_j| ≤ ‖u‖·‖q‖ ≤ n↑·‖q‖ (Cauchy-Schwarz), so a member's
+    COMPUTED phase-B score — not just its exact value — stays inside;
+  * degenerate blocks are safe by construction: a (near-)zero mean
+    direction is stored as μ̂ = 0, which forces cosθ = 0 and cos r < 0
+    and relaxes the cone to the vacuous ±n↑·‖q‖; a zero-norm member
+    forces n↓ = 0, so the band always brackets its score 0; a zero
+    query zeroes both cone bounds around the true score 0.
+
+The PR 5 storage widenings compose unchanged: `user_slack` (quantized
+user rows) widens the INTERSECTED range — the member's certified score
+interval is ± row_slack·‖q‖₁ around the dequantized score that BOTH
+sketches bound — and `score_eps`/widened thr/tab envelopes act after
+the score range is formed, exactly as for the box alone.
+
+Build-time layout (`kmeans_layout`): both sketches only pay when
+blocks are geometrically TIGHT, which the caller's row order does not
+guarantee (i.i.d. or shuffled-mixture users defeat any per-tile
+sketch). `Engine.build/rebuild` can k-means-cluster the f32 user
+matrix and PHYSICALLY REORDER rows so consecutive `block_size` tiles
+hold like users, publishing the old→new permutation through
+`IndexSnapshot.user_remap` (composed over the lineage, exactly like
+compaction). The reorder changes WHERE a user row lives, never what a
+query returns for it: selected indices stay bit-identical to the
+unpruned inner backend on the same (reordered) snapshot, and clients
+translate to pre-remap ids via the composed remap.
+
 Delta path (`repro.index`): the correction shifts every rank by
 [-n_del, +n_add], so phase A widens the block bounds by the padded
 correction widths and subtracts per-block dead-user counts from the live
@@ -89,6 +141,18 @@ DEFAULT_BLOCK = 256
 _SCORE_SLACK = 4e-7
 _SCORE_SLACK_ABS = 1e-6
 
+# Absolute floor of the unit-vector dot slack (cone sketches): cos r and
+# cos θ are dots of normalized operands, so magnitudes are ≤ 1 and the
+# d-term accumulation bound _SCORE_SLACK·d plus this floor covers the
+# dot, both normalizations and the sin = sqrt(1 − c²) evaluation.
+_COS_SLACK_ABS = 1e-6
+
+
+def _cos_slack(d: int) -> float:
+    """f32 rounding slack for a dot product of two unit vectors of
+    dimension d (see _COS_SLACK_ABS)."""
+    return _SCORE_SLACK * d + _COS_SLACK_ABS
+
 
 class BlockSummary(NamedTuple):
     """Per-block sketch of the user matrix + rank table (a pytree).
@@ -124,6 +188,18 @@ class BlockSummary(NamedTuple):
     #     monotone-cast rounding; 0 for int8).
     user_slack: Optional[jax.Array] = None
     score_eps: Optional[jax.Array] = None
+    # Geometry sketches (PR 6), None when built with with_cones=False:
+    #   norm_min/norm_max: (nb, 1) f32 — certified band around every
+    #     member's ‖u‖₂ (f32-rounding widened at build).
+    #   mu: (nb, d) f32 — unit mean member direction (exact 0 rows when
+    #     the directions cancel — the cone then reads as vacuous).
+    #   cos_r: (nb, 1) f32 — certified LOWER bound on û·μ̂ over member
+    #     directions û, i.e. cos of the cone's max angular radius,
+    #     rounding-widened DOWN at build.
+    norm_min: Optional[jax.Array] = None
+    norm_max: Optional[jax.Array] = None
+    mu: Optional[jax.Array] = None
+    cos_r: Optional[jax.Array] = None
 
     @property
     def n_blocks(self) -> int:
@@ -162,9 +238,10 @@ def _pad_rows(x: jax.Array, total: int, value) -> jax.Array:
     return jnp.pad(x, width, constant_values=value)
 
 
-@functools.partial(jax.jit, static_argnames=("block_size",))
+@functools.partial(jax.jit, static_argnames=("block_size", "with_cones"))
 def build_block_summary(users, rt: RankTable,
-                        block_size: int = DEFAULT_BLOCK) -> BlockSummary:
+                        block_size: int = DEFAULT_BLOCK,
+                        with_cones: bool = True) -> BlockSummary:
     """Fold (users, rank table) into per-block sketches — one O(n·(d+τ))
     pass at build/rebuild time, O(n/block · (d+τ)) resident thereafter.
 
@@ -178,6 +255,10 @@ def build_block_summary(users, rt: RankTable,
     entries) BEFORE the column min/max, so the phase-A bounds bracket
     every member's widened (r↓, r↑) from the dequant-aware lookup —
     Lemma-1 tile pruning stays exact at every spec.
+
+    `with_cones` adds the PR 6 norm-band + angular-cone fields (built
+    over the same dequantized f32 rows the box sees — the quantized-user
+    `user_slack` widening then covers both sketches identically).
     """
     if isinstance(users, StoredUsers):
         u32 = users.rows.astype(jnp.float32)
@@ -236,17 +317,111 @@ def build_block_summary(users, rt: RankTable,
     rows = jnp.minimum(
         jnp.full((nb,), block_size, jnp.int32),
         (n - jnp.arange(nb) * block_size).astype(jnp.int32))
+    norm_min = norm_max = mu = cos_r = None
+    if with_cones:
+        cs = _cos_slack(d)
+        norms = jnp.sqrt(jnp.sum(u32 * u32, axis=1))        # (n,)
+        # band widened for the sum-of-squares + sqrt rounding; zero rows
+        # keep n↓ = 0 exactly (their score 0 must stay bracketed)
+        norm_min = _pad_rows(norms * (1.0 - cs), total, inf
+                             ).reshape(nb, block_size).min(
+                                 axis=1, keepdims=True)
+        norm_max = _pad_rows(norms * (1.0 + cs), total, 0.0
+                             ).reshape(nb, block_size).max(
+                                 axis=1, keepdims=True)
+        # unit directions; exact-zero rows map to the zero direction
+        # (their dot with μ̂ is 0, which only widens the cone)
+        uhat = u32 / jnp.maximum(norms, 1e-30)[:, None]
+        uh = _pad_rows(uhat, total, 0.0).reshape(nb, block_size, d)
+        mu_raw = uh.sum(axis=1)                             # (nb, d)
+        mu_n = jnp.sqrt(jnp.sum(mu_raw * mu_raw, axis=1, keepdims=True))
+        # a cancelled mean direction is stored as EXACTLY 0: the query
+        # side then sees cosθ = 0 and cos_r < 0 — the vacuous cone —
+        # instead of an ill-normalized reference axis
+        mu = jnp.where(mu_n > 1e-20,
+                       mu_raw / jnp.maximum(mu_n, 1e-30), 0.0)
+        dots = (uh * mu[:, None, :]).sum(axis=2)            # (nb, bs)
+        valid = jnp.arange(block_size)[None, :] < rows[:, None]
+        dots = jnp.where(valid, dots, 2.0)
+        cos_r = jnp.clip(dots.min(axis=1, keepdims=True) - cs,
+                         -1.0, 1.0)
     return BlockSummary(
         dim_min=u_lo.min(axis=1), dim_max=u_hi.max(axis=1),
         thr_min=thr_lo.min(axis=1), thr_max=thr_hi.max(axis=1),
         tab_min=tab_lo.min(axis=1), tab_max=tab_hi.max(axis=1),
-        rows=rows, m=rt.m, user_slack=user_slack, score_eps=score_eps)
+        rows=rows, m=rt.m, user_slack=user_slack, score_eps=score_eps,
+        norm_min=norm_min, norm_max=norm_max, mu=mu, cos_r=cos_r)
+
+
+@jax.jit
+def _kmeans_step(u: jax.Array, centers: jax.Array
+                 ) -> tuple[jax.Array, jax.Array]:
+    """One Lloyd iteration: assign rows to nearest center (expanded
+    ‖u − c‖² = ‖u‖² − 2u·c + ‖c‖², one (n, d) × (d, K) matmul), then
+    recenter; empty clusters keep their old center."""
+    K = centers.shape[0]
+    d2 = (jnp.sum(u * u, axis=1, keepdims=True)
+          - 2.0 * (u @ centers.T)
+          + jnp.sum(centers * centers, axis=1)[None, :])
+    assign = jnp.argmin(d2, axis=1)
+    sums = jax.ops.segment_sum(u, assign, num_segments=K)
+    counts = jax.ops.segment_sum(jnp.ones((u.shape[0],), jnp.float32),
+                                 assign, num_segments=K)
+    new = jnp.where(counts[:, None] > 0.0,
+                    sums / jnp.maximum(counts, 1.0)[:, None], centers)
+    return assign, new
+
+
+def kmeans_layout(users, *, block_size: int = DEFAULT_BLOCK,
+                  n_clusters: Optional[int] = None, iters: int = 8,
+                  seed: int = 0) -> Optional[np.ndarray]:
+    """Build-time geometry-aware row layout (PR 6, module docstring).
+
+    K-means-clusters the f32 user matrix (fixed PRNG seed — rebuilds are
+    deterministic) and returns the permutation that groups each cluster
+    into consecutive rows, ordered WITHIN each cluster by distance to its
+    center: `perm[new] = old`. The secondary sort matters for mixed
+    populations — rows only loosely attached to their cluster (a noise
+    floor, stragglers between blobs) sink to the tail blocks of each
+    segment instead of polluting every block's envelope, so the damage
+    of unclusterable rows is confined to the few blocks that hold them.
+    Ties (equal distance) break by original row id, keeping the layout
+    deterministic. Returns None when the matrix spans fewer than two
+    summary blocks (nothing to tighten).
+
+    The caller applies `users[perm]` / `rank_table.take_rows(perm)` and
+    publishes the inverse old→new map through the snapshot's
+    `user_remap` channel; n is unchanged, so every backend shape
+    contract (sharded divisibility included) survives the reorder.
+    """
+    u = jnp.asarray(users, jnp.float32)
+    n = u.shape[0]
+    if -(-n // block_size) < 2:
+        return None
+    K = int(n_clusters) if n_clusters else int(
+        np.clip(n // (4 * block_size), 2, 128))
+    K = min(K, n)
+    key = jax.random.PRNGKey(seed)
+    centers = u[jax.random.choice(key, n, shape=(K,), replace=False)]
+    assign = jnp.zeros((n,), jnp.int32)
+    for _ in range(max(int(iters), 1)):
+        assign, centers = _kmeans_step(u, centers)
+    d2 = jnp.sum((u - centers[assign]) ** 2, axis=1)
+    # np.lexsort sorts by the LAST key first: assign, then distance,
+    # then row id (lexsort's index tie-break is positional ⇒ stable)
+    return np.lexsort((np.asarray(d2), np.asarray(assign))).astype(
+        np.int64)
 
 
 def _envelope_bounds(summary: BlockSummary, qs: jax.Array
                      ) -> tuple[jax.Array, jax.Array]:
     """Certified per-(block, query) bounds: (r_lo_opt, r_up_pes), each
     (nb, B), with r_lo_opt ≤ min r↓ and r_up_pes ≥ max r↑ over members.
+
+    The score range is the box range intersected with the norm-band ×
+    angular-cone range when the summary carries geometry sketches (PR 6;
+    certification in the module docstring) — strictly no looser, often
+    much tighter on direction-bundled blocks.
 
     Derivation mirrors `query.lookup_bounds_batch`: for a member with
     score s and bucketize index idx = #{t_j ≤ s}, the envelope score s↑
@@ -265,6 +440,40 @@ def _envelope_bounds(summary: BlockSummary, qs: jax.Array
     slack = (_SCORE_SLACK * d) * (absmax @ jnp.abs(qs).T) + _SCORE_SLACK_ABS
     s_hi = s_hi + slack
     s_lo = s_lo - slack
+    if summary.norm_min is not None:
+        # cone ∩ box (module docstring): s = ‖u‖·‖q‖·cos∠(u, q) with
+        # ∠(u, q) ∈ [max(0, θ − r), min(π, θ + r)] — evaluated trig-free
+        # via the cosine addition formulas, every cosine/norm widened in
+        # the direction that can only loosen the bound
+        cs = _cos_slack(d)
+        q32 = qs.astype(jnp.float32)
+        q_norm = jnp.sqrt(jnp.sum(q32 * q32, axis=1))       # (B,)
+        q_hat = q32 / jnp.maximum(q_norm, 1e-30)[:, None]
+        cos_t = summary.mu @ q_hat.T                        # (nb, B)
+        cos_r = summary.cos_r                               # (nb, 1)
+        sin_r = jnp.sqrt(jnp.maximum(1.0 - cos_r * cos_r, 0.0))
+        ct_hi = jnp.clip(cos_t + cs, -1.0, 1.0)     # θ rounded down
+        ct_lo = jnp.clip(cos_t - cs, -1.0, 1.0)     # θ rounded up
+        st_hi = jnp.sqrt(jnp.maximum(1.0 - ct_hi * ct_hi, 0.0))
+        st_lo = jnp.sqrt(jnp.maximum(1.0 - ct_lo * ct_lo, 0.0))
+        # θ ≤ r ⇒ the cone contains q̂'s direction: cos max is 1;
+        # θ + r ≥ π ⇒ it contains −q̂: cos min is −1
+        c_hi = jnp.where(ct_hi >= cos_r, 1.0,
+                         ct_hi * cos_r + st_hi * sin_r) + cs
+        c_lo = jnp.where(ct_lo <= -cos_r, -1.0,
+                         ct_lo * cos_r - st_lo * sin_r) - cs
+        n_lo, n_hi = summary.norm_min, summary.norm_max     # (nb, 1)
+        q_lo = (q_norm * (1.0 - cs))[None, :]
+        q_up = (q_norm * (1.0 + cs))[None, :]
+        # member-dot rounding, Cauchy-Schwarz-bounded: Σ|u_j·q_j| ≤
+        # ‖u‖·‖q‖ ≤ n↑·‖q‖ — the cone analogue of the box's absmax term
+        pad = (_SCORE_SLACK * d) * (n_hi * q_up) + _SCORE_SLACK_ABS
+        s_hi_cone = jnp.where(c_hi >= 0.0, n_hi * c_hi * q_up,
+                              n_lo * c_hi * q_lo) + pad
+        s_lo_cone = jnp.where(c_lo >= 0.0, n_lo * c_lo * q_lo,
+                              n_hi * c_lo * q_up) - pad
+        s_hi = jnp.minimum(s_hi, s_hi_cone)
+        s_lo = jnp.maximum(s_lo, s_lo_cone)
     if summary.user_slack is not None:
         # quantized user rows: the members' certified score intervals are
         # ± row_slack·‖q‖₁ around the dequantized score the box bounds
@@ -282,8 +491,13 @@ def _envelope_bounds(summary: BlockSummary, qs: jax.Array
         e = summary.score_eps * jnp.maximum(jnp.abs(s_lo), jnp.abs(s_hi)) \
             + _SCORE_SLACK_ABS
         idx_hi = _bucketize(summary.thr_min, s_hi + e)    # ≥ member idx_hi
+        # above-all-thresholds branch: a member BELOW its top threshold
+        # still looks up a widened table entry, and quantization widening
+        # can push a rank-1 entry below 1.0 (bf16: 1·(1−eps)) — the
+        # envelope must floor at the widened minimum (last column of the
+        # non-increasing tab_min), not at the exact 1.0
         r_lo_opt = jnp.where(
-            idx_hi == tau, 1.0,
+            idx_hi == tau, jnp.minimum(1.0, summary.tab_min[:, -1:]),
             jnp.take_along_axis(summary.tab_min,
                                 jnp.clip(idx_hi, 0, tau - 1), axis=1))
         idx_lo = _bucketize(summary.thr_max, s_lo - e)    # ≤ member idx_lo
@@ -292,7 +506,15 @@ def _envelope_bounds(summary: BlockSummary, qs: jax.Array
             idx_lo == 0, top,
             jnp.take_along_axis(summary.tab_max,
                                 jnp.clip(idx_lo - 1, 0, tau - 1), axis=1))
-        return r_lo_opt, r_up_pes
+        # the widened thr/tab values are RECOMPUTED on the member path
+        # (dequant + half-step pad inside the lookup) and XLA is free to
+        # re-associate/fuse that arithmetic differently there, so the two
+        # sides agree only to a few f32 ulp — pad one ppm relative
+        # (≲ 1e-2 rank units at any practical m) to keep the envelopes a
+        # certified superset of what the member lookup actually returns.
+        # The f32 branch below needs none of this: both sides read the
+        # same stored values and only min/max/compare them.
+        return r_lo_opt * (1.0 - 1e-6), r_up_pes * (1.0 + 1e-6)
     idx_hi = _bucketize(summary.thr_min, s_hi)    # ≥ member idx
     tab_min = summary.tab_min.astype(jnp.float32)
     r_lo_opt = jnp.where(

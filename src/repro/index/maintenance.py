@@ -35,6 +35,16 @@ Policy knobs:
                        tombstoned-user fraction, dead rows are compacted
                        out at swap time and the old→new remap published
                        on the snapshot. None leaves dead rows masked.
+  reorder_clusters   — loop rebuilds pass this to
+                       `engine.rebuild(reorder_clusters=)`: each rebuild
+                       re-clusters the (compacted) user matrix and
+                       reorders rows so pruned-backend tiles stay tight
+                       as streaming upserts erode the build-time layout
+                       (PR 6). The permutation COMPOSES onto the
+                       lineage's `user_remap` under the same hot-swap
+                       that publishes the rebuilt table — readers never
+                       observe rows and coordinates from different
+                       layouts.
   min_interval_s     — floor between rebuilds, so a mutation storm
                        cannot wedge the loop into back-to-back builds.
 """
@@ -55,6 +65,7 @@ class MaintenancePolicy:
     max_stale_fraction: float = 0.02
     max_correction_overhead: float = float("inf")
     compact_dead_above: Optional[float] = None
+    reorder_clusters: bool = False
     min_interval_s: float = 0.0
 
     def trigger(self, stats: DeltaStats,
@@ -87,6 +98,7 @@ class RebuildRecord:
     swap_s: float           # under-lock re-base + publish wall time
     stats: DeltaStats       # delta accounting at capture time
     users_compacted: int = 0    # tombstoned rows dropped by the swap
+    users_reordered: bool = False   # swap published a cluster reorder
 
 
 class MaintenanceLoop:
@@ -169,7 +181,8 @@ class MaintenanceLoop:
             try:
                 record = self.engine.rebuild(
                     reason=reason,
-                    compact_dead_above=self.policy.compact_dead_above)
+                    compact_dead_above=self.policy.compact_dead_above,
+                    reorder_clusters=self.policy.reorder_clusters)
             except Exception as e:      # keep maintaining; surface it
                 self.failures.append(e)
                 del self.failures[:-self._MAX_FAILURES]

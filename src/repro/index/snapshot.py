@@ -37,6 +37,28 @@ from repro.core.types import DeltaCorrection, RankTable, RankTableConfig, \
 from repro.index.delta import BaseIndex, DeltaState
 
 
+def compose_remaps(first: Optional[np.ndarray],
+                   second: Optional[np.ndarray]) -> Optional[np.ndarray]:
+    """Compose two old→new user-row maps into one (PR 6).
+
+    `first` maps lineage-original ids → intermediate coordinates,
+    `second` maps intermediate → current; the result maps original →
+    current, with −1 (dropped by a compaction) absorbing: once a row is
+    gone it stays gone through any later reorder or compaction. None is
+    the identity segment (no remap on that step), so compose(None, r) is
+    r and compose(r, None) is r — a rebuild that neither compacts nor
+    reorders CARRIES the lineage's remap instead of clearing it.
+    """
+    if first is None:
+        return second
+    if second is None:
+        return first
+    out = np.full(first.shape[0], -1, np.int64)
+    alive = first >= 0
+    out[alive] = second[first[alive]]
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class IndexSnapshot:
     """One immutable index generation (see module docstring).
@@ -46,12 +68,16 @@ class IndexSnapshot:
     for engines constructed without their item set, which can serve and
     mask users but not mutate items.
 
-    `user_remap` surfaces the LAST user-row compaction (PR 4): a
-    compacting rebuild drops tombstoned user rows, so indices returned by
-    queries change coordinates. `user_remap[old] = new` (−1 for dropped
-    rows) lets clients translate ids they hold; it is carried forward by
-    subsequent mutations and replaced (or cleared) by the next rebuild.
-    None means no compaction has happened on this index lineage.
+    `user_remap` surfaces the COMPOSED user-row coordinate change of the
+    whole lineage (PR 4 compaction, PR 6 cluster reorder): a compacting
+    rebuild drops tombstoned rows, a reordering build/rebuild permutes
+    them, and either changes the coordinates queries answer in.
+    `user_remap[old] = new` (−1 for rows a compaction dropped) maps
+    LINEAGE-ORIGINAL ids to this snapshot's coordinates; successive
+    remapping rebuilds COMPOSE onto it (`compose_remaps`) — never
+    replace it — and ordinary mutations carry it unchanged. None means
+    coordinates still equal the lineage's original ones. Current→original
+    translation (query indices back to client ids) is `client_user_ids`.
 
     `stored_users` (PR 5) is the storage-spec materialization of `users`
     (bf16/int8 rows + per-user scales); None on the exact f32 spec, where
@@ -75,6 +101,19 @@ class IndexSnapshot:
         """What backends scan: the spec-space storage, or the raw f32
         matrix on the exact spec."""
         return self.users if self.stored_users is None else self.stored_users
+
+    def client_user_ids(self, indices) -> np.ndarray:
+        """Translate CURRENT-coordinate user indices (what `query_batch`
+        returns on this snapshot) back to lineage-original ids — the
+        coordinates a client that never observed a compaction/reorder
+        holds. Identity when the lineage never remapped."""
+        idx = np.asarray(indices)
+        if self.user_remap is None:
+            return idx
+        inv = np.full(self.n, -1, np.int64)
+        src = np.flatnonzero(self.user_remap >= 0)
+        inv[self.user_remap[src]] = src
+        return inv[idx]
 
     @property
     def n(self) -> int:

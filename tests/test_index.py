@@ -358,6 +358,106 @@ def test_dead_user_never_outranks_shifted_live_user():
                                   np.asarray([0, 1]))
 
 
+# ----------------------------------------- (PR 6) user-row remap lineage
+def test_compose_remaps_identity_and_absorption():
+    """`compose_remaps` unit semantics: None is the identity segment on
+    either side, and −1 (a row dropped by compaction) absorbs through any
+    later remap — once gone, a row stays gone."""
+    from repro.index.snapshot import compose_remaps
+    first = np.asarray([2, -1, 0, 1], np.int64)
+    assert compose_remaps(None, None) is None
+    np.testing.assert_array_equal(compose_remaps(None, first), first)
+    np.testing.assert_array_equal(compose_remaps(first, None), first)
+    second = np.asarray([1, -1, 0], np.int64)   # intermediate has 3 rows
+    np.testing.assert_array_equal(compose_remaps(first, second),
+                                  np.asarray([0, -1, 1, -1], np.int64))
+
+
+def test_compact_then_reorder_composes_remap(problem):
+    """Regression (PR 6): a compacting rebuild FOLLOWED by further
+    compaction/reorder must COMPOSE the published `user_remap`, not
+    replace it. The invariant checked at every epoch: for each
+    lineage-original row still alive, `snap.users[remap[orig]]` is the
+    original vector bitwise, dropped rows stay −1 forever, and
+    `client_user_ids` translates query indices back to the coordinates an
+    unremapped reference engine answers in.
+
+    Uses the exact-threshold grid so `est` is continuous: sampled grids
+    quantize est into genuine ties whose index tie-break is
+    layout-dependent, which would make the cross-layout index comparison
+    vacuous (see tests/test_pruning.py::test_reordered_parity). Queries
+    are sub-scale random directions rather than hot items for the same
+    reason: an item that ≥ 2 users rank exactly #1 clips both ests to
+    the rank floor 1.0 — a genuine tie even on the exact grid.
+    """
+    users, items = problem
+    cfg = RankTableConfig(tau=16, omega=4, s=8, threshold_mode="exact")
+    eng = ReverseKRanksEngine.build(users, items, cfg,
+                                    jax.random.PRNGKey(1))
+    dead = list(range(0, N, 3))                 # 171/512 ≈ 33% tombstoned
+    eng.delete_users(dead)
+    rec = eng.rebuild(compact_dead_above=0.2, reorder_clusters=True)
+    assert rec is not None and rec.users_compacted == len(dead)
+    snap = eng.current_snapshot()
+    remap = snap.user_remap
+    assert remap is not None and remap.shape == (N,)
+    assert np.all(remap[dead] == -1)
+    alive = np.setdiff1d(np.arange(N), dead)
+    # survivors hit every compacted coordinate exactly once, carrying
+    # their original vector through compaction AND the k-means reorder
+    assert np.array_equal(np.sort(remap[alive]), np.arange(alive.size))
+    np.testing.assert_array_equal(np.asarray(snap.users)[remap[alive]],
+                                  np.asarray(users)[alive])
+
+    # query translation: an unremapped reference (dead rows masked, never
+    # compacted) must agree index-for-index after client_user_ids
+    ref = ReverseKRanksEngine.build(users, items, cfg,
+                                    jax.random.PRNGKey(1))
+    ref.delete_users(dead)
+    qs = 0.5 * jax.random.normal(jax.random.PRNGKey(7), (4, D),
+                                 jnp.float32)
+    got = eng.query_batch(qs, k=K, c=C)
+    want = ref.query_batch(qs, k=K, c=C)
+    # per-user bounds are row-wise ops — bitwise layout-invariant
+    np.testing.assert_array_equal(
+        np.asarray(got.r_lo)[:, remap[alive]],
+        np.asarray(want.r_lo)[:, alive])
+    np.testing.assert_array_equal(
+        np.asarray(got.r_up)[:, remap[alive]],
+        np.asarray(want.r_up)[:, alive])
+    orig_ids = snap.client_user_ids(np.asarray(got.indices))
+    np.testing.assert_array_equal(orig_ids, np.asarray(want.indices))
+    np.testing.assert_array_equal(remap[orig_ids],
+                                  np.asarray(got.indices))
+    assert not np.isin(orig_ids, np.asarray(dead)).any()
+
+    # epoch 2: tombstone more rows IN CURRENT COORDINATES and compact
+    # again — the new remap must compose onto the lineage, not reset it
+    n1 = snap.n
+    dead2_cur = np.arange(0, n1, 5)
+    dead2_orig = snap.client_user_ids(dead2_cur)
+    eng.delete_users(dead2_cur.tolist())
+    rec2 = eng.rebuild(compact_dead_above=0.1, reorder_clusters=True)
+    assert rec2 is not None and rec2.users_compacted == dead2_cur.size
+    snap2 = eng.current_snapshot()
+    remap2 = snap2.user_remap
+    assert remap2.shape == (N,)                 # still lineage-original
+    assert np.all(remap2[dead] == -1)           # −1 absorbed through
+    assert np.all(remap2[dead2_orig] == -1)
+    alive2 = np.flatnonzero(remap2 >= 0)
+    assert alive2.size == N - len(dead) - dead2_cur.size
+    assert np.array_equal(np.sort(remap2[alive2]),
+                          np.arange(alive2.size))
+    np.testing.assert_array_equal(np.asarray(snap2.users)[remap2[alive2]],
+                                  np.asarray(users)[alive2])
+
+    # a rebuild that neither compacts nor reorders CARRIES the remap
+    rec3 = eng.rebuild()
+    assert rec3 is not None and rec3.users_compacted == 0
+    np.testing.assert_array_equal(eng.current_snapshot().user_remap,
+                                  remap2)
+
+
 # --------------------------------------------------- stats + maintenance
 def test_delta_stats_and_stale_weight(problem):
     eng = fresh_engine(problem)

@@ -344,6 +344,241 @@ def test_registry_and_engine_spec():
         BK.get_backend("pruned:no-such-inner")
 
 
+# --------------------------------------- geometry sketches (PR 6)
+SPECS = ("float32", "bfloat16", "int8")
+
+
+def test_cone_envelopes_tighter_than_box(problem, regimes):
+    """The cone∩box envelope is an INTERSECTION: never looser than the
+    box alone in rank space, and measurably tighter on clustered blocks
+    (the mechanism the PR 6 speedup rests on)."""
+    users, items = problem
+    _, rt, _ = regimes["non_guaranteed"]
+    box = PR.build_block_summary(users, rt, block_size=BS,
+                                 with_cones=False)
+    cone = PR.build_block_summary(users, rt, block_size=BS)
+    assert box.norm_min is None and cone.norm_min is not None
+    # μ̂ rows are unit (or exactly 0 — the vacuous cone) and every
+    # member's norm sits inside its block's band
+    mu_n = np.linalg.norm(np.asarray(cone.mu), axis=1)
+    assert np.all((np.abs(mu_n - 1.0) < 1e-5) | (mu_n == 0.0))
+    norms = np.linalg.norm(np.asarray(users, np.float32), axis=1)
+    for blk in range(cone.n_blocks):
+        rows = slice(blk * BS, min((blk + 1) * BS, N))
+        assert np.asarray(cone.norm_min)[blk, 0] <= norms[rows].min() + 1e-5
+        assert np.asarray(cone.norm_max)[blk, 0] >= norms[rows].max() - 1e-5
+    qs = off_grid_queries(items, 8)
+    lo_b, up_b = (np.asarray(a) for a in PR._envelope_bounds(box, qs))
+    lo_c, up_c = (np.asarray(a) for a in PR._envelope_bounds(cone, qs))
+    assert np.all(lo_c >= lo_b - 1e-6) and np.all(up_c <= up_b + 1e-6)
+    assert (up_c - lo_c).mean() < (up_b - lo_b).mean()
+
+
+def _assert_block_containment(summ, r_lo, r_up, lo_env, up_env, n,
+                              widen_lo=0.0, widen_up=0.0):
+    r_lo, r_up = np.asarray(r_lo), np.asarray(r_up)
+    for blk in range(summ.n_blocks):
+        rows = slice(blk * BS, min((blk + 1) * BS, n))
+        assert np.all(lo_env[blk] - widen_lo
+                      <= r_lo[rows].min(axis=0) + 1e-6)
+        assert np.all(up_env[blk] + widen_up
+                      >= r_up[rows].max(axis=0) - 1e-6)
+
+
+@pytest.mark.parametrize("spec", SPECS)
+def test_cone_band_containment_every_spec(problem, spec):
+    """Cone+band envelopes bracket every member's dequant-aware (r↓, r↑)
+    at every StorageSpec, and keep bracketing the delta-corrected bounds
+    once widened by the phase-A (n_add, n_del) terms — the PR 5 → PR 6
+    composition the docstring proof claims."""
+    from repro.core.query import user_scores_batch
+    from repro.core.rank_table import apply_delta_corrections
+    users, items = problem
+    cfg = RankTableConfig(tau=16, omega=4, s=8, storage_dtype=spec)
+    eng = ReverseKRanksEngine.build(users, items, cfg,
+                                    jax.random.PRNGKey(1),
+                                    backend="pruned:dense")
+    eng._backend.block_size = BS
+    qs = off_grid_queries(items, 8)
+
+    def member_bounds(snap, corr=None):
+        su = snap.query_users()
+        scores, slack = user_scores_batch(su, qs)
+        r_lo, r_up, est = lookup_bounds_batch(snap.rank_table, scores,
+                                              slack)
+        if corr is not None:
+            r_lo, r_up, est = apply_delta_corrections(
+                scores, r_lo, r_up, est, corr, slack)
+        return r_lo, r_up
+
+    snap = eng.current_snapshot()
+    summ = PR.build_block_summary(snap.query_users(), snap.rank_table,
+                                  block_size=BS)
+    lo_env, up_env = (np.asarray(a)
+                      for a in PR._envelope_bounds(summ, qs))
+    r_lo, r_up = member_bounds(snap)
+    _assert_block_containment(summ, r_lo, r_up, lo_env, up_env, N)
+
+    # item churn: the corrected bounds shift by at most (+n_add, −n_del),
+    # exactly the widening phase A applies to the STATIC envelopes
+    eng.insert_items(jax.random.normal(jax.random.PRNGKey(3), (12, D),
+                                       jnp.float32))
+    eng.delete_items([5, 29, 131])
+    snap2 = eng.current_snapshot()
+    assert snap2.corr is not None
+    r_lo_c, r_up_c = member_bounds(snap2, corr=snap2.corr)
+    n_add, n_del = snap2.delta.n_added, snap2.delta.n_deleted
+    assert n_add == 12 and n_del == 3
+    _assert_block_containment(summ, r_lo_c, r_up_c, lo_env, up_env, N,
+                              widen_lo=n_del, widen_up=n_add)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           spec=st.sampled_from(SPECS),
+           block_size=st.sampled_from([32, 64]),
+           scale=st.floats(0.1, 10.0))
+    def test_cone_band_containment_property(seed, spec, block_size,
+                                            scale):
+        """Random problems × specs × block sizes × data scales: the
+        cone+band envelopes must contain the true per-block (r↓, r↑)
+        range — including blocks holding near-antipodal or near-zero
+        rows, where the cone math has its branch points."""
+        from repro.core.query import user_scores_batch
+        key = jax.random.PRNGKey(seed)
+        ku, ki, kz, kq = jax.random.split(key, 4)
+        n, m, d = 192, 96, 8
+        users = scale * jax.random.normal(ku, (n, d), jnp.float32)
+        # a few exactly-zero and antipodal rows to hit the degenerate
+        # branches (vacuous cone, n↓ = 0, cosθ ≤ −cos r)
+        users = users.at[:2].set(0.0).at[2].set(-users[3])
+        items = scale * jax.random.normal(ki, (m, d), jnp.float32)
+        cfg = RankTableConfig(tau=8, omega=2, s=8, storage_dtype=spec)
+        rt = build_rank_table(users, items, cfg, kz)
+        su = cfg.storage.pack_users(users)
+        su = users if su is None else su
+        summ = PR.build_block_summary(su, rt, block_size=block_size)
+        qs = items[:4] * (1.0 + 1e-3 * jax.random.normal(
+            kq, (4, d), jnp.float32))
+        scores, slack = user_scores_batch(su, qs)
+        r_lo, r_up, _ = lookup_bounds_batch(rt, scores, slack)
+        lo_env, up_env = (np.asarray(a)
+                          for a in PR._envelope_bounds(summ, qs))
+        r_lo, r_up = np.asarray(r_lo), np.asarray(r_up)
+        for blk in range(summ.n_blocks):
+            rows = slice(blk * block_size,
+                         min((blk + 1) * block_size, n))
+            assert np.all(lo_env[blk] <= r_lo[rows].min(axis=0) + 1e-6)
+            assert np.all(up_env[blk] >= r_up[rows].max(axis=0) - 1e-6)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (optional test "
+                             "extra)")
+    def test_cone_band_containment_property():
+        pass
+
+
+# ------------------------------------------ k-means layout (PR 6)
+def shuffled_clustered(key):
+    """Clustered users whose ROW ORDER carries no structure — the layout
+    the build-time reorder exists to fix."""
+    users, items = clustered_problem(key)
+    sh = jax.random.permutation(jax.random.fold_in(key, 99), N)
+    return users[sh], items
+
+
+def test_kmeans_layout_recovers_contiguity():
+    users, items = shuffled_clustered(jax.random.PRNGKey(21))
+    perm = PR.kmeans_layout(users, block_size=BS, n_clusters=32)
+    assert perm is not None and perm.dtype == np.int64
+    assert np.array_equal(np.sort(perm), np.arange(N))      # a permutation
+    # too-small matrices refuse to reorder (nothing to tile)
+    assert PR.kmeans_layout(users[:BS], block_size=BS) is None
+    rt = build_rank_table(users, items, CFG_COARSE, jax.random.PRNGKey(1))
+    j = jnp.asarray(perm)
+    s_raw = PR.build_block_summary(users, rt, block_size=BS)
+    s_re = PR.build_block_summary(users[j], rt.take_rows(j), block_size=BS)
+    qs = off_grid_queries(items, 8)
+    lo_raw, up_raw = (np.asarray(a) for a in PR._envelope_bounds(s_raw, qs))
+    lo_re, up_re = (np.asarray(a) for a in PR._envelope_bounds(s_re, qs))
+    # shuffled blocks mix all 16 clusters → near-vacuous envelopes;
+    # reordered blocks are (near-)single-cluster → strictly tighter
+    assert (up_re - lo_re).mean() < (up_raw - lo_raw).mean()
+
+
+@pytest.mark.parametrize("inner", INNERS)
+@pytest.mark.parametrize("B", [1, 16])
+def test_reordered_parity(inner, B):
+    """build(cluster_reorder=True): bit-identical to the unpruned inner
+    on the SAME reordered layout, and remap-translated indices identical
+    to an engine that never reordered (pre-remap user coordinates).
+
+    The cross-layout check needs the exact-threshold table: per-user
+    (r↓, r↑, est) are then layout-invariant bit-for-bit (per-row ops),
+    so selections can only differ through index TIE-BREAKS — and exact-
+    mode est is continuous, so clustered Gaussian users don't tie. A
+    coarse sampled grid quantizes est into genuine ties whose index
+    tie-break legitimately differs between layouts (same reason the
+    repo's parity contract is per-layout, not cross-layout)."""
+    users, items = shuffled_clustered(jax.random.PRNGKey(23))
+    exact_cfg = RankTableConfig(tau=64, omega=4, s=M // 4,
+                                threshold_mode="exact")
+    eng = ReverseKRanksEngine.build(users, items, exact_cfg,
+                                    jax.random.PRNGKey(1),
+                                    backend=f"pruned:{inner}",
+                                    cluster_reorder=True)
+    eng._backend.block_size = BS
+    raw = ReverseKRanksEngine.build(users, items, exact_cfg,
+                                    jax.random.PRNGKey(1), backend=inner)
+    snap = eng.current_snapshot()
+    remap = snap.user_remap
+    assert remap is not None and np.array_equal(np.sort(remap),
+                                                np.arange(N))
+    ref = ReverseKRanksEngine(users=snap.users,
+                              rank_table=snap.rank_table,
+                              config=exact_cfg, backend=inner)
+    qs = off_grid_queries(items, B)
+    got = eng.query_batch(qs, k=K, c=1.0)
+    assert_selected_parity(got, ref.query_batch(qs, k=K, c=1.0))
+    np.testing.assert_array_equal(
+        snap.client_user_ids(np.asarray(got.indices)),
+        np.asarray(raw.query_batch(qs, k=K, c=1.0).indices))
+
+
+def test_reorder_then_mutate_parity():
+    """The remap keeps translating across post-reorder churn, and user
+    mutations address CURRENT coordinates (the documented contract)."""
+    users, items = shuffled_clustered(jax.random.PRNGKey(29))
+    eng = ReverseKRanksEngine.build(users, items, CFG_COARSE,
+                                    jax.random.PRNGKey(1),
+                                    backend="pruned:dense",
+                                    cluster_reorder=True)
+    eng._backend.block_size = BS
+    snap = eng.current_snapshot()
+    ref = ReverseKRanksEngine(users=snap.users,
+                              rank_table=snap.rank_table,
+                              config=CFG_COARSE, items=items,
+                              build_key=jax.random.PRNGKey(1))
+    churn(eng)
+    new = jax.random.normal(jax.random.PRNGKey(11), (16, D), jnp.float32)
+    ids = ref.insert_items(new)
+    ref.delete_items([3, 17, int(ids[1])])
+    ref.delete_users([9, N - 100])
+    qs = off_grid_queries(items, 8)
+    got = eng.query_batch(qs, k=K, c=1.0)
+    assert_selected_parity(got, ref.query_batch(qs, k=K, c=1.0))
+    # translation still goes through the (unchanged) epoch-0 remap
+    tr = eng.current_snapshot().client_user_ids(np.asarray(got.indices))
+    assert np.array_equal(np.asarray(snap.user_remap)[tr],
+                          np.asarray(got.indices))
+
+
 def test_sharded_alignment_fallback(problem):
     """Tiles straddling shard boundaries are refused up front: the
     sharded inner runs unpruned rather than mis-gathering."""
