@@ -69,7 +69,13 @@ insert delta the delta path stays ≤ 1.3× the static-index latency on the
 dense and fused backends, and its overall-ratio against the exact oracle
 on the MERGED item set stays within the configured slack of the
 rebuild's. Also reports the rebuild cadence (full Algorithm 1 + hot-swap
-wall time). Run with:
+wall time). Since PR 7 the mode ends with the compile-storm churn
+replay: the same growing-n publish sequence served through the stock
+backends (one retrace per n) and through `elastic:*` (one
+capacity-padded program per backend — `repro.core.elastic`), reporting
+per-backend compile counts, the first-query-at-new-n swap spike, and
+steady-state p50/p99; `--smoke` runs ONLY the replay at CI sizes. Run
+with:
     PYTHONPATH=src python -m benchmarks.perf_engine --updates
 """
 from __future__ import annotations
@@ -337,12 +343,136 @@ def _near_dup_cache_sweep(eng, users, items):
             "hit_rate": hit_rate, "overall_ratio": ratio}
 
 
-def updates_mode():
+def _compile_storm_replay(smoke: bool = False):
+    """PR-7 acceptance: a churn replay with GROWING n, served twice —
+    through the stock backends (whose programs are keyed on n, so every
+    new n is a retrace) and through `elastic:*` (ONE capacity-padded
+    program per backend×spec). Measures, per backend, bracketing the
+    QUERY calls only:
+
+      compiles   jit-cache growth (`elastic.compiled_program_count`) —
+                 the recompile-storm signature; must be 0 for elastic
+                 after a single warm-up across ≥ 4 distinct n values
+                 (one with a padded final tile);
+      swap ms    max first-query-at-new-n latency — the baseline pays
+                 the retrace spike here, elastic pays a dynamic-slice
+                 repad (microseconds of XLA op-cache, no XLA program);
+      p50/p99    steady-state reps at each n, first query excluded.
+
+    Hard gates (raise, so CI goes red): elastic compiles == 0, and f32
+    selected indices bitwise equal to the same-n stock backend at every
+    n — the bit-identity half of the PR-7 acceptance criteria.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import backends as BK
+    from repro.core import elastic as EL
+    from repro.core.types import RankTableConfig
+    from repro.data.pipeline import synthetic_embeddings
+
+    tile = EL.default_tile()
+    d, B, k, c, reps = 64, 16, 10, 2.0, 12
+    if smoke:
+        m = 512
+        ns = (2 * tile + 40, 2 * tile + 90, 2 * tile + 210, 4 * tile - 6)
+    else:
+        m = 2_048
+        ns = (18 * tile + 40, 20 * tile + 8, 24 * tile - 30, 32 * tile - 8)
+    cap = EL.capacity_for(ns[-1], tile)
+    assert all(EL.capacity_for(n, tile) == cap for n in ns)  # one bucket
+    cfg = RankTableConfig(tau=64, omega=8, s=32)
+    users, items = synthetic_embeddings(jax.random.PRNGKey(0), ns[-1], m, d)
+    qs = items[:B] * (1.0 + 1e-4 * jax.random.normal(
+        jax.random.PRNGKey(7), (B, d), jnp.float32))
+    # one build at max n, served at every n via take_rows — exactly what
+    # the epoch-versioned engine's hot-swap publishes
+    rt = BK.get_backend("dense").build_index(users, items, cfg,
+                                             jax.random.PRNGKey(1))
+    entry = {"config": {"d": d, "tile": tile, "capacity": cap, "B": B,
+                        "k": k, "c": c, "m": m, "reps": reps,
+                        "ns": list(ns), "smoke": smoke},
+             "backends": {}, "acceptance": {}}
+    METRICS.setdefault("updates", {})["compile_storm"] = entry
+    print(f"\ncompile-storm churn replay: growing n over {list(ns)} "
+          f"(tile={tile}, cap={cap}), d={d} B={B} k={k} reps={reps}")
+    print(f"{'backend':>14s} {'compiles':>8s} {'swap ms':>8s} "
+          f"{'p50 ms':>7s} {'p99 ms':>7s}")
+
+    indices = {}                                # (backend, n) -> selected
+    for name in ("dense", "elastic:dense", "fused", "elastic:fused"):
+        bk = BK.get_backend(name)
+
+        def q(n, bk=bk):
+            return bk.query_batch(rt.take_rows(jnp.arange(n)), users[:n],
+                                  qs, k=k, c=c)
+
+        jax.block_until_ready(q(ns[0]).indices)          # warm-up trace
+        programs0 = EL.compiled_program_count()
+        steady, swap = [], []
+        for n in ns:
+            for r in range(reps):
+                t0 = time.perf_counter()
+                res = q(n)
+                jax.block_until_ready(res.indices)
+                (swap if r == 0 else steady).append(
+                    (time.perf_counter() - t0) * 1e3)
+            indices[(name, n)] = np.asarray(res.indices)
+        compiles = EL.compiled_program_count() - programs0
+        row = {"compiles": int(compiles),
+               "max_first_query_ms": float(np.max(swap)),
+               "p50_ms": float(np.percentile(steady, 50)),
+               "p99_ms": float(np.percentile(steady, 99))}
+        entry["backends"][name] = row
+        print(f"{name:>14s} {row['compiles']:8d} "
+              f"{row['max_first_query_ms']:8.2f} {row['p50_ms']:7.2f} "
+              f"{row['p99_ms']:7.2f}")
+
+    for inner in ("dense", "fused"):
+        el = entry["backends"][f"elastic:{inner}"]
+        base = entry["backends"][inner]
+        # hard gate 1: one program serves the whole sweep
+        assert el["compiles"] == 0, (
+            f"elastic:{inner} compiled {el['compiles']} programs across "
+            f"the n-sweep — the compile-once contract is broken")
+        entry["acceptance"][f"elastic_{inner}_zero_compiles"] = True
+        # hard gate 2: f32 bit-identity at every n
+        for n in ns:
+            np.testing.assert_array_equal(
+                indices[(f"elastic:{inner}", n)], indices[(inner, n)],
+                err_msg=f"elastic:{inner} selection differs at n={n}")
+        entry["acceptance"][f"elastic_{inner}_bitwise_f32"] = True
+        # soft gate (informational in smoke, recorded in full): the swap
+        # spike — elastic's worst first-query should beat the baseline's
+        # retrace stall
+        flatter = el["max_first_query_ms"] < base["max_first_query_ms"]
+        spike = base["max_first_query_ms"] / max(el["max_first_query_ms"],
+                                                 1e-9)
+        if not smoke:
+            entry["acceptance"][f"elastic_{inner}_swap_flatter"] = flatter
+        print(f"{inner}: elastic 0 compiles + bitwise f32: PASS; swap "
+              f"spike {base['max_first_query_ms']:.2f} → "
+              f"{el['max_first_query_ms']:.2f} ms "
+              f"({spike:.1f}× flatter): "
+              f"{'PASS' if flatter else 'FAIL'}"
+              f"{' [smoke: informational]' if smoke else ''}")
+
+
+def updates_mode(smoke: bool = False):
     """Acceptance: at a 5% insert delta, delta-path B=16 latency ≤ 1.3×
     static on dense AND fused, and delta-path rank quality (overall ratio
     vs the exact oracle on the merged item set) within the slack of a
-    from-scratch rebuild's."""
+    from-scratch rebuild's. Always followed by the PR-7 compile-storm
+    churn replay (`_compile_storm_replay`); `--smoke` runs ONLY the
+    replay at CI sizes (the delta-quality sweep needs the O(nmd) oracle).
+    """
     import dataclasses as dc
+
+    if smoke:
+        _compile_storm_replay(smoke=True)
+        return
 
     import jax
     import jax.numpy as jnp
@@ -427,6 +557,8 @@ def updates_mode():
               f"{'PASS' if ok_lat else 'FAIL'} ({ratio:.2f}×); "
               f"overall-ratio within {slack:.0%} of rebuild: "
               f"{'PASS' if ok_q else 'FAIL'} ({rd:.4f} vs {rr:.4f})")
+
+    _compile_storm_replay(smoke=False)
 
 
 from benchmarks.common import zipf_clustered  # noqa: F401  (moved to
@@ -728,7 +860,7 @@ def _dump_json(path: str) -> None:
 
     payload = {
         "schema": "perf_engine/1",
-        "pr": 6,
+        "pr": 7,
         "host": {"platform": platform.platform(),
                  "python": platform.python_version()},
         "unix_time": int(time.time()),
@@ -767,7 +899,7 @@ if __name__ == "__main__":
     if args.serve:
         serve_mode()
     if args.updates:
-        updates_mode()
+        updates_mode(smoke=args.smoke)
     if args.pruned:
         pruned_mode(smoke=args.smoke, regime=args.regime)
     if args.quant:

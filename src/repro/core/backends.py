@@ -142,9 +142,13 @@ def register_backend(name: str):
 _WRAPPERS: Dict[str, Callable[..., QueryBackend]] = {}
 
 # Wrapper prefixes resolvable by lazy import, so `get_backend("cached:…")`
-# works without the caller importing repro.serve first (and core avoids a
-# hard import cycle with the serving package).
-_LAZY_WRAPPERS = {"cached": "repro.serve.cache"}
+# and `get_backend("elastic:…")` work without the caller importing the
+# wrapper's module first (and this module avoids hard import cycles with
+# them). "elastic:<inner>" is the compile-once scan-over-tiles wrapper
+# (repro.core.elastic) — note the prefix alone is not a backend name; the
+# inner defaults to dense ("elastic:" ≡ "elastic:dense").
+_LAZY_WRAPPERS = {"cached": "repro.serve.cache",
+                  "elastic": "repro.core.elastic"}
 
 
 def register_wrapper(prefix: str):

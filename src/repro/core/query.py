@@ -345,6 +345,36 @@ def lookup_bounds(rt: RankTable, uq: jax.Array
     return r_lo[:, 0], r_up[:, 0], est[:, 0]
 
 
+def tile_bounds(rt_tile: RankTable, users_tile, qs: jax.Array,
+                corr_tile: Optional[DeltaCorrection] = None
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """§4.3 step 1 (scores → dequant-aware lookup → optional delta
+    correction) for ONE fixed-size user tile — the dense unit of work of
+    the compile-once elastic scan (`repro.core.elastic`).
+
+    Exactly `user_scores_batch` ∘ `lookup_bounds_batch`
+    [∘ `apply_delta_corrections`] on a (tile, ·) row slice. Every
+    operation in that composition is ROW-LOCAL (the matmul row, the
+    per-row bucketize, the per-row correction counts touch only their own
+    user's data), which is the property that makes tiling bit-identical:
+    computing rows 0..n in ⌈n/tile⌉ fixed slices produces the same f32
+    words as one (n, ·) call. (The one n-sensitive branch in the stack,
+    `_dequant_matmul`'s blocked remainder split, takes its direct branch
+    for any tile < 2·`_DEQUANT_MM_BLOCK` — asserted in
+    tests/test_elastic.py.)
+
+    Returns (r↓, r↑, est), each USER-major (tile, B) — the orientation
+    the scan accumulates in.
+    """
+    scores, slack = user_scores_batch(users_tile, qs)
+    r_lo, r_up, est = lookup_bounds_batch(rt_tile, scores, slack)
+    if corr_tile is not None:
+        from repro.core import rank_table as rt_mod
+        r_lo, r_up, est = rt_mod.apply_delta_corrections(
+            scores, r_lo, r_up, est, corr_tile, slack=slack)
+    return r_lo, r_up, est
+
+
 @jax.jit
 def bound_ranks_batch(rt: RankTable, users, qs: jax.Array
                       ) -> tuple[jax.Array, jax.Array, jax.Array]:

@@ -289,6 +289,41 @@ def bound_ranks_batched_stored(users, qs: jax.Array, rt: RankTable, *,
         m=int(rt.m), block_n=block_n)
 
 
+def bound_ranks_tile(users, qs: jax.Array, rt: RankTable, *, m: int,
+                     block_n: int = 256
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Spec-dispatched fused step 1 for ONE fixed-size user tile — the
+    kernel unit of the compile-once elastic scan (`repro.core.elastic`).
+
+    Identical math to `bound_ranks_batched_stored`, with two contract
+    changes for use inside a traced fori_loop body:
+
+      * `m` is an explicit STATIC argument (the caller cannot concretize
+        the traced `rt.m` mid-trace, and the kernel wrappers take m
+        statically);
+      * returns USER-major (tile, B) float32 arrays, the orientation the
+        scan accumulates in.
+
+    The compile key of the underlying kernel program is
+    (tile, d, B, τ, spec) — never the served n; every tile of every
+    capacity bucket re-dispatches the same program.
+    """
+    kind = rt.spec_kind
+    if kind == "f32" and not isinstance(users, StoredUsers):
+        r_lo, r_up, est = bound_ranks_batched(
+            users, qs, rt.thresholds, rt.table, m=m, block_n=block_n)
+    elif kind == "f32":
+        raise ValueError("quantized user storage requires a quantized "
+                         "rank table (uniform StorageSpec)")
+    else:
+        rows, uscale, uslack = _stored_parts(users, rt)
+        r_lo, r_up, est = _bound_ranks_batched_stored_impl(
+            kind, rows, uscale, uslack, qs, rt.thresholds, rt.table,
+            rt.thr_scale, rt.thr_off, rt.thr_dev, rt.tab_scale,
+            rt.tab_off, m=m, block_n=block_n)
+    return r_lo.T, r_up.T, est.T
+
+
 @functools.partial(jax.jit, static_argnames=("kind", "m", "block_n"))
 def _bound_ranks_batched_pruned_stored_impl(kind: str, rows, uscale,
                                             uslack, qs, thresholds, table,

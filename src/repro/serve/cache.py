@@ -56,6 +56,24 @@ from repro.core.types import QueryResult, RankTable, StoredUsers
 _MIN_DISPATCH = 2
 
 
+def _canonical_key_row(row: np.ndarray) -> np.ndarray:
+    """One bit pattern per semantically-equal query row, for cache keying.
+
+    `row + 0.0` maps −0.0 → +0.0 (IEEE 754 addition; every other value,
+    including NaN and ±inf, is returned unchanged in VALUE) and gives a
+    fresh array we may edit; any NaN coordinate is then rewritten to the
+    single canonical qNaN pattern, collapsing payload/sign variants.
+    Scoring is payload-blind (x·NaN is NaN for every payload), so rows
+    differing only in these bits get identical QueryResults and must get
+    identical keys.
+    """
+    out = row + row.dtype.type(0.0)
+    nan = np.isnan(out)
+    if nan.any():
+        out[nan] = row.dtype.type(np.nan)
+    return out
+
+
 class CachingBackend(BK.QueryBackend):
     """Wrap an inner QueryBackend with dedupe + per-query LRU caching.
 
@@ -100,6 +118,15 @@ class CachingBackend(BK.QueryBackend):
         self.evictions = 0
 
     def _key_bytes(self, row: np.ndarray) -> bytes:
+        # Canonicalize BEFORE keying on raw bytes: f32 has distinct bit
+        # patterns for semantically identical queries (−0.0 vs +0.0, and
+        # 2^24−2 NaN payloads — any NaN coordinate makes every score NaN,
+        # so all-NaN-payload queries produce the same answer). Keying the
+        # raw pattern made such re-asks LRU misses; with quantization the
+        # −0.0 case additionally slipped through np.round (round(−0.0·s)
+        # = −0.0 → int16 0 on every path EXCEPT the amax==0/non-finite
+        # raw-bytes fallbacks, which re-exposed the raw pattern).
+        row = _canonical_key_row(row)
         if self.quantize_key_bits is None:
             return row.tobytes()
         amax = float(np.max(np.abs(row)))

@@ -83,8 +83,16 @@ def pad_block(qs: jax.Array, max_batch: int) -> jax.Array:
 
     Pad rows repeat the last real query: their columns are well-defined on
     every backend and are masked out of results by slicing. B = 0 or
-    B > max_batch are caller errors.
+    B > max_batch are caller errors, and so is max_batch < 2: the padded
+    width is the dispatch width, and a width-1 dispatch lowers as a
+    matvec with a different accumulation order — the exact case the
+    module's "dispatches never shrink below width 2" bit-identity
+    invariant (module doc) exists to rule out.
     """
+    if max_batch < 2:
+        raise ValueError(f"max_batch must be >= 2 (width-1 dispatches "
+                         f"lower as a matvec and break partial-tick "
+                         f"bit-identity); got {max_batch}")
     b = qs.shape[0]
     if not 1 <= b <= max_batch:
         raise ValueError(f"block of {b} queries does not fit max_batch="
@@ -93,6 +101,19 @@ def pad_block(qs: jax.Array, max_batch: int) -> jax.Array:
         return qs
     return jnp.concatenate(
         [qs, jnp.broadcast_to(qs[-1:], (max_batch - b, qs.shape[1]))])
+
+
+def _program_count() -> int:
+    """Compiled-program count across the query stack (0 if unavailable).
+
+    Deferred import: the counter lives with the elastic backend
+    (`repro.core.elastic.compiled_program_count`), whose module this one
+    must not import at load time (serve ↔ core layering)."""
+    try:
+        from repro.core.elastic import compiled_program_count
+        return compiled_program_count()
+    except Exception:
+        return 0
 
 
 class QueueFull(RuntimeError):
@@ -110,6 +131,15 @@ class TickStats:
     latencies_ms: Tuple[float, ...]   # per-request submit → resolve
     rejected: int = 0          # submits rejected since the previous tick
     epoch: Optional[int] = None  # pinned index epoch (snapshot engines)
+    # Query-stack XLA programs compiled DURING this tick's dispatch
+    # (repro.core.elastic.compiled_program_count delta). Nonzero only on
+    # warm-up ticks; a nonzero value on a steady-state tick is the
+    # recompile-storm signature the elastic backend exists to kill, and
+    # exactly what its p99 spike looks like to a dashboard.
+    compiles: int = 0
+    # A terminal record (batch == 0) is flushed at close() when rejects
+    # arrived after the last dispatched tick — every rejection is
+    # attributed to exactly one TickStats.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -164,8 +194,14 @@ class MicroBatcher:
 
     def __init__(self, engine, *, max_batch: int = 16,
                  max_wait_ms: float = 2.0, max_depth: Optional[int] = None):
-        if max_batch < 1:
-            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        # Width 1 is rejected, not padded around: the module's partial-tick
+        # bit-identity argument needs every dispatch ≥ 2 wide (matvec
+        # lowering caveat, module doc), and a max_batch=1 scheduler could
+        # never form a wider tick.
+        if max_batch < 2:
+            raise ValueError(f"max_batch must be >= 2 (width-1 dispatches "
+                             f"lower as a matvec and break partial-tick "
+                             f"bit-identity), got {max_batch}")
         if max_wait_ms < 0:
             raise ValueError(f"max_wait_ms must be >= 0, got {max_wait_ms}")
         if max_depth is not None and max_depth < 1:
@@ -247,14 +283,22 @@ class MicroBatcher:
         if not ticks:
             return ServeStats(0, 0, 0.0, 0.0, 0.0, 0.0, rejected=rejected,
                               depth_hwm=hwm)
-        lats = np.concatenate([t.latencies_ms for t in ticks])
+        # The terminal rejection record (batch == 0, no latencies) is an
+        # accounting tick: it carries rejects into the aggregate but must
+        # not skew the dispatch-shape means or crash the percentiles.
+        dispatched = [t for t in ticks if t.batch > 0]
+        lats = np.concatenate(
+            [np.asarray(t.latencies_ms, dtype=float) for t in ticks])
         return ServeStats(
             ticks=len(ticks),
             requests=int(lats.size),
-            mean_fill=float(np.mean([t.fill_ratio for t in ticks])),
-            mean_queue_depth=float(np.mean([t.queue_depth for t in ticks])),
-            p50_ms=float(np.percentile(lats, 50)),
-            p99_ms=float(np.percentile(lats, 99)),
+            mean_fill=(float(np.mean([t.fill_ratio for t in dispatched]))
+                       if dispatched else 0.0),
+            mean_queue_depth=(
+                float(np.mean([t.queue_depth for t in dispatched]))
+                if dispatched else 0.0),
+            p50_ms=float(np.percentile(lats, 50)) if lats.size else 0.0,
+            p99_ms=float(np.percentile(lats, 99)) if lats.size else 0.0,
             rejected=rejected,
             depth_hwm=hwm,
         )
@@ -284,6 +328,17 @@ class MicroBatcher:
                 while not self._queue and not self._stop:
                     self._cond.wait()
                 if not self._queue:         # stop requested, queue drained
+                    # Rejects that arrived AFTER the last tick was cut
+                    # would otherwise vanish (they are only read at the
+                    # next cut, and there is no next cut): flush them
+                    # into a terminal accounting record so ServeStats
+                    # and tick_log stay complete under close().
+                    tail = self._rejected_since_tick
+                    self._rejected_since_tick = 0
+                    if tail:
+                        self._ticks.append(TickStats(
+                            batch=0, queue_depth=0, fill_ratio=0.0,
+                            wait_ms=0.0, latencies_ms=(), rejected=tail))
                     return
                 head = self._queue[0]
                 deadline = head.t_submit + self.max_wait_ms / 1e3
@@ -319,6 +374,7 @@ class MicroBatcher:
         t_dispatch = time.monotonic()
         k, c = reqs[0].key
         epoch = None
+        programs_before = _program_count()
         try:
             qs = pad_block(jnp.stack([r.q for r in reqs]), self.max_batch)
             # Pin ONE index snapshot for the whole tick (see module doc):
@@ -339,6 +395,11 @@ class MicroBatcher:
             for r in reqs:
                 if not r.future.cancelled():
                     r.future.set_exception(e)
+            # This tick records no TickStats — re-credit the rejects it
+            # was carrying so the NEXT cut (or the terminal flush at
+            # close) attributes them instead of dropping them.
+            with self._cond:
+                self._rejected_since_tick += rejected
             return
         now = time.monotonic()
         tick = TickStats(
@@ -346,7 +407,8 @@ class MicroBatcher:
             fill_ratio=len(reqs) / self.max_batch,
             wait_ms=(t_dispatch - reqs[0].t_submit) * 1e3,
             latencies_ms=tuple((now - r.t_submit) * 1e3 for r in reqs),
-            rejected=rejected, epoch=epoch)
+            rejected=rejected, epoch=epoch,
+            compiles=max(0, _program_count() - programs_before))
         # Record the tick BEFORE resolving futures: a client that wakes
         # from f.result() must already see it in stats()/tick_log.
         with self._cond:

@@ -702,3 +702,88 @@ def test_sharded_mutation_shape_guards(problem):
     eng.upsert_users(jax.random.normal(jax.random.PRNGKey(99), (P, D),
                                        jnp.float32))   # mesh-multiple: ok
     assert eng.n == N + P
+
+
+# ------------------------------------- residuals across a reordering swap
+def test_residual_remapped_through_compact_reorder_lineage(problem):
+    """Satellite (PR 7): `residual_after_rebuild` composed with a
+    compacting + cluster-reordering rebuild. Items inserted MID-BUILD
+    survive the swap as a residual delta, and the re-materialized
+    correction rows must live in the PUBLISHED user layout — i.e. be
+    remapped through the composed `user_remap` (compact→reorder
+    lineage). Checked bitwise two ways: against a from-scratch engine
+    built on the published user matrix (same layout, same late inserts),
+    and row-by-row through the remap against a never-compacted reference
+    in original coordinates. Nothing exercised residuals across a
+    reordering swap before this test."""
+    users, items = problem
+    cfg = RankTableConfig(tau=16, omega=4, s=8, threshold_mode="exact")
+    eng = ReverseKRanksEngine.build(users, items, cfg,
+                                    jax.random.PRNGKey(1))
+    dead = list(range(0, N, 3))                 # ≈ 33% tombstoned
+    eng.delete_users(dead)
+
+    late_vecs = jax.random.normal(jax.random.PRNGKey(83), (8, D),
+                                  jnp.float32)
+    orig = eng._backend.build_index
+    late_ids = []
+
+    def slow_build(u, it, cfg_, key):
+        rt = orig(u, it, cfg_, key)
+        late_ids.append(eng.insert_items(late_vecs))   # lands mid-build
+        return rt
+
+    eng._backend.build_index = slow_build
+    try:
+        rec = eng.rebuild(compact_dead_above=0.2, reorder_clusters=True)
+    finally:
+        eng._backend.build_index = orig
+    assert rec is not None and rec.users_compacted == len(dead)
+    assert rec.users_reordered
+
+    snap = eng.current_snapshot()
+    remap = snap.user_remap
+    alive = np.setdiff1d(np.arange(N), dead)
+    assert snap.delta.n_added == 8              # residual survived the swap
+    assert snap.corr is not None
+    assert snap.corr.add_scores.shape[0] == alive.size   # NEW layout rows
+    assert bool(np.all(np.asarray(snap.corr.user_live)))
+    assert set(late_ids[0]) <= set(eng.live_item_ids().tolist())
+
+    # (a) from-scratch build over the PUBLISHED matrix + the same late
+    # inserts: the residual correction must be bitwise identical — both
+    # sides materialize it from the same (layout, vectors) pair
+    ref = ReverseKRanksEngine.build(jnp.asarray(snap.users), items, cfg,
+                                    jax.random.PRNGKey(1))
+    ref.insert_items(late_vecs)
+    ref_corr = ref.current_snapshot().corr
+    np.testing.assert_array_equal(np.asarray(snap.corr.add_scores),
+                                  np.asarray(ref_corr.add_scores))
+    assert int(snap.corr.selection_m()) == int(ref_corr.selection_m())
+
+    # (b) remap lineage: row remap[i] of the published correction is
+    # original user i's correction row, per a never-compacted reference
+    # holding the same residual in ORIGINAL coordinates
+    ref2 = ReverseKRanksEngine.build(users, items, cfg,
+                                     jax.random.PRNGKey(1))
+    ref2.delete_users(dead)
+    ref2.insert_items(late_vecs)
+    ref2_corr = ref2.current_snapshot().corr
+    np.testing.assert_array_equal(
+        np.asarray(snap.corr.add_scores)[remap[alive]],
+        np.asarray(ref2_corr.add_scores)[alive])
+
+    # (c) end-to-end: residual-corrected queries translate back to the
+    # reference engine's answers through client_user_ids
+    qs = 0.5 * jax.random.normal(jax.random.PRNGKey(7), (4, D),
+                                 jnp.float32)
+    got = eng.query_batch(qs, k=K, c=C)
+    want = ref2.query_batch(qs, k=K, c=C)
+    np.testing.assert_array_equal(
+        np.asarray(got.r_lo)[:, remap[alive]],
+        np.asarray(want.r_lo)[:, alive])
+    np.testing.assert_array_equal(
+        np.asarray(got.r_up)[:, remap[alive]],
+        np.asarray(want.r_up)[:, alive])
+    orig_ids = snap.client_user_ids(np.asarray(got.indices))
+    np.testing.assert_array_equal(orig_ids, np.asarray(want.indices))

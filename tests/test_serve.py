@@ -34,7 +34,7 @@ from repro.core import backends as BK
 from repro.core.engine import ReverseKRanksEngine
 from repro.core.rank_table import build_rank_table
 from repro.core.types import RankTableConfig
-from repro.serve import CachingBackend, MicroBatcher, pad_block
+from repro.serve import CachingBackend, MicroBatcher, QueueFull, pad_block
 from tests.conftest import make_problem
 
 ALL_BACKENDS = ("dense", "fused", "sharded")
@@ -306,6 +306,138 @@ def test_wrapper_backend_accepted_by_engine_build(problem):
     assert eng.backend_name == "cached:dense"
     res = eng.query(items[3], k=K, c=C)
     assert res.indices.shape == (K,)
+
+
+# -------------------------------------------- PR 7 satellite regressions
+def test_cache_key_canonicalizes_negzero_and_nan():
+    """`_key_bytes` must give one key per semantically-equal query row:
+    −0.0 vs +0.0 and differing NaN payloads score identically, so keying
+    the raw f32 bit pattern (the old behavior) made such re-asks LRU
+    misses — in both the raw and quantized key paths."""
+    raw = CachingBackend("dense")
+    quant = CachingBackend("dense", quantize_key_bits=8)
+    d = 8
+    a = np.linspace(-1.0, 1.0, d).astype(np.float32)
+    a[0] = np.float32(0.0)
+    b = a.copy()
+    b[0] = np.float32(-0.0)
+    assert a.tobytes() != b.tobytes()           # distinct raw bit patterns
+    assert raw._key_bytes(a) == raw._key_bytes(b)
+    assert quant._key_bytes(a) == quant._key_bytes(b)
+
+    n1, n2 = a.copy(), a.copy()
+    n1.view(np.uint32)[1] = np.uint32(0x7FC00001)   # qNaN, payload 1
+    n2.view(np.uint32)[1] = np.uint32(0xFFC00000)   # −qNaN, payload 0
+    assert np.isnan(n1[1]) and np.isnan(n2[1])
+    assert n1.tobytes() != n2.tobytes()
+    assert raw._key_bytes(n1) == raw._key_bytes(n2)
+    # quantized path: NaN rows take the non-finite raw-bytes fallback,
+    # which must ALSO see canonical bytes
+    assert quant._key_bytes(n1) == quant._key_bytes(n2)
+
+    # all-zero rows take the amax == 0 fallback — same requirement
+    z1 = np.zeros(d, np.float32)
+    z2 = np.full(d, -0.0, np.float32)
+    assert z1.tobytes() != z2.tobytes()
+    assert quant._key_bytes(z1) == quant._key_bytes(z2)
+
+    # canonicalization works on a copy, never the caller's row
+    keep = b.tobytes()
+    raw._key_bytes(b)
+    assert b.tobytes() == keep
+
+
+def test_cache_hits_on_negzero_requery(problem, rank_table, queries):
+    """End-to-end: re-asking a cached query with −0.0 instead of +0.0 in
+    a coordinate is an LRU HIT serving the identical result."""
+    users, _ = problem
+    cache = CachingBackend("dense")
+    q1 = np.asarray(queries[:1]).copy()
+    q1[0, 0] = np.float32(0.0)
+    q2 = q1.copy()
+    q2[0, 0] = np.float32(-0.0)
+    r1 = cache.query_batch(rank_table, users, jnp.asarray(q1), k=K, c=C)
+    assert cache.misses == 1 and cache.hits == 0
+    r2 = cache.query_batch(rank_table, users, jnp.asarray(q2), k=K, c=C)
+    assert cache.misses == 1 and cache.hits == 1
+    assert_bitwise(r2, r1)
+
+
+def test_microbatcher_rejects_width_one(problem, rank_table, queries):
+    """Boundary (satellite): max_batch=1 contradicts the module's
+    "dispatches never shrink below width 2" invariant and is rejected;
+    max_batch=2 — the boundary the invariant allows — works."""
+    eng = _engine(problem, rank_table, "dense")
+    with pytest.raises(ValueError, match="max_batch must be >= 2"):
+        MicroBatcher(eng, max_batch=1)
+    with MicroBatcher(eng, max_batch=2, max_wait_ms=5.0) as mb:
+        res = mb.submit(queries[0], K, C).result(timeout=120)
+    assert res.indices.shape == (K,)
+
+
+def test_pad_block_width_boundaries(queries):
+    """`pad_block` rejects the b = 0 / b > max_batch caller errors AND
+    the max_batch < 2 target the old check let through."""
+    with pytest.raises(ValueError, match="max_batch must be >= 2"):
+        pad_block(queries[:1], 1)
+    with pytest.raises(ValueError, match="does not fit"):
+        pad_block(queries[:0], 4)
+    with pytest.raises(ValueError, match="does not fit"):
+        pad_block(queries, 4)
+
+
+class _FailingEngine:
+    """query_batch always raises — exercises the dispatch error path."""
+
+    def query_batch(self, qs, *, k, c):
+        raise RuntimeError("induced dispatch failure")
+
+
+def test_close_under_rejection_flushes_terminal_tick():
+    """Satellite: rejects carried by a tick whose dispatch FAILS are
+    re-credited, and rejects left after the final tick are flushed into
+    a terminal TickStats at close() — no rejection ever vanishes from
+    the accounting, and stats() survives a latency-free log."""
+    mb = MicroBatcher(_FailingEngine(), max_batch=2, max_wait_ms=60_000.0,
+                      max_depth=1)
+    try:
+        fut = mb.submit(jnp.zeros(4, jnp.float32), K, C)   # queued (head)
+        with pytest.raises(QueueFull):
+            mb.submit(jnp.ones(4, jnp.float32), K, C)      # depth bound
+    finally:
+        mb.close()      # cuts the head tick; its dispatch raises
+    with pytest.raises(RuntimeError, match="induced dispatch failure"):
+        fut.result(timeout=120)
+    log = mb.tick_log
+    # the failed dispatch recorded no TickStats; the terminal record
+    # carries its re-credited rejection
+    assert len(log) == 1
+    assert log[0].batch == 0 and log[0].latencies_ms == ()
+    assert log[0].rejected == 1
+    st = mb.stats()
+    assert st.rejected == 1 and st.requests == 0 and st.ticks == 1
+    assert st.p50_ms == 0.0 and st.p99_ms == 0.0      # no percentile crash
+    assert sum(t.rejected for t in log) == st.rejected
+
+
+def test_tick_compile_counter_flat_after_warmup(problem, rank_table,
+                                                queries):
+    """Tentpole observability: `TickStats.compiles` samples the query
+    stack's compiled-program count around each dispatch. On the elastic
+    backend a steady-state tick compiles NOTHING; the warm-up tick (a
+    never-seen k makes it a guaranteed fresh trace) is where the programs
+    appear."""
+    eng = _engine(problem, rank_table, "elastic:dense")
+    k_fresh = K + 3                 # unique static k → tick 1 must trace
+    with MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=200.0) as mb:
+        for _ in range(2):
+            futs = [mb.submit(q, k_fresh, C) for q in queries]
+            for f in futs:
+                f.result(timeout=120)
+    log = mb.tick_log
+    assert len(log) == 2
+    assert log[0].compiles >= 1     # warm-up trace observed
+    assert log[1].compiles == 0     # steady state: compile-once holds
 
 
 # ------------------------------------------------- hypothesis property
