@@ -1,0 +1,117 @@
+"""Diff a perf_engine JSON artifact against committed baselines.
+
+CI runs the smoke benches on every build (`bench_smoke*.json`) while the
+repo commits full-size baselines per PR (`BENCH_PR4.json` …). This tool
+makes the comparison part of the job output: flatten every NUMERIC leaf
+under `modes`, join on the flattened key, and print a markdown table of
+relative changes — WARN-ONLY (always exits 0): smoke-vs-full and
+runner-vs-runner numbers differ legitimately, so the table is a signal
+for a human (or a future gating pass with machine-matched provenance —
+the artifacts now carry a `provenance` block for exactly that), not a
+build gate.
+
+    python -m benchmarks.bench_diff bench_smoke.json \
+        --baseline BENCH_PR7.json --baseline BENCH_PR6.json \
+        --threshold 0.10 --out summary.md
+
+Baselines merge in the order given, FIRST file wins on key collisions —
+list the newest baseline first. `--threshold` bolds rows whose relative
+change exceeds it (default 0.10). `--out` appends the table to a file
+(CI passes `$GITHUB_STEP_SUMMARY`).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, Tuple
+
+
+def flatten_modes(payload: dict) -> Dict[str, float]:
+    """Every numeric leaf under `modes`, keyed by its `/`-joined path.
+    Booleans are kept (as 0/1 acceptance flags); strings are dropped."""
+    out: Dict[str, float] = {}
+
+    def walk(node, path: str):
+        if isinstance(node, dict):
+            for key in sorted(node):
+                walk(node[key], f"{path}/{key}" if path else str(key))
+        elif isinstance(node, bool):
+            out[path] = float(node)
+        elif isinstance(node, (int, float)):
+            out[path] = float(node)
+
+    walk(payload.get("modes", {}), "")
+    return out
+
+
+def load_flat(path: str) -> Tuple[Dict[str, float], str]:
+    with open(path) as f:
+        payload = json.load(f)
+    label = f"pr{payload.get('pr', '?')}"
+    return flatten_modes(payload), label
+
+
+def diff_table(current: Dict[str, float], baseline: Dict[str, float],
+               threshold: float) -> Tuple[str, int]:
+    """Markdown table over the shared keys; returns (table, n_flagged)."""
+    shared = sorted(set(current) & set(baseline))
+    lines = ["| metric | baseline | current | Δ |",
+             "|---|---:|---:|---:|"]
+    flagged = 0
+    for key in shared:
+        b, c = baseline[key], current[key]
+        if b == c:
+            delta = "0%"
+        elif b == 0:
+            delta = "n/a"
+        else:
+            rel = (c - b) / abs(b)
+            delta = f"{rel:+.1%}"
+            if abs(rel) > threshold:
+                flagged += 1
+                delta = f"**{delta}**"
+        lines.append(f"| `{key}` | {b:.6g} | {c:.6g} | {delta} |")
+    only_c = sorted(set(current) - set(baseline))
+    for key in only_c:
+        lines.append(f"| `{key}` | — | {current[key]:.6g} | new |")
+    return "\n".join(lines), flagged
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="freshly produced perf_engine JSON")
+    ap.add_argument("--baseline", action="append", default=[],
+                    metavar="PATH", required=True,
+                    help="committed baseline(s); first wins on collisions")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="relative change that flags a row (default 0.10)")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="append the markdown report to PATH "
+                         "(e.g. $GITHUB_STEP_SUMMARY)")
+    args = ap.parse_args()
+
+    current, cur_label = load_flat(args.current)
+    baseline: Dict[str, float] = {}
+    labels = []
+    for path in args.baseline:
+        flat, label = load_flat(path)
+        labels.append(label)
+        for key, val in flat.items():
+            baseline.setdefault(key, val)      # first file wins
+
+    table, flagged = diff_table(current, baseline, args.threshold)
+    n_shared = len(set(current) & set(baseline))
+    report = (f"### Bench diff: `{args.current}` vs "
+              f"{', '.join(labels)}\n\n"
+              f"{n_shared} shared metrics, {flagged} beyond "
+              f"±{args.threshold:.0%} (warn-only — smoke sizes and CI "
+              f"runners are not the baseline machine)\n\n{table}\n")
+    print(report)
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(report + "\n")
+    return 0            # warn-only by design
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

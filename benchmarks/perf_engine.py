@@ -254,6 +254,8 @@ def serve_mode():
     print(f"{'max_wait_ms':>11s} {'offered q/s':>11s} {'achieved q/s':>12s} "
           f"{'fill':>5s} {'p50 ms':>8s} {'p99 ms':>8s}")
 
+    _obs_overhead_check(eng, items, max_batch, n_queries)
+
     for max_wait_ms in (0.5, 2.0, 8.0):
         for load_frac in (0.25, 1.0, 4.0):
             rate = capacity * load_frac
@@ -290,6 +292,53 @@ def serve_mode():
                 "p99_ms": st.p99_ms, "rejected": st.rejected}
 
     _near_dup_cache_sweep(eng, users, items)
+
+
+def _obs_overhead_check(eng, items, max_batch: int, n_queries: int):
+    """PR-8 acceptance: the telemetry layer must be ≈ free on the serving
+    path. Serve the same closed-loop burst with trace spans DISABLED (the
+    default: metrics counters only) and ENABLED (every tick/phase
+    records a span), min-of-rounds each, and report the wall-time ratio.
+    Gate: spans-on ≤ 1.03× spans-off (warn-only in --smoke CI)."""
+    import time
+
+    from repro.obs import trace
+    from repro.serve import MicroBatcher
+
+    def burst() -> float:
+        t0 = time.perf_counter()
+        with MicroBatcher(eng, max_batch=max_batch, max_wait_ms=0.5) as mb:
+            futs = [mb.submit(items[i % items.shape[0]], 10, 2.0)
+                    for i in range(n_queries)]
+            for f in futs:
+                f.result()
+        return time.perf_counter() - t0
+
+    burst()                                     # shared warm-up compile
+    rounds = 3
+    was_enabled = trace.is_enabled()
+    try:
+        # interleaved paired rounds so host-load drift hits both arms
+        t_off, t_on = float("inf"), float("inf")
+        for _ in range(rounds):
+            trace.disable()
+            t_off = min(t_off, burst())
+            trace.enable()
+            t_on = min(t_on, burst())
+    finally:
+        trace.clear()
+        if was_enabled:
+            trace.enable()
+        else:
+            trace.disable()
+    ratio = t_on / t_off
+    ok = ratio <= 1.03
+    print(f"obs overhead: spans-on {t_on*1e3:.1f} ms vs spans-off "
+          f"{t_off*1e3:.1f} ms → {ratio:.3f}x "
+          f"({'PASS' if ok else 'WARN'} ≤ 1.03x gate)")
+    METRICS.setdefault("serve", {})["obs_overhead"] = {
+        "spans_off_s": t_off, "spans_on_s": t_on, "ratio": ratio,
+        "pass_1.03x": ok}
 
 
 def _near_dup_cache_sweep(eng, users, items):
@@ -853,6 +902,42 @@ def quant_mode(smoke: bool = False):
               f"{' [smoke: informational]' if smoke else ''}")
 
 
+def _provenance() -> dict:
+    """What produced this artifact: BENCH_PR*.json files are compared
+    across machines and months, so every artifact records the software
+    stack, the accelerator, the REPRO_* env knobs that change kernel
+    behavior, and the exact source revision. Every field degrades to
+    None rather than failing the dump."""
+    import os
+    import subprocess
+
+    prov: dict = {"jax": None, "jaxlib": None, "device_kind": None,
+                  "device_count": None, "git_sha": None,
+                  "env": {k: v for k, v in sorted(os.environ.items())
+                          if k.startswith("REPRO_")}}
+    try:
+        import jax
+        prov["jax"] = jax.__version__
+        try:
+            import jaxlib
+            prov["jaxlib"] = jaxlib.__version__
+        except Exception:
+            pass
+        devs = jax.devices()
+        prov["device_kind"] = devs[0].device_kind if devs else None
+        prov["device_count"] = len(devs)
+    except Exception:
+        pass
+    try:
+        prov["git_sha"] = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or None
+    except Exception:
+        pass
+    return prov
+
+
 def _dump_json(path: str) -> None:
     import json
     import platform
@@ -860,9 +945,10 @@ def _dump_json(path: str) -> None:
 
     payload = {
         "schema": "perf_engine/1",
-        "pr": 7,
+        "pr": 8,
         "host": {"platform": platform.platform(),
                  "python": platform.python_version()},
+        "provenance": _provenance(),
         "unix_time": int(time.time()),
         "modes": METRICS,
     }
@@ -870,6 +956,18 @@ def _dump_json(path: str) -> None:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"metrics written to {path}")
+
+    # the serving registry's final state, as a sibling artifact (CI
+    # uploads it next to the bench JSON; separate file so bench diffing
+    # stays scoped to `modes`)
+    from repro.obs import registry as obs
+    mpath = (path[:-5] if path.endswith(".json") else path) + "_metrics.json"
+    with open(mpath, "w") as f:
+        json.dump({"unix_time": int(time.time()),
+                   "metrics": obs.get_default().snapshot()},
+                  f, indent=2, sort_keys=True, default=str)
+        f.write("\n")
+    print(f"registry snapshot written to {mpath}")
 
 
 if __name__ == "__main__":

@@ -50,6 +50,7 @@ import numpy as np
 from repro.core import query as query_mod
 from repro.core.types import DeltaCorrection, QueryResult, RankTable, \
     RankTableConfig, StoredUsers, take_user_rows
+from repro.obs import trace
 
 
 class QueryBackend:
@@ -424,6 +425,14 @@ class PrunedBackend(QueryBackend):
         return self.inner.query_batch(rt, users, qs, k=k, c=c, delta=delta)
 
     def query_batch(self, rt, users, qs, *, k, c, delta=None):
+        with trace.span("prune.query", batch=qs.shape[0], k=k):
+            res = self._query_impl(rt, users, qs, k=k, c=c, delta=delta)
+        # publish this batch's accounting (skip rate, kept fractions,
+        # fallback) as gauges — the live half of the §6.3 prune columns
+        self.stats.publish()
+        return res
+
+    def _query_impl(self, rt, users, qs, *, k, c, delta=None):
         P = self._pruning
         n = users.shape[0]
         bs = self.block_size
@@ -440,17 +449,20 @@ class PrunedBackend(QueryBackend):
             if (delta.n_add + delta.n_del) / m_base > self.delta_guard:
                 return self._full_scan(rt, users, qs, k=k, c=c, delta=delta,
                                        why="delta-guard", n_blocks=nb)
-        summary = self.summary_for(rt, users)
-        if delta is None:
-            keep, _ = P.phase_a(summary, qs, k=k, block_size=bs)
-        else:
-            keep, _ = P.phase_a(summary, qs, k=k, block_size=bs,
-                                n_add=float(delta.n_add),
-                                n_del=float(delta.n_del),
-                                user_live=delta.user_live, with_live=True)
-        keep_np = np.asarray(keep)                          # host sync
-        union = np.flatnonzero(keep_np.any(axis=0))
-        per_q = float(keep_np.mean())
+        with trace.span("prune.phase_a", n_blocks=nb) as sp_a:
+            summary = self.summary_for(rt, users)
+            if delta is None:
+                keep, _ = P.phase_a(summary, qs, k=k, block_size=bs)
+            else:
+                keep, _ = P.phase_a(summary, qs, k=k, block_size=bs,
+                                    n_add=float(delta.n_add),
+                                    n_del=float(delta.n_del),
+                                    user_live=delta.user_live,
+                                    with_live=True)
+            keep_np = np.asarray(keep)                      # host sync
+            union = np.flatnonzero(keep_np.any(axis=0))
+            per_q = float(keep_np.mean())
+            sp_a.set(kept_union=int(union.size))
         if union.size > self.max_union_frac * nb:
             res = self._full_scan(rt, users, qs, k=k, c=c, delta=delta,
                                   why="dense", n_blocks=nb)
@@ -460,42 +472,49 @@ class PrunedBackend(QueryBackend):
         self.stats = P.PruneStats(n_blocks=nb, kept_union=int(union.size),
                                   kept_per_query=per_q)
         min_blocks = -(-k // bs)
-        if sharded:
-            return self._sharded_query(rt, users, qs, keep_np, k=k, c=c,
-                                       delta=delta, min_blocks=min_blocks)
-        ids_np = P.bucket_blocks(union, n_blocks=nb, min_blocks=min_blocks)
-        ids = jnp.asarray(ids_np)
-        # padding tiles repeat kept ids; mark them invalid so a user is
-        # never a selection candidate twice
-        blk_valid = jnp.asarray(np.arange(ids_np.size) < max(union.size, 1))
-        stock_dense = (type(self.inner) is DenseBackend
-                       and _stock_pipeline(self.inner, DenseBackend))
-        if stock_dense and delta is None:
-            return P.pruned_query_batch(rt, users, qs, ids, blk_valid,
-                                        keep, k, c, block_size=bs)
-        if stock_dense:
-            return P.pruned_query_batch_delta(rt, users, qs, delta, ids,
-                                              blk_valid, keep, k, c,
-                                              block_size=bs)
-        # compacted step 1 on the inner backend (masked-grid kernel for
-        # the stock fused path, generic gather otherwise)
-        if (type(self.inner) is FusedBackend
-                and type(self.inner).bound_ranks is FusedBackend.bound_ranks):
-            from repro.kernels import ops as kops
-            r_lo, r_up, est = kops.bound_ranks_batched_pruned_stored(
-                users, qs, rt, ids, block_n=bs)
-        else:
-            ridx = P.row_indices(ids, bs)
-            g = jnp.minimum(ridx, n - 1)
-            sub_rt = rt.take_rows(g)
-            r_lo, r_up, est = self.inner.bound_ranks(
-                sub_rt, take_user_rows(users, g), qs)
-        if delta is None:
-            return P.finish_compacted(r_lo, r_up, est, ids, blk_valid,
-                                      keep, rt.m, k, c, n=n, block_size=bs)
-        return P.delta_finish_compacted(users, qs, delta, r_lo, r_up, est,
-                                        ids, blk_valid, keep, k, c, n=n,
-                                        block_size=bs)
+        with trace.span("prune.phase_b", kept=int(union.size),
+                        n_blocks=nb):
+            if sharded:
+                return self._sharded_query(rt, users, qs, keep_np, k=k,
+                                           c=c, delta=delta,
+                                           min_blocks=min_blocks)
+            ids_np = P.bucket_blocks(union, n_blocks=nb,
+                                     min_blocks=min_blocks)
+            ids = jnp.asarray(ids_np)
+            # padding tiles repeat kept ids; mark them invalid so a user
+            # is never a selection candidate twice
+            blk_valid = jnp.asarray(
+                np.arange(ids_np.size) < max(union.size, 1))
+            stock_dense = (type(self.inner) is DenseBackend
+                           and _stock_pipeline(self.inner, DenseBackend))
+            if stock_dense and delta is None:
+                return P.pruned_query_batch(rt, users, qs, ids, blk_valid,
+                                            keep, k, c, block_size=bs)
+            if stock_dense:
+                return P.pruned_query_batch_delta(rt, users, qs, delta,
+                                                  ids, blk_valid, keep, k,
+                                                  c, block_size=bs)
+            # compacted step 1 on the inner backend (masked-grid kernel
+            # for the stock fused path, generic gather otherwise)
+            if (type(self.inner) is FusedBackend
+                    and type(self.inner).bound_ranks
+                    is FusedBackend.bound_ranks):
+                from repro.kernels import ops as kops
+                r_lo, r_up, est = kops.bound_ranks_batched_pruned_stored(
+                    users, qs, rt, ids, block_n=bs)
+            else:
+                ridx = P.row_indices(ids, bs)
+                g = jnp.minimum(ridx, n - 1)
+                sub_rt = rt.take_rows(g)
+                r_lo, r_up, est = self.inner.bound_ranks(
+                    sub_rt, take_user_rows(users, g), qs)
+            if delta is None:
+                return P.finish_compacted(r_lo, r_up, est, ids, blk_valid,
+                                          keep, rt.m, k, c, n=n,
+                                          block_size=bs)
+            return P.delta_finish_compacted(users, qs, delta, r_lo, r_up,
+                                            est, ids, blk_valid, keep, k,
+                                            c, n=n, block_size=bs)
 
     def _sharded_query(self, rt, users, qs, keep_np, *, k, c, delta,
                        min_blocks):

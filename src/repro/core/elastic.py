@@ -98,6 +98,8 @@ from repro.core import backends as BK
 from repro.core.types import DeltaCorrection, QueryResult, RankTable, \
     StoredUsers, stored_rows
 from repro.kernels import ops as kops
+from repro.obs import registry as obs
+from repro.obs import trace
 
 # `repro.core.__init__` re-exports the `query` FUNCTION under the package
 # attribute `query`, shadowing the submodule for late importers like this
@@ -319,17 +321,25 @@ _COUNTED_MODULES = ("repro.core.query", "repro.core.rank_table",
                     "repro.core.elastic")
 
 
-def compiled_program_count() -> int:
-    """Total compiled-program count across the query stack's jit caches.
+# Memoized scan of the counted modules' jit entry points. The scheduler
+# brackets EVERY tick with compiled_program_count(); rebuilding the
+# callable list by walking vars() of five modules per call was measurable
+# at small tick sizes. The key detects both late imports (a counted
+# module appearing in sys.modules) and late jit definitions (a module
+# growing attributes); jit objects themselves are stable across calls.
+_JIT_SCAN_KEY: Optional[tuple] = None
+_JIT_SCAN: tuple = ()
 
-    Sums `_cache_size()` over every jit-wrapped callable in the counted
-    modules (deduped by identity — re-exports must not double-count).
-    Monotone in practice (jit caches only grow), so a DELTA across a
-    serving interval is "programs compiled during it": the scheduler
-    samples it around each tick (`TickStats.compiles`) and the tier-1
-    n-sweep asserts the delta is zero after the elastic warm-up."""
+
+def _jit_entries() -> tuple:
+    global _JIT_SCAN_KEY, _JIT_SCAN
+    key = tuple((name, id(mod), len(vars(mod)))
+                for name in _COUNTED_MODULES
+                if (mod := sys.modules.get(name)) is not None)
+    if key == _JIT_SCAN_KEY:
+        return _JIT_SCAN
     seen: set = set()
-    total = 0
+    entries = []
     for name in _COUNTED_MODULES:
         mod = sys.modules.get(name)
         if mod is None:
@@ -338,11 +348,38 @@ def compiled_program_count() -> int:
             size_fn = getattr(obj, "_cache_size", None)
             if callable(size_fn) and id(obj) not in seen:
                 seen.add(id(obj))
-                try:
-                    total += int(size_fn())
-                except Exception:
-                    pass
+                entries.append(size_fn)
+    _JIT_SCAN = tuple(entries)
+    _JIT_SCAN_KEY = key
+    return _JIT_SCAN
+
+
+def compiled_program_count() -> int:
+    """Total compiled-program count across the query stack's jit caches.
+
+    Sums `_cache_size()` over every jit-wrapped callable in the counted
+    modules (deduped by identity — re-exports must not double-count; the
+    module scan itself is memoized, see `_jit_entries`). Monotone in
+    practice (jit caches only grow), so a DELTA across a serving interval
+    is "programs compiled during it": the scheduler samples it around
+    each tick (`TickStats.compiles`) and the tier-1 n-sweep asserts the
+    delta is zero after the elastic warm-up. Also exported as the
+    callback gauge `query_compiled_programs` (read at scrape time)."""
+    total = 0
+    for size_fn in _jit_entries():
+        try:
+            total += int(size_fn())
+        except Exception:
+            pass
     return total
+
+
+# scrape-time callback gauge: dashboards watch the derivative — a nonzero
+# slope in steady state is the recompile-storm signature
+obs.get_default().gauge(
+    "query_compiled_programs",
+    "compiled XLA programs across the query stack's jit caches"
+).set_function(compiled_program_count)
 
 
 # ------------------------------------------------------------ the backend
@@ -407,8 +444,13 @@ class ElasticBackend(BK.QueryBackend):
         if hit is not None:
             self._padded.move_to_end(key)
             return hit[1]
-        value = (_pad_table(rt, cap), _pad_users(users, cap),
-                 None if corr is None else _pad_corr(corr, cap))
+        with trace.span("elastic.repad", n=n, cap=cap):
+            value = (_pad_table(rt, cap), _pad_users(users, cap),
+                     None if corr is None else _pad_corr(corr, cap))
+        obs.get_default().counter(
+            "elastic_repads_total",
+            "host-side capacity repads (one per new index generation)"
+        ).inc()
         # pin the keyed arrays: their id()s must not be recycled while
         # this entry can be returned for them
         self._padded[key] = ((users, rt, corr), value)
@@ -429,10 +471,12 @@ class ElasticBackend(BK.QueryBackend):
                                           delta=delta)
         rt_p, users_p, corr_p = self._padded_operands(rt, users, delta)
         m_kernel = int(rt.m) if self._mode == "fused" else -1
-        res = _elastic_query(
-            rt_p, users_p, qs, jnp.asarray(n, jnp.int32), corr_p,
-            jnp.float32(c), tile=self.tile,
-            use_kernel=self._mode == "fused", m_kernel=m_kernel, k=int(k))
+        with trace.span("elastic.dispatch", n=n, batch=qs.shape[0], k=k):
+            res = _elastic_query(
+                rt_p, users_p, qs, jnp.asarray(n, jnp.int32), corr_p,
+                jnp.float32(c), tile=self.tile,
+                use_kernel=self._mode == "fused", m_kernel=m_kernel,
+                k=int(k))
         if res.r_lo.shape[1] == n:
             return res
         # Restore the documented (B, n) shape of the two per-user fields.

@@ -84,6 +84,8 @@ import numpy as np
 
 from repro.core import rank_table as rt_mod
 from repro.core.backends import QueryBackend, available_backends, get_backend
+from repro.obs import registry as obs
+from repro.obs import trace
 from repro.core.types import QueryResult, RankTable, RankTableConfig
 from repro.index import delta as delta_mod
 
@@ -206,14 +208,25 @@ class ReverseKRanksEngine:
             raise ValueError(
                 f"query_batch expects (B, d) queries; got {qs.shape}")
         users = snap.query_users()      # spec-space storage (raw f32 on
-        if snap.corr is None:           # the exact spec — no-op path)
+        reg = obs.get_default()         # the exact spec — no-op path)
+        reg.counter("engine_queries_total",
+                    "queries executed (batch-expanded)").inc(qs.shape[0])
+        if snap.corr is None:
             # no delta kwarg on the static path: pre-PR-3 custom backends
             # with a (rt, users, qs, *, k, c) signature keep working on
             # never-mutated engines
             return self._backend.query_batch(snap.rank_table, users,
                                              qs, k=k, c=c)
-        return self._backend.query_batch(snap.rank_table, users, qs,
-                                         k=k, c=c, delta=snap.corr)
+        # delta path: bounds are corrected for the epoch's uncompacted
+        # add/delete buffers inside the backend — span it so a dashboard
+        # can see the correction share of tick time grow with churn
+        reg.counter("engine_delta_queries_total",
+                    "queries served through delta corrections"
+                    ).inc(qs.shape[0])
+        with trace.span("engine.delta_correct", batch=qs.shape[0],
+                        epoch=snap.epoch):
+            return self._backend.query_batch(snap.rank_table, users, qs,
+                                             k=k, c=c, delta=snap.corr)
 
     def query_batch(self, qs: jax.Array, k: int, c: float) -> QueryResult:
         """Batched queries: qs is (B, d); every field gains a leading B

@@ -229,6 +229,22 @@ class PruneStats:
     def skip_rate(self) -> float:
         return 1.0 - self.union_fraction
 
+    def publish(self, registry=None) -> None:
+        """Mirror this batch's accounting into metrics gauges (the live
+        half of the bench's §6.3 prune columns): `prune_skip_rate`,
+        `prune_kept_per_query`, and per-reason fallback counters."""
+        from repro.obs import registry as obs
+        reg = registry if registry is not None else obs.get_default()
+        reg.gauge("prune_skip_rate",
+                  "1 - kept-union fraction of the last pruned batch"
+                  ).set(self.skip_rate)
+        reg.gauge("prune_kept_per_query",
+                  "mean per-query kept-block fraction, last batch"
+                  ).set(self.kept_per_query)
+        reg.counter("prune_batches_total",
+                    "pruned query_batch calls",
+                    labels={"fallback": self.fallback or "none"}).inc()
+
 
 def _pad_rows(x: jax.Array, total: int, value) -> jax.Array:
     pad = total - x.shape[0]

@@ -57,6 +57,8 @@ import time
 from typing import List, Optional
 
 from repro.index.delta import DeltaStats
+from repro.obs import registry as obs
+from repro.obs import trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +135,20 @@ class MaintenanceLoop:
         self.failure_backoff_s = float(failure_backoff_s)
         self.rebuilds: List[RebuildRecord] = []
         self.failures: List[BaseException] = []
+        reg = obs.get_default()
+        self._m_rebuilds = reg.counter(
+            "maintenance_rebuilds_total", "completed rebuild + hot-swaps")
+        self._m_failures = reg.counter(
+            "maintenance_failures_total", "rebuild attempts that raised")
+        self._m_build = reg.histogram(
+            "maintenance_build_ms", "off-lock Algorithm 1 wall time")
+        self._m_swap = reg.histogram(
+            "maintenance_swap_ms", "under-lock re-base + publish time")
+        self._m_delta = reg.gauge(
+            "maintenance_delta_ratio", "|delta|/m at the last poll")
+        self._m_stale = reg.gauge(
+            "maintenance_stale_fraction",
+            "tombstoned sample weight fraction at the last poll")
         self._backoff_until = -float("inf")
         self._cond = threading.Condition()
         self._stop = False
@@ -174,18 +190,22 @@ class MaintenanceLoop:
                 # measured at rebuild-DECISION time, on the serving
                 # backend (cached per correction shape — cheap per poll)
                 cost = self.engine.correction_overhead()
-            reason = self.policy.trigger(self.engine.delta_stats(),
-                                         correction_overhead=cost)
+            stats = self.engine.delta_stats()
+            self._m_delta.set(stats.delta_ratio)
+            self._m_stale.set(stats.stale_fraction)
+            reason = self.policy.trigger(stats, correction_overhead=cost)
             if reason is None:
                 continue
             try:
-                record = self.engine.rebuild(
-                    reason=reason,
-                    compact_dead_above=self.policy.compact_dead_above,
-                    reorder_clusters=self.policy.reorder_clusters)
+                with trace.span("maintenance.rebuild", reason=reason):
+                    record = self.engine.rebuild(
+                        reason=reason,
+                        compact_dead_above=self.policy.compact_dead_above,
+                        reorder_clusters=self.policy.reorder_clusters)
             except Exception as e:      # keep maintaining; surface it
                 self.failures.append(e)
                 del self.failures[:-self._MAX_FAILURES]
+                self._m_failures.inc()
                 self._backoff_until = (time.monotonic()
                                        + self.failure_backoff_s)
                 logging.getLogger(__name__).exception(
@@ -196,3 +216,6 @@ class MaintenanceLoop:
             self._last_rebuild_t = time.monotonic()
             if record is not None:
                 self.rebuilds.append(record)
+                self._m_rebuilds.inc()
+                self._m_build.observe(record.build_s * 1e3)
+                self._m_swap.observe(record.swap_s * 1e3)

@@ -23,6 +23,37 @@ budget is exceeded — queries keep flowing through every swap (each tick
 pins one epoch; `TickStats.epoch` shows the generations served). The
 oracle pass then scores post-churn queries against the FINAL live item
 set.
+
+Telemetry (`repro.obs`)
+-----------------------
+The whole serving path publishes to the process-global metrics registry.
+To watch a live run, expose the scrape endpoint and point a browser (or
+Prometheus) at it::
+
+    python -m repro.launch.serve --n 20000 --m 8000 \
+        --backend cached:pruned:dense --update-stream \
+        --metrics-port 9100 --audit-fraction 0.05 --stats-every 200
+
+    curl localhost:9100/metrics          # Prometheus text exposition
+    curl localhost:9100/metrics.json     # same registry as JSON
+
+Key series: `serve_request_latency_ms` (histogram; p50/p99 in the JSON
+snapshot), `serve_queue_depth` / `serve_rejected_total` (back-pressure),
+`cache_hits_total` / `cache_misses_total`, `prune_skip_rate`,
+`query_compiled_programs` (flat slope in steady state = no recompile
+storm), and `maintenance_rebuilds_total` / `maintenance_build_ms`.
+
+--audit-fraction > 0 starts the online quality auditor
+(`repro.obs.audit`): that fraction of served queries is re-scored
+EXACTLY against the snapshot it was served from, on a background thread.
+Read the verdict from the gauges `audit_overall_ratio` /
+`audit_accuracy` (rolling §5 criteria over the audit window — the
+overall-ratio staying ≤ the bench-measured envelope means the c-contract
+holds in production) and `audit_bound_width` (mean certified r↑−r↓ slack
+of selected users). --metrics-json PATH dumps the final registry
+snapshot to a file; --trace turns on `repro.obs.trace` spans
+(per-tick/per-phase timing in `trace.spans()`; disabled by default —
+the hot path only pays one flag check).
 """
 from __future__ import annotations
 
@@ -40,6 +71,9 @@ from repro.data.pipeline import synthetic_embeddings
 from repro.data.mf import MFConfig, embeddings, train_mf
 from repro.data.pipeline import synthetic_ratings
 from repro.index import MaintenanceLoop, MaintenancePolicy
+from repro.obs import registry as obs
+from repro.obs import trace
+from repro.obs.audit import QualityAuditor
 from repro.serve import MicroBatcher, QueueFull
 
 
@@ -105,11 +139,33 @@ def main():
                     default=True,
                     help="score against the exact oracle "
                          "(--no-eval-exact to skip)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve /metrics (Prometheus text) and "
+                         "/metrics.json on this port (0 = ephemeral)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the final registry snapshot to PATH")
+    ap.add_argument("--audit-fraction", type=float, default=0.0,
+                    help="fraction of served queries shadow-sampled by "
+                         "the online quality auditor (exact re-scoring "
+                         "on a background thread; 0 disables)")
+    ap.add_argument("--stats-every", type=int, default=0,
+                    help="print a one-line serving stats summary every N "
+                         "submissions (0 disables)")
+    ap.add_argument("--trace", action="store_true",
+                    help="record repro.obs trace spans for every tick/"
+                         "phase (off by default; tiny per-tick cost)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.kernels and args.backend != "dense":
         ap.error("--kernels is a deprecated alias for --backend fused; "
                  f"it cannot be combined with --backend {args.backend}")
+
+    if args.trace:
+        trace.enable()
+    if args.metrics_port is not None:
+        srv = obs.start_http_server(args.metrics_port)
+        host, port = srv.server_address[:2]
+        print(f"metrics: http://{host}:{port}/metrics  (+ /metrics.json)")
 
     users, items = build_embeddings(args)
     cfg = RankTableConfig(tau=args.tau, omega=args.omega, s=args.s,
@@ -143,14 +199,26 @@ def main():
                 max_delta_ratio=args.rebuild_delta_ratio,
                 max_stale_fraction=args.rebuild_stale_frac),
             poll_ms=10.0)
+    auditor = None
+    if args.audit_fraction > 0:
+        auditor = QualityAuditor(eng, fraction=args.audit_fraction,
+                                 seed=args.seed)
     ukey = jax.random.PRNGKey(args.seed + 17)
     rng = np.random.default_rng(args.seed + 17)
     try:
         with MicroBatcher(eng, max_batch=B, max_wait_ms=args.max_wait_ms,
-                          max_depth=args.max_depth) as mb:
+                          max_depth=args.max_depth,
+                          auditor=auditor) as mb:
             t0 = time.time()
             futs, accepted = [], []
             for i, q in enumerate(qs):
+                if args.stats_every and i and i % args.stats_every == 0:
+                    line = f"  [{i}/{args.queries}] {mb.stats()}"
+                    if auditor is not None and auditor.scored:
+                        line += (f"  audit ratio "
+                                 f"{auditor.overall_ratio:.3f} "
+                                 f"acc {auditor.accuracy:.3f}")
+                    print(line)
                 if (args.update_stream and i
                         and i % args.update_every == 0):
                     # live churn: fresh items in, random live items out —
@@ -189,6 +257,21 @@ def main():
             print(f"    rebuild {r.epoch_before}->{r.epoch_after} "
                   f"[{r.reason}] build {r.build_s:.2f}s "
                   f"swap {r.swap_s*1e3:.1f}ms")
+    if auditor is not None:
+        auditor.flush(timeout=60.0)
+        print(f"  audit: {auditor.scored} scored "
+              f"(fraction {args.audit_fraction})  rolling overall-ratio "
+              f"{auditor.overall_ratio:.4f}  accuracy "
+              f"{auditor.accuracy:.4f}  bound-width "
+              f"{auditor.bound_width:.2f}")
+        auditor.close()
+    if args.metrics_json:
+        import json
+        with open(args.metrics_json, "w") as f:
+            json.dump({"unix_time": time.time(),
+                       "metrics": obs.get_default().snapshot()},
+                      f, indent=2, default=str)
+        print(f"  metrics snapshot → {args.metrics_json}")
 
     if args.eval_exact:
         # update-stream results span epochs; score POST-CHURN queries

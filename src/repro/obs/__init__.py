@@ -1,0 +1,57 @@
+"""Serving observability: metrics registry, trace spans, quality auditor.
+
+Three small, separable pieces (each its own module):
+
+  * `repro.obs.registry` — counters / gauges / fixed-bucket latency
+    histograms in a process-global `MetricsRegistry`, with Prometheus
+    text and JSON snapshot exporters and an optional scrape HTTP server.
+  * `repro.obs.trace` — nestable monotonic-clock spans in a ring buffer,
+    disabled by default (shared no-op object on the hot path), with
+    opt-in `jax.profiler` annotations.
+  * `repro.obs.audit` — the online quality auditor: shadow-samples
+    served queries and re-scores them exactly in the background,
+    publishing rolling §5 overall-ratio / accuracy gauges.
+
+`registry` and `trace` are stdlib-only and safe to import from any core
+module (no jax, no numpy, no cycles); `audit` needs numpy + the exact
+oracle and is loaded lazily on first attribute access.
+"""
+from __future__ import annotations
+
+from repro.obs import trace
+from repro.obs.registry import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    counter,
+    default_latency_bounds,
+    gauge,
+    get_default,
+    histogram,
+    set_default,
+    start_http_server,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "QualityAuditor",
+    "counter",
+    "default_latency_bounds",
+    "gauge",
+    "get_default",
+    "histogram",
+    "set_default",
+    "start_http_server",
+    "trace",
+]
+
+
+def __getattr__(name):
+    if name == "QualityAuditor":        # defer numpy/oracle import
+        from repro.obs.audit import QualityAuditor
+        return QualityAuditor
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

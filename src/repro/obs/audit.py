@@ -1,0 +1,238 @@
+"""Online quality auditor: shadow-sample served queries, re-score them
+EXACTLY in the background, publish rolling §5 quality gauges.
+
+The c-approximation contract is certified analytically (bound widening,
+PR 5/6) and measured in benches — but a production operator needs the
+live signal: "is the overall-ratio of what we are ACTUALLY serving still
+inside the envelope the bench measured?" The auditor closes that loop:
+
+  * `observe(q, result, k=, c=, snapshot=)` is called by the serving path
+    (the `MicroBatcher` calls it per resolved request when constructed
+    with `auditor=`). A seeded `random.Random` samples a configurable
+    fraction — DETERMINISTIC in observation order, so a replayed request
+    log audits the same subset (pinned in tests/test_obs.py);
+  * sampled queries are queued (bounded; overflow increments
+    `audit_dropped_total` instead of back-pressuring the serving path)
+    and re-scored on ONE background thread against the exact O(nmd)
+    oracle (`core.exact`), on the SNAPSHOT they were served from — users
+    are the f32 system of record, items the snapshot's live set, so the
+    verdict judges the answer against the state that produced it;
+  * rolling windows of per-query `overall_ratio` / `accuracy`
+    (`core.metrics`, the §5 criteria) feed gauges, alongside the mean
+    certified bound width r↑−r↓ over the SELECTED users (how much slack
+    the certification is carrying) — `audit_overall_ratio`,
+    `audit_accuracy`, `audit_bound_width` in the default registry.
+
+The audit cost is one exact scan per sampled query, on a thread the
+scheduler never waits for; `fraction` is the knob trading audit freshness
+against background CPU. Prune-skip-rate gauges are NOT published here —
+the pruned backend publishes its own (`prune_skip_rate`) per batch; the
+auditor's gauges are the quality half of the same dashboard.
+"""
+from __future__ import annotations
+
+import random
+import threading
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.obs import registry as obs
+
+
+class QualityAuditor:
+    """Shadow-sampling exact re-scorer (module docstring).
+
+    Args:
+      engine:      a `ReverseKRanksEngine` (or anything exposing
+                   `current_snapshot()` returning snapshots with
+                   `.users` / `.live_items()`).
+      fraction:    probability each observed request is audited.
+      seed:        RNG seed — sampling is deterministic in observe order.
+      window:      rolling-window length for the quality gauges.
+      max_pending: bound on queued-but-unscored samples; overflow drops
+                   (counted), never blocks the caller.
+      registry:    metrics registry (default: the process-global one).
+    """
+
+    def __init__(self, engine, *, fraction: float = 0.02, seed: int = 0,
+                 window: int = 64, max_pending: int = 128,
+                 registry: Optional[obs.MetricsRegistry] = None):
+        if not 0.0 <= fraction <= 1.0:
+            raise ValueError(f"fraction must be in [0, 1]; got {fraction}")
+        if window < 1:
+            raise ValueError(f"window must be >= 1; got {window}")
+        self.engine = engine
+        self.fraction = float(fraction)
+        self.window = int(window)
+        self.max_pending = int(max_pending)
+        self._rng = random.Random(int(seed))
+        self._ratios: deque = deque(maxlen=self.window)
+        self._accs: deque = deque(maxlen=self.window)
+        self._widths: deque = deque(maxlen=self.window)
+        self._pending: deque = deque()
+        self._cond = threading.Condition()
+        self._in_flight = 0
+        self._stop = False
+        reg = registry if registry is not None else obs.get_default()
+        self._m_observed = reg.counter(
+            "audit_observed_total", "requests offered to the auditor")
+        self._m_sampled = reg.counter(
+            "audit_sampled_total", "requests sampled for exact re-scoring")
+        self._m_scored = reg.counter(
+            "audit_scored_total", "samples re-scored against the oracle")
+        self._m_dropped = reg.counter(
+            "audit_dropped_total", "samples dropped (queue at max_pending)")
+        self._m_skipped = reg.counter(
+            "audit_skipped_total",
+            "samples skipped (snapshot lacks its item set)")
+        self._m_ratio = reg.gauge(
+            "audit_overall_ratio",
+            "rolling mean §5 overall-ratio of audited served queries")
+        self._m_acc = reg.gauge(
+            "audit_accuracy",
+            "rolling mean §5 accuracy of audited served queries")
+        self._m_width = reg.gauge(
+            "audit_bound_width",
+            "rolling mean certified r_up - r_lo over selected users")
+        self._m_backlog = reg.gauge(
+            "audit_backlog", "sampled queries awaiting exact re-scoring")
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="quality-auditor")
+        self._thread.start()
+
+    # --------------------------------------------------------- serving API
+    def observe(self, q, result, *, k: int, c: float,
+                snapshot=None) -> bool:
+        """Offer one served (query, per-query QueryResult) to the
+        auditor; returns True when it was sampled AND enqueued. Cheap on
+        the serving path: one RNG draw, one deque append. The RNG draw
+        happens for EVERY observation (sampled or not) so the audited
+        subset is a pure function of (seed, observation order)."""
+        self._m_observed.inc()
+        sampled = self._rng.random() < self.fraction
+        if not sampled:
+            return False
+        self._m_sampled.inc()
+        if snapshot is None:
+            snap_fn = getattr(self.engine, "current_snapshot", None)
+            snapshot = snap_fn() if snap_fn is not None else None
+        with self._cond:
+            if self._stop:
+                return False
+            if len(self._pending) >= self.max_pending:
+                self._m_dropped.inc()
+                return False
+            self._pending.append((np.array(q, dtype=np.float32, copy=True),
+                                  result, int(k), float(c), snapshot))
+            self._m_backlog.set(len(self._pending))
+            self._cond.notify_all()
+        return True
+
+    # ------------------------------------------------------------- results
+    @property
+    def overall_ratio(self) -> float:
+        """Rolling-window mean overall-ratio (nan before the first score)."""
+        with self._cond:
+            return (float(np.mean(self._ratios)) if self._ratios
+                    else float("nan"))
+
+    @property
+    def accuracy(self) -> float:
+        with self._cond:
+            return (float(np.mean(self._accs)) if self._accs
+                    else float("nan"))
+
+    @property
+    def bound_width(self) -> float:
+        with self._cond:
+            return (float(np.mean(self._widths)) if self._widths
+                    else float("nan"))
+
+    @property
+    def scored(self) -> int:
+        return int(self._m_scored.value)
+
+    def flush(self, timeout: Optional[float] = None) -> bool:
+        """Block until every enqueued sample has been scored (tests /
+        shutdown reporting); returns False on timeout."""
+        import time as _t
+        t_end = None if timeout is None else _t.monotonic() + timeout
+        with self._cond:
+            while self._pending or self._in_flight:
+                remaining = None if t_end is None else t_end - _t.monotonic()
+                if remaining is not None and remaining <= 0:
+                    return False
+                self._cond.wait(timeout=remaining)
+        return True
+
+    def close(self) -> None:
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+        self._thread.join()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # ------------------------------------------------------------- scoring
+    def _loop(self):
+        while True:
+            with self._cond:
+                while not self._pending and not self._stop:
+                    self._cond.wait()
+                if not self._pending:           # stop requested, drained
+                    return
+                item = self._pending.popleft()
+                self._m_backlog.set(len(self._pending))
+                self._in_flight = 1
+            try:
+                self._score(*item)
+            except Exception:
+                # an audit failure must never look like a quality pass —
+                # it is counted, and the serving path is unaffected
+                self._m_skipped.inc()
+            finally:
+                with self._cond:
+                    self._in_flight = 0
+                    self._cond.notify_all()
+
+    def _score(self, q, result, k, c, snapshot):
+        from repro.core import metrics as M
+        from repro.core.exact import exact_ranks, reverse_k_ranks
+
+        if snapshot is None:
+            self._m_skipped.inc()
+            return
+        try:
+            items = snapshot.live_items()
+        except ValueError:          # engine built without its item set
+            self._m_skipped.inc()
+            return
+        users = snapshot.users      # f32 system of record
+        truth = np.asarray(exact_ranks(users, items, q))
+        ex_idx, _ = reverse_k_ranks(users, items, q, k)
+        got = np.asarray(result.indices)
+        ratio = M.overall_ratio(got, np.asarray(ex_idx), truth)
+        acc = M.accuracy(got, np.asarray(ex_idx), truth, c)
+        # certified slack the selection is carrying: mean r_up − r_lo over
+        # the selected users (full-bounds backends; candidate-set shapes
+        # like sharded's (k·P,) index the same way)
+        width = float("nan")
+        r_lo, r_up = np.asarray(result.r_lo), np.asarray(result.r_up)
+        if r_lo.ndim == 1 and r_lo.shape[0] >= got.max() + 1:
+            width = float(np.mean(r_up[got] - r_lo[got]))
+        with self._cond:
+            self._ratios.append(ratio)
+            self._accs.append(acc)
+            if np.isfinite(width):
+                self._widths.append(width)
+            self._m_ratio.set(float(np.mean(self._ratios)))
+            self._m_acc.set(float(np.mean(self._accs)))
+            if self._widths:
+                self._m_width.set(float(np.mean(self._widths)))
+        self._m_scored.inc()

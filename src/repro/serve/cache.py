@@ -49,6 +49,8 @@ import numpy as np
 
 from repro.core import backends as BK
 from repro.core.types import QueryResult, RankTable, StoredUsers
+from repro.obs import registry as obs
+from repro.obs import trace
 
 # Never let dedupe shrink a multi-query dispatch to one column: width-1
 # matmuls lower as matvecs with a different accumulation order, which
@@ -116,6 +118,17 @@ class CachingBackend(BK.QueryBackend):
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # Registry mirrors of the instance counters (shared across every
+        # CachingBackend in the process — a fleet dashboard wants totals,
+        # the per-instance attributes stay the fine-grained surface).
+        reg = obs.get_default()
+        self._m_hits = reg.counter("cache_hits_total", "LRU lookup hits")
+        self._m_misses = reg.counter("cache_misses_total",
+                                     "LRU lookup misses")
+        self._m_evictions = reg.counter("cache_evictions_total",
+                                        "entries evicted at capacity")
+        self._m_size = reg.gauge("cache_entries",
+                                 "live entries in the LRU")
 
     def _key_bytes(self, row: np.ndarray) -> bytes:
         # Canonicalize BEFORE keying on raw bytes: f32 has distinct bit
@@ -186,25 +199,32 @@ class CachingBackend(BK.QueryBackend):
         while len(self._lru) > self.capacity:
             self._lru.popitem(last=False)
             self.evictions += 1
+            self._m_evictions.inc()
+        self._m_size.set(len(self._lru))
 
     # -------------------------------------------------------------- query
     def query_batch(self, rt, users, qs, *, k, c, delta=None):
         self._check_epoch(rt, users, delta)
         rows = np.asarray(jax.device_get(qs))
-        keys = [(self._key_bytes(rows[i]), int(k), float(c))
-                for i in range(rows.shape[0])]
+        with trace.span("cache.lookup", batch=rows.shape[0]) as sp:
+            keys = [(self._key_bytes(rows[i]), int(k), float(c))
+                    for i in range(rows.shape[0])]
 
-        per_query: list = [None] * len(keys)
-        miss_order: "OrderedDict[tuple, int]" = OrderedDict()
-        for i, key in enumerate(keys):
-            cached = self._lru.get(key)
-            if cached is not None:
-                self._lru.move_to_end(key)
-                per_query[i] = cached
-                self.hits += 1
-            else:
-                miss_order.setdefault(key, i)     # dedupe: first occurrence
-                self.misses += 1
+            per_query: list = [None] * len(keys)
+            miss_order: "OrderedDict[tuple, int]" = OrderedDict()
+            for i, key in enumerate(keys):
+                cached = self._lru.get(key)
+                if cached is not None:
+                    self._lru.move_to_end(key)
+                    per_query[i] = cached
+                    self.hits += 1
+                else:
+                    miss_order.setdefault(key, i)  # dedupe: first occurrence
+                    self.misses += 1
+            n_miss = len(keys) - sum(r is not None for r in per_query)
+            sp.set(hits=len(keys) - n_miss, misses=n_miss)
+        self._m_hits.inc(len(keys) - n_miss)
+        self._m_misses.inc(n_miss)
 
         if miss_order:
             idx = list(miss_order.values())

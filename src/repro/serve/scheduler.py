@@ -77,6 +77,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import registry as obs
+from repro.obs import trace
+
 
 def pad_block(qs: jax.Array, max_batch: int) -> jax.Array:
     """Edge-pad a (B, d) query block to the compiled (max_batch, d) shape.
@@ -193,7 +196,8 @@ class MicroBatcher:
     """
 
     def __init__(self, engine, *, max_batch: int = 16,
-                 max_wait_ms: float = 2.0, max_depth: Optional[int] = None):
+                 max_wait_ms: float = 2.0, max_depth: Optional[int] = None,
+                 auditor=None):
         # Width 1 is rejected, not padded around: the module's partial-tick
         # bit-identity argument needs every dispatch ≥ 2 wide (matvec
         # lowering caveat, module doc), and a max_batch=1 scheduler could
@@ -210,6 +214,27 @@ class MicroBatcher:
         self.max_batch = int(max_batch)
         self.max_wait_ms = float(max_wait_ms)
         self.max_depth = None if max_depth is None else int(max_depth)
+        # Optional shadow auditor (repro.obs.audit.QualityAuditor): every
+        # resolved request is OFFERED to it with the pinned snapshot; the
+        # auditor samples and re-scores off-thread, never blocking ticks.
+        self.auditor = auditor
+        reg = obs.get_default()
+        self._m_submitted = reg.counter(
+            "serve_requests_total", "requests accepted by submit()")
+        self._m_rejected = reg.counter(
+            "serve_rejected_total", "submits rejected by back-pressure")
+        self._m_ticks = reg.counter(
+            "serve_ticks_total", "dispatched micro-batch ticks")
+        self._m_compiles = reg.counter(
+            "serve_compiles_total", "XLA programs compiled during ticks")
+        self._m_depth = reg.gauge(
+            "serve_queue_depth", "queue length at the last tick cut")
+        self._m_fill = reg.gauge(
+            "serve_tick_fill_ratio", "fill ratio of the last tick")
+        self._m_latency = reg.histogram(
+            "serve_request_latency_ms", "submit → resolve latency")
+        self._m_wait = reg.histogram(
+            "serve_queue_wait_ms", "submit → dispatch queue wait")
         self._queue: Deque[_Request] = deque()
         self._cond = threading.Condition()
         self._stop = False
@@ -244,12 +269,14 @@ class MicroBatcher:
                     and len(self._queue) >= self.max_depth):
                 self._rejected_total += 1
                 self._rejected_since_tick += 1
+                self._m_rejected.inc()
                 raise QueueFull(
                     f"queue at max_depth={self.max_depth}; request rejected "
                     "(fail-fast back-pressure — retry with backoff)")
             self._queue.append(req)
             self._depth_hwm = max(self._depth_hwm, len(self._queue))
             self._cond.notify_all()
+        self._m_submitted.inc()
         return req.future
 
     def flush(self) -> None:
@@ -374,23 +401,37 @@ class MicroBatcher:
         t_dispatch = time.monotonic()
         k, c = reqs[0].key
         epoch = None
+        snap = None
         programs_before = _program_count()
+        sp = trace.span("serve.tick", batch=len(reqs), depth=depth, k=k)
         try:
-            qs = pad_block(jnp.stack([r.q for r in reqs]), self.max_batch)
-            # Pin ONE index snapshot for the whole tick (see module doc):
-            # a hot-swap concurrent with this dispatch lands between
-            # ticks, never inside one.
-            snap_fn = getattr(self.engine, "current_snapshot", None)
-            if snap_fn is not None:
-                snap = snap_fn()
-                epoch = getattr(snap, "epoch", None)
-                res = self.engine.query_batch_at(snap, qs, k=k, c=c)
-            else:
-                res = self.engine.query_batch(qs, k=k, c=c)
-            # One transfer for the whole tick: futures resolve to HOST
-            # (numpy) QueryResults — per-request row views are zero-copy,
-            # where B×fields device slices would dominate the tick cost.
-            host = jax.device_get(res)
+            with sp:
+                if trace.is_enabled():
+                    # retroactive cross-thread spans: each request's
+                    # admission → dispatch queue wait, timed from its
+                    # client-thread submit; inside the tick span so the
+                    # records attribute to the tick that served them
+                    for r in reqs:
+                        trace.event("serve.queue_wait", r.t_submit,
+                                    t_dispatch - r.t_submit, k=k)
+                qs = pad_block(jnp.stack([r.q for r in reqs]),
+                               self.max_batch)
+                # Pin ONE index snapshot for the whole tick (module doc):
+                # a hot-swap concurrent with this dispatch lands between
+                # ticks, never inside one.
+                snap_fn = getattr(self.engine, "current_snapshot", None)
+                if snap_fn is not None:
+                    snap = snap_fn()
+                    epoch = getattr(snap, "epoch", None)
+                    sp.set(epoch=epoch)
+                    res = self.engine.query_batch_at(snap, qs, k=k, c=c)
+                else:
+                    res = self.engine.query_batch(qs, k=k, c=c)
+                # One transfer for the whole tick: futures resolve to HOST
+                # (numpy) QueryResults — per-request row views are
+                # zero-copy, where B×fields device slices would dominate
+                # the tick cost.
+                host = jax.device_get(res)
         except Exception as e:                    # propagate to every caller
             for r in reqs:
                 if not r.future.cancelled():
@@ -413,7 +454,18 @@ class MicroBatcher:
         # from f.result() must already see it in stats()/tick_log.
         with self._cond:
             self._ticks.append(tick)
+        self._m_ticks.inc()
+        if tick.compiles:
+            self._m_compiles.inc(tick.compiles)
+        self._m_depth.set(depth)
+        self._m_fill.set(tick.fill_ratio)
+        for r in reqs:
+            self._m_wait.observe((t_dispatch - r.t_submit) * 1e3)
+            self._m_latency.observe((now - r.t_submit) * 1e3)
         for i, r in enumerate(reqs):              # pad rows masked out here
             per_q = jax.tree_util.tree_map(lambda x, i=i: x[i], host)
             if not r.future.cancelled():
                 r.future.set_result(per_q)
+            if self.auditor is not None:
+                self.auditor.observe(np.asarray(r.q), per_q, k=k, c=c,
+                                     snapshot=snap)

@@ -136,6 +136,28 @@ def test_scheduler_coalesces_and_reports(problem, rank_table, queries):
     assert all(len(t.latencies_ms) == t.batch for t in log)
 
 
+def test_tick_log_and_stats_return_copies(problem, rank_table, queries):
+    """`tick_log`/`stats()` hand out SNAPSHOTS: mutating the returned
+    list (or calling them concurrently with dispatches) must never
+    reach the scheduler's live `_ticks` deque."""
+    eng = _engine(problem, rank_table, "dense")
+    with MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=10.0) as mb:
+        for f in [mb.submit(q, K, C) for q in queries]:
+            f.result(timeout=120)
+        log = mb.tick_log
+        assert log is not mb._ticks
+        log.clear()                             # vandalize the copy
+        log.append("junk")
+        assert len(mb.tick_log) == 1            # live state untouched
+        st_before = mb.stats()
+        for f in [mb.submit(q, K, C) for q in queries]:
+            f.result(timeout=120)
+        # the earlier snapshots are immutable history, not live views
+        assert st_before.requests == MAX_BATCH
+        assert mb.stats().requests == 2 * MAX_BATCH
+        assert len(mb.tick_log) == 2
+
+
 def test_scheduler_separates_static_args(problem, rank_table, queries):
     """Requests with different (k, c) never share a tick (they cannot
     share a compiled batch program), yet all resolve correctly."""
