@@ -77,6 +77,18 @@ per-backend compile counts, the first-query-at-new-n swap spike, and
 steady-state p50/p99; `--smoke` runs ONLY the replay at CI sizes. Run
 with:
     PYTHONPATH=src python -m benchmarks.perf_engine --updates
+
+Part H (CPU, real execution): the PR-9 availability benchmark — the
+full serving stack (MicroBatcher with deadlines + MaintenanceLoop) run
+under a SEEDED fault plan (`repro.serve.faults`): two injected rebuild
+failures, one injected dispatch failure, random injected tick latency.
+Acceptance: ≥ 99% of non-shed, non-faulted requests resolve within
+their deadline with valid certified (r↓, r↑) bounds; ZERO futures left
+pending after close; injected failures surface as the typed
+`InjectedFault`, never as wrong answers or torn futures; and the
+maintenance loop recovers (consecutive-failures gauge back to 0)
+WITHOUT a process restart. Run with:
+    PYTHONPATH=src python -m benchmarks.perf_engine --faults
 """
 from __future__ import annotations
 
@@ -902,6 +914,171 @@ def quant_mode(smoke: bool = False):
               f"{' [smoke: informational]' if smoke else ''}")
 
 
+def faults_mode(smoke: bool = False):
+    """Acceptance (PR 9): availability under a seeded chaos plan.
+
+    The plan injects (deterministically — same seed, same failures):
+      index.rebuild   raise, max_fires=2 — the first two Algorithm-1
+                      rebuilds die; the maintenance loop must back off,
+                      keep serving the old snapshot, and recover on the
+                      third attempt (consecutive-failures gauge → 0);
+      serve.dispatch  raise, max_fires=1 after 2 ticks — one whole tick
+                      fails; its futures must resolve with the TYPED
+                      `InjectedFault`, never hang or return garbage;
+      serve.slow_tick sleep, rate 0.05, 30 ms — random dispatch latency
+                      (deadline pressure without offered load).
+
+    Hard gates (assert, so CI goes red): zero pending futures after
+    close; ≥ 99% of resolved requests within their deadline; r↓ ≤ r↑ on
+    every resolved result; both rebuild failures actually injected and
+    recovered from without a restart.
+    """
+    import time
+
+    import jax
+    import numpy as np
+    from repro.core import ReverseKRanksEngine
+    from repro.core.types import RankTableConfig
+    from repro.data.pipeline import synthetic_embeddings
+    from repro.index import MaintenanceLoop, MaintenancePolicy
+    from repro.serve import (DeadlineExceeded, MicroBatcher, QueueFull,
+                             SchedulerClosed, faults)
+
+    n, m, d = (2_048, 512, 32) if smoke else (8_192, 2_048, 64)
+    n_queries, max_batch, k, c = (256 if smoke else 1_024), 16, 10, 2.0
+    # generous budget: the gate is the ACCOUNTING (shed vs late vs
+    # faulted), not raw speed — tight-deadline shedding semantics are
+    # pinned by tests/test_faults.py; here one mid-run delta-shape
+    # retrace must not masquerade as an availability miss
+    deadline_ms = 5_000.0
+    cfg = RankTableConfig(tau=32 if smoke else 64, omega=8, s=32)
+    users, items = synthetic_embeddings(jax.random.PRNGKey(0), n, m, d)
+    eng = ReverseKRanksEngine.build(users, items, cfg, jax.random.PRNGKey(1))
+    # warm the static-path program before chaos starts: compile time is
+    # not an availability event
+    jax.block_until_ready(
+        eng.query_batch(items[:max_batch], k=k, c=c).indices)
+
+    plan = faults.install(faults.FaultPlan(seed=0, rules=[
+        faults.FaultRule("index.rebuild", mode="raise", max_fires=2),
+        faults.FaultRule("serve.dispatch", mode="raise", max_fires=1,
+                         after=2),
+        faults.FaultRule("serve.slow_tick", mode="sleep", rate=0.05,
+                         latency_ms=30.0),
+    ]))
+    print(f"chaos run: n={n:,} m={m:,} d={d} queries={n_queries} "
+          f"max_batch={max_batch} deadline={deadline_ms:.0f} ms  "
+          f"plan seed={plan.seed} sites={sorted(plan.rules)}")
+
+    _, new_items = synthetic_embeddings(jax.random.PRNGKey(5), 1,
+                                        max(1, int(0.05 * m)), d)
+    futs, done_at = [], {}
+    try:
+        with MaintenanceLoop(
+                eng, policy=MaintenancePolicy(max_delta_ratio=0.02,
+                                              min_interval_s=0.0),
+                poll_ms=10.0, failure_backoff_s=0.05,
+                max_backoff_s=0.1) as ml, \
+                MicroBatcher(eng, max_batch=max_batch,
+                             max_wait_ms=2.0) as mb:
+            waves = 8
+            for w in range(waves):
+                if w == 2:
+                    # cross the rebuild threshold MID-SERVE: the loop's
+                    # first two attempts die on the injected fault while
+                    # queries keep resolving against the old snapshot
+                    eng.insert_items(new_items)
+                    ml.wake()
+                for _ in range(n_queries // waves):
+                    i = len(futs)
+                    t_sub = time.monotonic()
+                    f = mb.submit(items[i % m], k, c,
+                                  deadline_ms=deadline_ms)
+                    # resolution time from the dispatcher's set_result,
+                    # not from when this thread gets around to .result()
+                    f.add_done_callback(
+                        lambda fut, i=i: done_at.__setitem__(
+                            i, time.monotonic()))
+                    futs.append((t_sub, f))
+                time.sleep(0.01)
+            resolved, shed, faulted, late = 0, 0, 0, 0
+            bounds_ok = True
+            for i, (t_sub, f) in enumerate(futs):
+                try:
+                    r = f.result(timeout=60)
+                except faults.InjectedFault:
+                    faulted += 1            # typed — never a torn future
+                except (QueueFull, DeadlineExceeded, SchedulerClosed):
+                    shed += 1               # typed back-pressure/deadline
+                else:
+                    resolved += 1
+                    if (done_at[i] - t_sub) * 1e3 > deadline_ms:
+                        late += 1
+                    bounds_ok &= bool(np.all(np.asarray(r.r_lo)
+                                             <= np.asarray(r.r_up)))
+            # recovery: gauge back to 0 without a restart, bounded wait
+            t0 = time.monotonic()
+            while time.monotonic() - t0 < 30.0 and not (
+                    ml.rebuilds and ml.consecutive_failures == 0):
+                ml.wake()
+                time.sleep(0.05)
+            st = mb.stats()
+            rebuilds, failures = len(ml.rebuilds), len(ml.failures)
+            consec = ml.consecutive_failures
+        pending = sum(not f.done() for _, f in futs)
+    finally:
+        faults.clear()
+
+    on_time_frac = 1.0 if resolved == 0 else 1.0 - late / resolved
+    print(f"requests: {len(futs)} submitted  {resolved} resolved  "
+          f"{shed} shed  {faulted} faulted (typed)  {late} late")
+    print(f"scheduler: {st}")
+    print(f"maintenance: {failures} injected failure(s), {rebuilds} "
+          f"rebuild(s), consecutive_failures={consec} at end")
+    print(f"fires: {({s: plan.fires[s] for s in sorted(plan.fires)})}")
+    entry = {
+        "config": {"n": n, "m": m, "d": d, "queries": n_queries,
+                   "max_batch": max_batch, "k": k, "c": c,
+                   "deadline_ms": deadline_ms, "smoke": smoke},
+        "plan": {"seed": plan.seed,
+                 "rules": {s: dataclasses.asdict(r)
+                           for s, r in plan.rules.items()},
+                 "evaluations": dict(plan.evaluations),
+                 "fires": dict(plan.fires)},
+        "requests": {"submitted": len(futs), "resolved": resolved,
+                     "shed": shed, "faulted": faulted, "late": late,
+                     "on_time_frac": on_time_frac, "p50_ms": st.p50_ms,
+                     "p99_ms": st.p99_ms},
+        "maintenance": {"rebuilds": rebuilds, "failures": failures,
+                        "consecutive_failures_end": consec},
+        "acceptance": {},
+    }
+    METRICS["faults"] = entry
+    checks = [
+        ("no_torn_futures", pending == 0,
+         f"{pending} futures still pending after close()"),
+        ("faults_surface_typed", faulted >= 1,
+         "the injected dispatch fault never surfaced as InjectedFault"),
+        ("rebuild_faults_injected", plan.fires["index.rebuild"] == 2,
+         f"expected 2 injected rebuild failures, got "
+         f"{plan.fires['index.rebuild']}"),
+        ("maintenance_recovered",
+         rebuilds >= 1 and failures >= 2 and consec == 0,
+         f"maintenance did not recover without restart (rebuilds="
+         f"{rebuilds}, failures={failures}, consecutive={consec})"),
+        ("on_time_ge_0.99", resolved > 0 and on_time_frac >= 0.99,
+         f"on-time fraction {on_time_frac:.4f} < 0.99 "
+         f"({late}/{resolved} late)"),
+        ("bounds_certified", bounds_ok,
+         "a resolved result violated r_lo <= r_up"),
+    ]
+    for name, ok, _ in checks:
+        entry["acceptance"][name] = bool(ok)
+        print(f"{name}: {'PASS' if ok else 'FAIL'}")
+    bad = [msg for _, ok, msg in checks if not ok]
+    assert not bad, "; ".join(bad)
+
+
 def _provenance() -> dict:
     """What produced this artifact: BENCH_PR*.json files are compared
     across machines and months, so every artifact records the software
@@ -945,7 +1122,7 @@ def _dump_json(path: str) -> None:
 
     payload = {
         "schema": "perf_engine/1",
-        "pr": 8,
+        "pr": 9,
         "host": {"platform": platform.platform(),
                  "python": platform.python_version()},
         "provenance": _provenance(),
@@ -979,6 +1156,8 @@ if __name__ == "__main__":
     ap.add_argument("--updates", action="store_true")
     ap.add_argument("--pruned", action="store_true")
     ap.add_argument("--quant", action="store_true")
+    ap.add_argument("--faults", action="store_true",
+                    help="PR-9 availability run under a seeded fault plan")
     ap.add_argument("--regime", choices=("clustered", "iid", "mid"),
                     default="clustered",
                     help="user-distribution regime for --pruned "
@@ -1002,5 +1181,7 @@ if __name__ == "__main__":
         pruned_mode(smoke=args.smoke, regime=args.regime)
     if args.quant:
         quant_mode(smoke=args.smoke)
+    if args.faults:
+        faults_mode(smoke=args.smoke)
     if args.json:
         _dump_json(args.json)

@@ -76,6 +76,15 @@ class QueryBackend:
 
     def __init__(self, mesh=None):
         self.mesh = mesh
+        self._degrade_level = 0
+
+    def degrade(self, level: int) -> None:
+        """Degrade-ladder hook (repro.serve.degrade): rung `level` stays
+        in effect until the next call (0 = normal serving). The base
+        backend has no cheaper mode, so the default just records the
+        level; backends with a latency/quality knob override (e.g. the
+        pruned backend's dense fallback) and wrappers delegate inward."""
+        self._degrade_level = int(level)
 
     def bound_ranks(self, rt: RankTable, users: jax.Array, qs: jax.Array
                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -395,6 +404,15 @@ class PrunedBackend(QueryBackend):
     def check_users_shape(self, n):
         return self.inner.check_users_shape(n)
 
+    def degrade(self, level):
+        """Rung ≥ 1 disables the `max_union_frac` dense fallback: an
+        adversarially non-pruning query pays the certified two-phase
+        gather over its kept blocks instead of a full-scan latency spike
+        (the bimodal p99 that breaks deadline SLOs under load). Bounds
+        and results are unchanged — this rung has no contract cost."""
+        super().degrade(level)
+        self.inner.degrade(level)
+
     def summary_for(self, rt: RankTable, users: jax.Array):
         """The `BlockSummary` for this index generation (identity-cached;
         a mutation or rebuild swaps the arrays and lazily regenerates)."""
@@ -463,7 +481,12 @@ class PrunedBackend(QueryBackend):
             union = np.flatnonzero(keep_np.any(axis=0))
             per_q = float(keep_np.mean())
             sp_a.set(kept_union=int(union.size))
-        if union.size > self.max_union_frac * nb:
+        # degrade rung ≥ 1 lifts the union cap to 1.0 — the fallback is
+        # unreachable (union ≤ nb) and every query stays on the bounded
+        # pruned path (see degrade())
+        union_cap = (1.0 if self._degrade_level >= 1
+                     else self.max_union_frac)
+        if union.size > union_cap * nb:
             res = self._full_scan(rt, users, qs, k=k, c=c, delta=delta,
                                   why="dense", n_blocks=nb)
             self.stats.kept_union = int(union.size)

@@ -432,6 +432,11 @@ class ElasticBackend(BK.QueryBackend):
     def check_users_shape(self, n):
         return self.inner.check_users_shape(n)
 
+    def degrade(self, level):
+        """Ladder levels act on the wrapped execution backend."""
+        super().degrade(level)
+        self.inner.degrade(level)
+
     def _padded_operands(self, rt, users, corr):
         n = users.shape[0]
         cap = capacity_for(n, self.tile)

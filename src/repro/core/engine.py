@@ -74,6 +74,7 @@ every stale-epoch entry at the same instant.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import threading
 import time
 from typing import Any, Optional, Sequence, Union
@@ -93,6 +94,7 @@ from repro.index import delta as delta_mod
 from repro.index.maintenance import RebuildRecord
 from repro.index.snapshot import IndexSnapshot, SnapshotManager, \
     compose_remaps
+from repro.serve import faults
 
 
 def _cluster_layout(users):
@@ -145,6 +147,7 @@ class ReverseKRanksEngine:
         self._rebuild_lock = threading.Lock()   # one rebuild in flight
         self._next_item_id = m_base
         self._corr_cost: dict = {}              # measured delta-cost cache
+        self._persister = None                  # attach_persister wires it
 
     @classmethod
     def build(cls, users: jax.Array, items: jax.Array, cfg: RankTableConfig,
@@ -182,6 +185,64 @@ class ReverseKRanksEngine:
                    else backend,
                    mesh=None if isinstance(backend, QueryBackend) else mesh,
                    items=items, build_key=key, user_remap=remap)
+
+    @classmethod
+    def restore(cls, path, *, backend: Union[str, QueryBackend] = "dense",
+                mesh: Any = None) -> "ReverseKRanksEngine":
+        """Recover an engine from a persistence directory (PR 9).
+
+        Loads the newest checksum-valid spill (`repro.index.persist`),
+        reconstructs its snapshot — everything not stored re-derives
+        deterministically from (items, item_ids, config, build_key) —
+        then replays the spill's WAL through the NORMAL mutation API, so
+        the recovered engine is BITWISE the engine that was running at
+        the durable point (same epochs, same rank-table bytes, same
+        certified bounds). Raises `repro.index.persist.PersistError` when
+        no durable point is trustworthy (rebuild from the master copy
+        instead of serving wrong answers).
+
+        Durability is NOT re-armed automatically: call
+        `attach_persister(IndexPersister(path))` on the result to spill a
+        fresh baseline and resume WAL logging.
+        """
+        from repro.index import persist as persist_mod
+        state = persist_mod.load_latest(path)
+        snap = state.snapshot
+        eng = cls(users=snap.users, rank_table=snap.rank_table,
+                  config=state.config, backend=backend, mesh=mesh)
+        # graft the durable lineage over the constructor's fresh epoch-0
+        # state: the snapshot chain, the stable-id counter, and the base
+        # inputs the mutation API re-derives from
+        eng.items = snap.base.items
+        eng.build_key = state.build_key
+        eng.user_remap = snap.user_remap
+        eng._snapshots = SnapshotManager(snap)
+        eng._next_item_id = state.next_item_id
+        eng.users = snap.users
+        eng.rank_table = snap.rank_table
+        for rec in state.wal:
+            persist_mod.replay_record(eng, rec)
+        return eng
+
+    def attach_persister(self, persister) -> None:
+        """Arm crash-safety: spill the CURRENT snapshot as the baseline
+        durable point, then WAL-log every subsequent mutation; each
+        rebuild spills the new epoch and rotates the WAL. Requires the
+        base item set (engines from `build(...)`)."""
+        with self._lock:
+            snap = self._require_base("attach_persister")
+            persister.spill(snap, next_item_id=self._next_item_id,
+                            build_key=self.build_key)
+            self._persister = persister
+
+    def _wal_append(self, op: str, **arrays) -> None:
+        """Record one mutation (caller holds the mutation lock, AFTER its
+        `_publish` — the publish defines the op's observable effect; the
+        WAL merely makes it durable). None-valued arrays are omitted."""
+        if self._persister is None:
+            return
+        self._persister.append(op, {k: v for k, v in arrays.items()
+                                    if v is not None})
 
     @property
     def backend_name(self) -> str:
@@ -318,6 +379,7 @@ class ReverseKRanksEngine:
                             dtype=np.int64)
             self._next_item_id += vectors.shape[0]
             self._publish(snap, delta=snap.delta.with_inserted(ids, vectors))
+            self._wal_append("insert_items", vectors=vectors, ids=ids)
         return ids
 
     def delete_items(self, ids: Sequence[int]) -> None:
@@ -328,6 +390,8 @@ class ReverseKRanksEngine:
             snap = self._require_base("delete_items")
             self._publish(snap,
                           delta=snap.delta.with_deleted(ids, snap.base))
+            self._wal_append("delete_items",
+                             ids=np.asarray(list(ids), np.int64))
 
     def upsert_users(self, vectors: jax.Array,
                      indices: Optional[Sequence[int]] = None) -> np.ndarray:
@@ -377,6 +441,8 @@ class ReverseKRanksEngine:
                 delta=snap.delta.with_users(touched=tuple(int(i)
                                                           for i in idx),
                                             n_users=users_new.shape[0]))
+            self._wal_append("upsert_users", vectors=vectors,
+                             indices=None if indices is None else idx)
         return idx
 
     def delete_users(self, indices: Sequence[int]) -> None:
@@ -390,6 +456,7 @@ class ReverseKRanksEngine:
                 raise IndexError(f"user indices out of range [0, {n})")
             self._publish(snap, delta=snap.delta.with_users(
                 dead=tuple(int(i) for i in idx)))
+            self._wal_append("delete_users", indices=idx)
 
     def _user_rows(self, vectors: jax.Array, base: delta_mod.BaseIndex):
         cfg = self.config
@@ -492,6 +559,10 @@ class ReverseKRanksEngine:
         if not self._rebuild_lock.acquire(blocking=False):
             return None
         try:
+            if faults.ACTIVE is not None:
+                # chaos site: a failing Algorithm-1 build — exercises the
+                # maintenance loop's backoff + recovery accounting
+                faults.fire("index.rebuild")
             with self._lock:
                 snap = self._require_base("rebuild")
             stats = snap.delta.stats(snap.base)
@@ -585,6 +656,20 @@ class ReverseKRanksEngine:
                     now, users=users_now, rank_table=rt_work,
                     delta=delta_new, base=base_new,
                     user_remap=compose_remaps(now.user_remap, remap))
+                if self._persister is not None:
+                    # INSIDE the locked swap: the spill supersedes the
+                    # old WAL and rotation opens the new one before any
+                    # post-swap mutation can append — no mutation can
+                    # fall between the durable points. A spill failure
+                    # degrades durability, never the rebuild.
+                    try:
+                        self._persister.spill(
+                            swapped, next_item_id=self._next_item_id,
+                            build_key=self.build_key)
+                    except OSError:
+                        logging.getLogger(__name__).exception(
+                            "rebuild spill failed; durability stays at "
+                            "the previous spill + WAL")
             # epoch captured from the published snapshot, not self.epoch:
             # a mutation racing in after the lock releases must not be
             # misattributed to this swap

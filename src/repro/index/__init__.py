@@ -15,6 +15,11 @@ serves while it changes (see ROADMAP "Dynamic index maintenance"):
                 rebuild (on the engine's configured backend) when the
                 delta ratio or the stale-sample error budget is
                 exceeded, hot-swapped without pausing serving.
+  persist     — `IndexPersister` (PR 9): crash-safe durability — atomic
+                checksummed snapshot spills per rebuild epoch + an
+                append-only mutation WAL; `ReverseKRanksEngine.restore`
+                recovers bitwise-equal state, `PersistError` means
+                rebuild from the master copy.
 
 The mutation API itself lives on `ReverseKRanksEngine`
 (insert_items / delete_items / upsert_users / delete_users / rebuild).
@@ -23,10 +28,13 @@ from repro.index.delta import (BaseIndex, DeltaState, DeltaStats,
                                build_correction, residual_after_rebuild)
 from repro.index.maintenance import (MaintenanceLoop, MaintenancePolicy,
                                      RebuildRecord)
+from repro.index.persist import (IndexPersister, PersistError, WalRecord,
+                                 load_latest)
 from repro.index.snapshot import IndexSnapshot, SnapshotManager
 
 __all__ = [
     "BaseIndex", "DeltaState", "DeltaStats", "build_correction",
     "residual_after_rebuild", "IndexSnapshot", "SnapshotManager",
     "MaintenanceLoop", "MaintenancePolicy", "RebuildRecord",
+    "IndexPersister", "PersistError", "WalRecord", "load_latest",
 ]

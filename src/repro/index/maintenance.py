@@ -52,13 +52,19 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import random
 import threading
 import time
-from typing import List, Optional
+from typing import List, Optional, TYPE_CHECKING
 
-from repro.index.delta import DeltaStats
+if TYPE_CHECKING:      # annotation-only: a runtime import would close the
+    # repro.core.engine → maintenance → delta → repro.core cycle and break
+    # cold `import repro.index`
+    from repro.index.delta import DeltaStats
+
 from repro.obs import registry as obs
 from repro.obs import trace
+from repro.serve import faults
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,21 +126,37 @@ class MaintenanceLoop:
     serves an ever-growing delta with zero indication. Exceptions are
     caught, logged, appended to `failures` (bounded: last
     `_MAX_FAILURES`), and the loop keeps polling; after a failure the
-    next attempt waits `failure_backoff_s` (a persistently failing build
-    must not be retried every poll tick — each doomed attempt is a full
-    Algorithm 1 pass).
+    next attempt waits a CAPPED EXPONENTIAL backoff with jitter —
+    `failure_backoff_s · 2^(consecutive−1)` up to `max_backoff_s`, ±25%
+    seeded jitter (a persistently failing build must not be retried every
+    poll tick — each doomed attempt is a full Algorithm 1 pass — and a
+    fleet of loops must not retry in lockstep). `consecutive_failures`
+    resets to 0 on the first success and is exported as the
+    `maintenance_consecutive_failures` gauge alongside
+    `maintenance_last_failure_unixtime`; recovery therefore reads as the
+    gauge returning to 0 WITHOUT a process restart.
+
+    Liveness: the `maintenance_thread_alive` callback gauge reads
+    `thread.is_alive()` at scrape time — the watchdog surface for the
+    one failure mode the in-loop handling cannot report on its own
+    (an exception OUTSIDE the rebuild try/except killing the thread;
+    `_run` also logs that traceback once before the thread dies).
     """
 
     _MAX_FAILURES = 32
 
     def __init__(self, engine, *, policy: MaintenancePolicy = None,
-                 poll_ms: float = 50.0, failure_backoff_s: float = 5.0):
+                 poll_ms: float = 50.0, failure_backoff_s: float = 5.0,
+                 max_backoff_s: float = 60.0, backoff_seed: int = 0):
         self.engine = engine
         self.policy = policy if policy is not None else MaintenancePolicy()
         self.poll_ms = float(poll_ms)
         self.failure_backoff_s = float(failure_backoff_s)
+        self.max_backoff_s = float(max_backoff_s)
         self.rebuilds: List[RebuildRecord] = []
         self.failures: List[BaseException] = []
+        self.consecutive_failures = 0
+        self._jitter = random.Random(backoff_seed)
         reg = obs.get_default()
         self._m_rebuilds = reg.counter(
             "maintenance_rebuilds_total", "completed rebuild + hot-swaps")
@@ -149,12 +171,25 @@ class MaintenanceLoop:
         self._m_stale = reg.gauge(
             "maintenance_stale_fraction",
             "tombstoned sample weight fraction at the last poll")
+        self._m_consec = reg.gauge(
+            "maintenance_consecutive_failures",
+            "rebuild failures since the last success (0 = healthy)")
+        self._m_last_fail = reg.gauge(
+            "maintenance_last_failure_unixtime",
+            "wall-clock time of the last rebuild failure (0 = never)")
         self._backoff_until = -float("inf")
         self._cond = threading.Condition()
         self._stop = False
         self._last_rebuild_t = -float("inf")
-        self._thread = threading.Thread(target=self._loop, daemon=True,
+        self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="index-maintenance")
+        # Liveness at scrape time, not at set time: a dead thread cannot
+        # lie through a callback gauge the way it can through a stale
+        # last-written value.
+        self._m_alive = reg.gauge(
+            "maintenance_thread_alive",
+            "1 while the maintenance loop thread is running",
+            set_fn=self._thread.is_alive)
         self._thread.start()
 
     def wake(self) -> None:
@@ -173,6 +208,20 @@ class MaintenanceLoop:
     def __exit__(self, *exc):
         self.close()
 
+    def _run(self):
+        """Thread body: `_loop` + last-resort visibility. An exception
+        escaping `_loop` (i.e. raised OUTSIDE the rebuild try/except)
+        kills the thread — that is unavoidable, but it must be LOUD: log
+        the traceback once, then die so the `maintenance_thread_alive`
+        callback gauge flips to 0 at the next scrape."""
+        try:
+            self._loop()
+        except Exception:
+            logging.getLogger(__name__).exception(
+                "maintenance loop thread died; rebuilds have STOPPED "
+                "(maintenance_thread_alive gauge is now 0)")
+            raise
+
     def _loop(self):
         while True:
             with self._cond:
@@ -181,6 +230,11 @@ class MaintenanceLoop:
                 self._cond.wait(timeout=self.poll_ms / 1e3)
                 if self._stop:
                     return
+            if faults.ACTIVE is not None:
+                # chaos site OUTSIDE the rebuild try/except: a raise here
+                # kills the thread, which is exactly what the liveness-
+                # gauge regression test provokes
+                faults.fire("maintenance.loop")
             now = time.monotonic()
             if (now - self._last_rebuild_t < self.policy.min_interval_s
                     or now < self._backoff_until):
@@ -205,16 +259,34 @@ class MaintenanceLoop:
             except Exception as e:      # keep maintaining; surface it
                 self.failures.append(e)
                 del self.failures[:-self._MAX_FAILURES]
+                self.consecutive_failures += 1
                 self._m_failures.inc()
-                self._backoff_until = (time.monotonic()
-                                       + self.failure_backoff_s)
+                self._m_consec.set(self.consecutive_failures)
+                self._m_last_fail.set(time.time())
+                # capped exponential backoff with ±25% jitter: doubles
+                # per consecutive failure so a wedged build is not
+                # retried at poll cadence, capped so recovery after a
+                # long outage is not deferred for minutes, jittered so
+                # replicas sharing a failing dependency do not retry in
+                # lockstep
+                backoff = min(
+                    self.failure_backoff_s
+                    * 2.0 ** (self.consecutive_failures - 1),
+                    self.max_backoff_s)
+                backoff *= 1.0 + 0.25 * (2.0 * self._jitter.random() - 1.0)
+                self._backoff_until = time.monotonic() + backoff
                 logging.getLogger(__name__).exception(
-                    "index rebuild failed (%s); maintenance loop "
-                    "continues after %.1fs backoff", reason,
-                    self.failure_backoff_s)
+                    "index rebuild failed (%s; failure #%d in a row); "
+                    "maintenance loop continues after %.1fs backoff",
+                    reason, self.consecutive_failures, backoff)
                 record = None
             self._last_rebuild_t = time.monotonic()
             if record is not None:
+                if self.consecutive_failures:
+                    # recovery: the health gauge returns to 0 without a
+                    # process restart (the PR 9 acceptance criterion)
+                    self.consecutive_failures = 0
+                    self._m_consec.set(0)
                 self.rebuilds.append(record)
                 self._m_rebuilds.inc()
                 self._m_build.observe(record.build_s * 1e3)

@@ -1,0 +1,520 @@
+"""Crash-safe index persistence: atomic snapshot spills + a delta WAL.
+
+The engine's durable state is (a) the big, rarely-changing build output
+and (b) a small, hot stream of mutations. Persisting them the same way
+would either fsync a multi-GB table per insert or leave rebuilds
+unrecoverable — so this module splits them:
+
+  spill  — one ATOMIC file per published rebuild epoch
+           (``spill-<epoch:016d>``): write to a temp name, flush, fsync,
+           ``os.replace`` — a reader can never observe a half-written
+           spill under its final name. Content is CRC-framed, so a spill
+           torn by the filesystem anyway (crash between rename and data
+           sync on a non-ordered fs, bit rot, an injected
+           ``persist.spill`` fault) is DETECTED and skipped, never
+           loaded. Spills are spec-aware: rank-table arrays are stored
+           exactly as packed (int8 tables spill packed, bf16 as raw
+           bits), and everything re-derivable is NOT stored — samples /
+           weights re-derive from (items, item_ids, config, build_key)
+           via `BaseIndex.create`, spec-space user storage from
+           `pack_users`, the delta correction from `build_correction`;
+           all deterministic, so a restore is bitwise the state that was
+           spilled.
+  WAL    — an append-only log per spill epoch (``wal-<epoch:016d>.log``)
+           of the four mutation ops (insert_items / delete_items /
+           upsert_users / delete_users), one CRC-framed record each,
+           fsynced per append. Recovery replays the WAL through the
+           NORMAL mutation API, so every invariant of the live path
+           (row re-estimation, correction rebuild, epoch bump) holds on
+           the recovered engine by construction; inserted ids are
+           asserted against the recorded ones — a divergence is a
+           `PersistError`, never a silently different index.
+
+Durability model: the durable point is (newest valid spill) + (its WAL
+prefix up to the first torn record). A torn WAL TAIL — the expected
+artifact of crashing mid-append — truncates to the last complete record;
+a corrupt INTERIOR record (a later record is intact while an earlier one
+is not) means the log cannot be trusted at all and recovery raises
+`PersistError` — rebuild from the master copy rather than serve wrong
+answers. A torn NEWEST spill falls back to the previous spill epoch (its
+own WAL is still on disk), trading recency for validity; `keep_spills`
+bounds how many durable points are retained.
+
+A WAL WRITE failure at runtime (disk full, injected ``persist.wal_write``
+fault) must not take serving down: the error is logged once, counted
+(``persist_wal_errors_total``), and the WAL is disabled until the next
+spill re-baselines durability — the engine keeps serving with
+durability degraded to the last spill, never wedged.
+
+Fault sites (`repro.serve.faults`): ``persist.spill`` (mode="torn"
+truncates the spill mid-write) and ``persist.wal_write`` (append raises)
+— both evaluated through `should_fire`, one flag check when disabled.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+import logging
+import os
+import re
+import threading
+import zlib
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+from repro.core.types import RankTable, RankTableConfig
+from repro.index import delta as delta_mod
+from repro.index.snapshot import IndexSnapshot
+from repro.obs import registry as obs
+from repro.serve import faults
+
+log = logging.getLogger(__name__)
+
+SPILL_MAGIC = b"RKRSPIL1"       # 8 bytes; bump the digit on format breaks
+WAL_MAGIC = b"RKW1"             # 4 bytes
+_SPILL_HDR = len(SPILL_MAGIC) + 4 + 8       # magic + crc32 + u64 length
+_WAL_HDR = len(WAL_MAGIC) + 4 + 8
+
+WAL_OPS = ("insert_items", "delete_items", "upsert_users", "delete_users")
+
+# RankTable fields spilled verbatim (quant fields absent on the f32 spec)
+_RT_FIELDS = ("thresholds", "table", "m", "thr_scale", "thr_off",
+              "tab_scale", "tab_off", "thr_dev")
+
+
+class PersistError(RuntimeError):
+    """The durable state is unusable (no valid spill, a corrupt WAL
+    interior, or a replay divergence) — rebuild from the master copy.
+    Recovery NEVER degrades to a maybe-wrong index: anything checksum- or
+    replay-suspect raises this instead of loading."""
+
+
+@dataclasses.dataclass(frozen=True)
+class WalRecord:
+    """One decoded mutation record, in append order."""
+
+    op: str
+    seq: int
+    arrays: Dict[str, np.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class RestoredState:
+    """Everything `ReverseKRanksEngine.restore` needs: the reconstructed
+    spill-point snapshot plus the WAL records to replay on top of it."""
+
+    snapshot: IndexSnapshot
+    config: RankTableConfig
+    build_key: Any
+    next_item_id: int
+    wal: List[WalRecord]
+    spill_path: str
+
+
+# --------------------------------------------------------------- encoding
+def _encode_array(value) -> tuple:
+    """(savez-safe ndarray, true-dtype name). npy cannot serialize the
+    ml_dtypes extension types, so bf16 is stored as raw uint16 bits and
+    viewed back on load; every other dtype in play is numpy-native."""
+    a = np.asarray(jax.device_get(value))
+    if a.dtype == ml_dtypes.bfloat16:
+        return a.view(np.uint16), "bfloat16"
+    return a, a.dtype.name
+
+
+def _decode_array(a: np.ndarray, name: str) -> np.ndarray:
+    if name == "bfloat16":
+        return a.view(ml_dtypes.bfloat16)
+    return a
+
+
+def _pack_npz(arrays: Dict[str, np.ndarray]) -> bytes:
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    return buf.getvalue()
+
+
+def _unpack_npz(payload: bytes) -> Dict[str, np.ndarray]:
+    with np.load(io.BytesIO(payload), allow_pickle=False) as z:
+        return {k: z[k] for k in z.files}
+
+
+def _meta_array(meta: dict) -> np.ndarray:
+    return np.frombuffer(json.dumps(meta).encode("utf-8"), np.uint8)
+
+
+def _frame(magic: bytes, payload: bytes) -> bytes:
+    crc = zlib.crc32(payload) & 0xFFFFFFFF
+    return (magic + crc.to_bytes(4, "little")
+            + len(payload).to_bytes(8, "little") + payload)
+
+
+def _key_arrays(build_key):
+    """(storable key bits, typed?, impl name) for the Algorithm-1 key —
+    both legacy raw-uint32 keys and typed `jax.random.key` keys spill."""
+    if jnp.issubdtype(build_key.dtype, jax.dtypes.prng_key):
+        impl = str(jax.random.key_impl(build_key))
+        return np.asarray(jax.random.key_data(build_key)), True, impl
+    return np.asarray(jax.device_get(build_key)), False, ""
+
+
+def _key_restore(data: np.ndarray, typed: bool, impl: str):
+    if not typed:
+        return jnp.asarray(data)
+    try:
+        return jax.random.wrap_key_data(jnp.asarray(data), impl=impl)
+    except (TypeError, ValueError):        # impl spelling drift across jax
+        return jax.random.wrap_key_data(jnp.asarray(data))
+
+
+# ------------------------------------------------------------ spill codec
+def _spill_payload(snap: IndexSnapshot, next_item_id: int,
+                   build_key) -> bytes:
+    if snap.base is None:
+        raise PersistError(
+            "cannot spill a snapshot without its base item set; build the "
+            "engine with ReverseKRanksEngine.build(...)")
+    arrays: Dict[str, np.ndarray] = {}
+    dtypes: Dict[str, str] = {}
+
+    def put(name, value):
+        arrays[name], dtypes[name] = _encode_array(value)
+
+    put("users", snap.users)
+    for f in _RT_FIELDS:
+        v = getattr(snap.rank_table, f)
+        if v is not None:
+            put(f"rt_{f}", v)
+    put("base_items", snap.base.items)
+    arrays["base_item_ids"] = np.asarray(snap.base.item_ids, np.int64)
+    key_data, key_typed, key_impl = _key_arrays(build_key)
+    put("key_data", key_data)
+    d = snap.delta
+    arrays["delta_base_live"] = np.asarray(d.base_live, bool)
+    arrays["delta_added_ids"] = np.asarray(d.added_ids, np.int64)
+    if d.added_items is not None:
+        put("delta_added_items", d.added_items)
+    arrays["delta_user_live"] = np.asarray(d.user_live, bool)
+    arrays["delta_touched"] = np.asarray(sorted(d.touched_users), np.int64)
+    if snap.user_remap is not None:
+        arrays["user_remap"] = np.asarray(snap.user_remap, np.int64)
+    meta = {"format": 1, "epoch": int(snap.epoch),
+            "next_item_id": int(next_item_id),
+            "key_typed": key_typed, "key_impl": key_impl,
+            "config": dataclasses.asdict(snap.config),
+            "dtypes": dtypes}
+    arrays["meta"] = _meta_array(meta)
+    return _pack_npz(arrays)
+
+
+def _snapshot_from_payload(arrays: Dict[str, np.ndarray]):
+    """Reconstruct (snapshot, meta, build_key) from decoded spill arrays.
+    Everything not stored re-derives deterministically (module doc), so
+    the result is bitwise the snapshot that was spilled."""
+    meta = json.loads(bytes(arrays["meta"]).decode("utf-8"))
+    dt = meta["dtypes"]
+
+    def get(name):
+        return jnp.asarray(_decode_array(arrays[name], dt.get(name, "")))
+
+    cfg = RankTableConfig(**meta["config"])
+    users = get("users")
+    rt = RankTable(**{f: (get(f"rt_{f}") if f"rt_{f}" in arrays else None)
+                      for f in _RT_FIELDS})
+    key = _key_restore(arrays["key_data"], meta["key_typed"],
+                       meta["key_impl"])
+    base = delta_mod.BaseIndex.create(
+        get("base_items"), np.asarray(arrays["base_item_ids"], np.int64),
+        cfg, key)
+    delta = delta_mod.DeltaState(
+        base_live=np.asarray(arrays["delta_base_live"], bool),
+        added_ids=np.asarray(arrays["delta_added_ids"], np.int64),
+        added_items=(get("delta_added_items")
+                     if "delta_added_items" in arrays else None),
+        user_live=np.asarray(arrays["delta_user_live"], bool),
+        touched_users=frozenset(int(i) for i in arrays["delta_touched"]))
+    # build_correction returns None on an empty delta — exactly the rule
+    # `_publish` follows, so corr-is-None round-trips too
+    corr = delta_mod.build_correction(users, base, delta, base.m_base,
+                                      spec=cfg.storage)
+    remap = (np.asarray(arrays["user_remap"], np.int64)
+             if "user_remap" in arrays else None)
+    snap = IndexSnapshot(
+        epoch=int(meta["epoch"]), users=users, rank_table=rt, config=cfg,
+        base=base, delta=delta, corr=corr, user_remap=remap,
+        stored_users=cfg.storage.pack_users(users))
+    return snap, meta, key
+
+
+def _read_spill(path: str) -> Dict[str, np.ndarray]:
+    with open(path, "rb") as f:
+        data = f.read()
+    if len(data) < _SPILL_HDR or data[:len(SPILL_MAGIC)] != SPILL_MAGIC:
+        raise PersistError(f"spill {path!r}: bad magic or truncated header")
+    crc = int.from_bytes(data[8:12], "little")
+    ln = int.from_bytes(data[12:20], "little")
+    payload = data[_SPILL_HDR:_SPILL_HDR + ln]
+    if len(payload) < ln or len(data) != _SPILL_HDR + ln:
+        raise PersistError(f"spill {path!r}: torn (have {len(data)} bytes, "
+                           f"framed length says {_SPILL_HDR + ln})")
+    if (zlib.crc32(payload) & 0xFFFFFFFF) != crc:
+        raise PersistError(f"spill {path!r}: checksum mismatch")
+    return _unpack_npz(payload)
+
+
+# -------------------------------------------------------------- WAL codec
+def _wal_payload(op: str, seq: int, arrays: Dict[str, Any]) -> bytes:
+    enc: Dict[str, np.ndarray] = {}
+    dtypes: Dict[str, str] = {}
+    for name, value in arrays.items():
+        enc[name], dtypes[name] = _encode_array(value)
+    enc["meta"] = _meta_array({"op": op, "seq": int(seq), "dtypes": dtypes})
+    return _pack_npz(enc)
+
+
+def _decode_wal_payload(payload: bytes) -> WalRecord:
+    arrays = _unpack_npz(payload)
+    meta = json.loads(bytes(arrays.pop("meta")).decode("utf-8"))
+    out = {k: _decode_array(v, meta["dtypes"].get(k, ""))
+           for k, v in arrays.items()}
+    return WalRecord(op=meta["op"], seq=int(meta["seq"]), arrays=out)
+
+
+def _read_wal(path: str) -> List[WalRecord]:
+    """Decode records in order. Torn TAIL → accept the prefix (crash
+    mid-append); corrupt INTERIOR (an intact frame exists after the bad
+    one) → `PersistError` (module doc)."""
+    with open(path, "rb") as f:
+        data = f.read()
+    records: List[WalRecord] = []
+    off, n = 0, len(data)
+    while off < n:
+        ok = False
+        if (data[off:off + len(WAL_MAGIC)] == WAL_MAGIC
+                and off + _WAL_HDR <= n):
+            crc = int.from_bytes(data[off + 4:off + 8], "little")
+            ln = int.from_bytes(data[off + 8:off + 16], "little")
+            payload = data[off + _WAL_HDR:off + _WAL_HDR + ln]
+            ok = (len(payload) == ln
+                  and (zlib.crc32(payload) & 0xFFFFFFFF) == crc)
+        if not ok:
+            if data.find(WAL_MAGIC, off + 1) != -1:
+                raise PersistError(
+                    f"WAL {path!r}: corrupt interior record at byte {off} "
+                    "(intact records follow it); the log cannot be "
+                    "trusted — rebuild from the master copy")
+            log.warning("WAL %s: torn tail at byte %d of %d; accepting "
+                        "the durable prefix of %d record(s)",
+                        path, off, n, len(records))
+            break
+        rec = _decode_wal_payload(payload)
+        if rec.seq != len(records):
+            raise PersistError(
+                f"WAL {path!r}: sequence gap (record #{len(records)} "
+                f"carries seq {rec.seq}); rebuild from the master copy")
+        if rec.op not in WAL_OPS:
+            raise PersistError(f"WAL {path!r}: unknown op {rec.op!r}")
+        records.append(rec)
+        off += _WAL_HDR + ln
+    return records
+
+
+# --------------------------------------------------------------- persister
+class IndexPersister:
+    """Owns one durability directory: spills snapshots atomically and
+    appends mutation records to the current WAL (module doc).
+
+    Writes are serialized by the engine's mutation lock in normal use; an
+    internal lock makes direct use safe too. `spill` ROTATES the WAL —
+    mutations recorded before the spill are superseded by it, records
+    after it land in the fresh log — which is why the engine spills
+    inside the rebuild's locked swap section: no mutation can fall
+    between the publish and the rotation.
+    """
+
+    def __init__(self, path, *, keep_spills: int = 2,
+                 registry: Optional[obs.MetricsRegistry] = None):
+        if keep_spills < 1:
+            raise ValueError(f"keep_spills must be >= 1; got {keep_spills}")
+        self.dir = str(path)
+        os.makedirs(self.dir, exist_ok=True)
+        self.keep_spills = int(keep_spills)
+        self._lock = threading.Lock()
+        self._wal = None
+        self._wal_broken = False
+        self._seq = 0
+        reg = registry if registry is not None else obs.get_default()
+        self._m_spills = reg.counter(
+            "persist_spills_total", "atomic snapshot spills written")
+        self._m_wal_records = reg.counter(
+            "persist_wal_records_total", "mutation records appended")
+        self._m_wal_errors = reg.counter(
+            "persist_wal_errors_total",
+            "WAL appends that failed (durability degraded to last spill)")
+        self._m_spill_bytes = reg.gauge(
+            "persist_spill_bytes", "size of the most recent spill file")
+
+    # ------------------------------------------------------------- writing
+    def spill(self, snap: IndexSnapshot, *, next_item_id: int,
+              build_key) -> str:
+        """Write ``spill-<epoch>`` atomically, rotate the WAL to a fresh
+        ``wal-<epoch>.log``, prune durable points beyond `keep_spills`.
+        Returns the spill path."""
+        blob = _frame(SPILL_MAGIC,
+                      _spill_payload(snap, next_item_id, build_key))
+        if faults.ACTIVE is not None and faults.should_fire("persist.spill"):
+            # torn-write chaos: persist a deliberately truncated file
+            # (as a crash mid-spill would) — recovery must detect it by
+            # checksum and fall back, never load it
+            blob = blob[:max(len(blob) // 2, len(SPILL_MAGIC))]
+        path = os.path.join(self.dir, f"spill-{snap.epoch:016d}")
+        tmp = path + ".tmp"
+        with self._lock:
+            with open(tmp, "wb") as f:
+                f.write(blob)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+            self._fsync_dir()
+            if self._wal is not None:
+                self._wal.close()
+            self._wal = open(
+                os.path.join(self.dir, f"wal-{snap.epoch:016d}.log"), "wb")
+            self._wal_broken = False    # a fresh baseline re-arms the WAL
+            self._seq = 0
+            self._m_spills.inc()
+            self._m_spill_bytes.set(len(blob))
+            self._prune()
+        return path
+
+    def append(self, op: str, arrays: Dict[str, Any]) -> bool:
+        """Append one fsynced mutation record to the current WAL. Returns
+        False (serving continues, durability degraded to the last spill)
+        when no WAL is open or a write ever failed since the last spill."""
+        if op not in WAL_OPS:
+            raise ValueError(f"unknown WAL op {op!r}; one of {WAL_OPS}")
+        with self._lock:
+            if self._wal is None or self._wal_broken:
+                return False
+            frame = _frame(WAL_MAGIC, _wal_payload(op, self._seq, arrays))
+            try:
+                if (faults.ACTIVE is not None
+                        and faults.should_fire("persist.wal_write")):
+                    raise OSError(
+                        "injected WAL write failure (persist.wal_write)")
+                self._wal.write(frame)
+                self._wal.flush()
+                os.fsync(self._wal.fileno())
+            except OSError:
+                self._wal_broken = True
+                self._m_wal_errors.inc()
+                log.exception(
+                    "WAL append failed; serving continues with durability "
+                    "degraded to the last spill until the next rebuild "
+                    "spills a fresh baseline")
+                return False
+            self._seq += 1
+            self._m_wal_records.inc()
+            return True
+
+    def close(self) -> None:
+        with self._lock:
+            if self._wal is not None:
+                self._wal.close()
+                self._wal = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # ----------------------------------------------------------- internals
+    def _fsync_dir(self) -> None:
+        try:        # the rename itself must be durable, where supported
+            fd = os.open(self.dir, os.O_RDONLY)
+            try:
+                os.fsync(fd)
+            finally:
+                os.close(fd)
+        except OSError:
+            pass
+
+    def _prune(self) -> None:
+        for ep in _spill_epochs(self.dir)[:-self.keep_spills]:
+            for fn in (f"spill-{ep:016d}", f"wal-{ep:016d}.log"):
+                try:
+                    os.remove(os.path.join(self.dir, fn))
+                except OSError:
+                    pass
+
+
+# --------------------------------------------------------------- recovery
+def _spill_epochs(path: str) -> List[int]:
+    out = []
+    for fn in os.listdir(path):
+        m = re.fullmatch(r"spill-(\d{16})", fn)
+        if m:
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def load_latest(path) -> RestoredState:
+    """Load the newest valid durable point from a persistence directory:
+    newest checksum-valid spill + its WAL records. A torn newest spill
+    falls back to the previous one (warned); no valid spill at all, or a
+    corrupt WAL interior, raises `PersistError`."""
+    path = str(path)
+    candidates = _spill_epochs(path)
+    if not candidates:
+        raise PersistError(f"no spill files in {path!r}")
+    last_err: Optional[PersistError] = None
+    for ep in reversed(candidates):
+        spill_path = os.path.join(path, f"spill-{ep:016d}")
+        try:
+            arrays = _read_spill(spill_path)
+        except PersistError as e:
+            log.warning("%s; falling back to the previous durable point",
+                        e)
+            last_err = e
+            continue
+        wal_path = os.path.join(path, f"wal-{ep:016d}.log")
+        records = _read_wal(wal_path) if os.path.exists(wal_path) else []
+        snap, meta, key = _snapshot_from_payload(arrays)
+        return RestoredState(snapshot=snap, config=snap.config,
+                             build_key=key,
+                             next_item_id=int(meta["next_item_id"]),
+                             wal=records, spill_path=spill_path)
+    raise PersistError(
+        f"no valid spill in {path!r}; rebuild from the master copy"
+    ) from last_err
+
+
+def replay_record(engine, rec: WalRecord) -> None:
+    """Apply one WAL record through the engine's NORMAL mutation API
+    (module doc); insert-id divergence raises `PersistError`."""
+    a = rec.arrays
+    if rec.op == "insert_items":
+        got = engine.insert_items(jnp.asarray(a["vectors"]))
+        want = np.asarray(a["ids"], np.int64)
+        if not np.array_equal(np.asarray(got, np.int64), want):
+            raise PersistError(
+                f"WAL replay diverged at record #{rec.seq}: insert_items "
+                f"assigned ids {np.asarray(got).tolist()} but the log "
+                f"recorded {want.tolist()}")
+    elif rec.op == "delete_items":
+        engine.delete_items([int(i) for i in a["ids"]])
+    elif rec.op == "upsert_users":
+        engine.upsert_users(
+            jnp.asarray(a["vectors"]),
+            indices=([int(i) for i in a["indices"]]
+                     if "indices" in a else None))
+    elif rec.op == "delete_users":
+        engine.delete_users([int(i) for i in a["indices"]])
+    else:       # _read_wal already rejects unknown ops; belt and braces
+        raise PersistError(f"unknown WAL op {rec.op!r}")

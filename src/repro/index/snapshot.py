@@ -26,7 +26,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import List, Optional, Tuple
+from typing import List, Optional, TYPE_CHECKING, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +34,12 @@ import numpy as np
 
 from repro.core.types import DeltaCorrection, RankTable, RankTableConfig, \
     StoredUsers
-from repro.index.delta import BaseIndex, DeltaState
+from repro.serve import faults
+
+if TYPE_CHECKING:      # annotation-only: a runtime import would close the
+    # repro.core.engine → snapshot → delta → repro.core cycle and break
+    # cold `import repro.index`
+    from repro.index.delta import BaseIndex, DeltaState
 
 
 def compose_remaps(first: Optional[np.ndarray],
@@ -167,6 +172,10 @@ class SnapshotManager:
         writers are expected to serialize on the engine mutation lock;
         this assertion catches a lost-update race instead of silently
         rolling the index back."""
+        if faults.ACTIVE is not None:
+            # chaos site: a hot-swap dying between build and pointer
+            # install — the old generation must keep serving untorn
+            faults.fire("index.publish")
         with self._lock:
             if snap.epoch <= self._current.epoch:
                 raise RuntimeError(

@@ -54,10 +54,62 @@ of selected users). --metrics-json PATH dumps the final registry
 snapshot to a file; --trace turns on `repro.obs.trace` spans
 (per-tick/per-phase timing in `trace.spans()`; disabled by default —
 the hot path only pays one flag check).
+
+Ops runbook (PR 9 — fault tolerance)
+------------------------------------
+--deadline-ms D      every submission carries a D-millisecond deadline:
+                     requests that expire in the queue are SHED before
+                     occupying a tick slot (their futures raise
+                     `DeadlineExceeded`), keeping tail latency bounded
+                     under overload instead of serving everyone late.
+                     Watch `serve_rejected_total{reason="deadline"}` and
+                     `serve_expired_total`-adjacent tick stats (`exp` in
+                     the stats line).
+--degrade            arm the certified degrade ladder
+                     (`repro.serve.degrade`): under sustained queue
+                     pressure (depth ≥ --degrade-high for consecutive
+                     ticks) the scheduler steps DOWN — 1: pruned
+                     backends stop their dense fallback; 2: the
+                     effective c widens (bounds still certified, the
+                     auditor judges at the widened contract); 3:
+                     cache-only serving (misses shed) — and back UP with
+                     hysteresis once depth ≤ --degrade-low. The current
+                     rung is the `serve_degrade_level` gauge; every
+                     answer remains a certified (r↓, r↑) result — the
+                     contract is RELAXED EXPLICITLY, never silently
+                     violated.
+--persist-dir PATH   crash-safe durability (`repro.index.persist`): an
+                     atomic checksummed spill at startup and at every
+                     rebuild, plus a per-mutation fsynced WAL between
+                     spills. Recovery after a crash:
+                     `ReverseKRanksEngine.restore(PATH)` — bitwise the
+                     state at the durable point, `PersistError` means
+                     rebuild from the master copy. A WAL write failure
+                     degrades durability to the last spill (counted by
+                     `persist_wal_errors_total`), never takes serving
+                     down.
+Signals              SIGTERM/SIGINT request GRACEFUL shutdown: the
+                     submit loop stops, in-flight futures drain for at
+                     most --drain-s seconds (whatever is still queued
+                     past the drain deadline is shed with reason
+                     "shutdown"), a final snapshot spill lands in
+                     --persist-dir, and the process exits 0.
+Fault injection      set REPRO_FAULTS="site:mode[:rate[:max_fires
+                     [:latency_ms]]],..." (+ REPRO_FAULTS_SEED) before
+                     launch to chaos-test any site in
+                     `repro.serve.faults.SITES`; see also
+                     `benchmarks/perf_engine.py --faults`.
+
+Thread health: `maintenance_thread_alive` / `audit_thread_alive` are
+callback gauges — 0 at scrape time means the background thread died (a
+traceback was logged once); `maintenance_consecutive_failures` returning
+to 0 after a rebuild failure means the loop recovered on its own.
 """
 from __future__ import annotations
 
 import argparse
+import signal
+import threading
 import time
 
 import jax
@@ -70,11 +122,12 @@ from repro.core.types import RankTableConfig
 from repro.data.pipeline import synthetic_embeddings
 from repro.data.mf import MFConfig, embeddings, train_mf
 from repro.data.pipeline import synthetic_ratings
-from repro.index import MaintenanceLoop, MaintenancePolicy
+from repro.index import IndexPersister, MaintenanceLoop, MaintenancePolicy
 from repro.obs import registry as obs
 from repro.obs import trace
 from repro.obs.audit import QualityAuditor
-from repro.serve import MicroBatcher, QueueFull
+from repro.serve import (DeadlineExceeded, DegradeController, DegradePolicy,
+                         MicroBatcher, QueueFull, SchedulerClosed)
 
 
 def build_embeddings(args):
@@ -117,6 +170,25 @@ def main():
     ap.add_argument("--max-depth", type=int, default=None,
                     help="admission bound: submits beyond this queue depth "
                          "fail fast with QueueFull (default: unbounded)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline: queued requests past it "
+                         "are shed (DeadlineExceeded) instead of served "
+                         "late (default: none)")
+    ap.add_argument("--degrade", action="store_true",
+                    help="arm the certified degrade ladder under "
+                         "sustained overload (see module docstring)")
+    ap.add_argument("--degrade-high", type=int, default=32,
+                    help="queue depth at/above which the ladder steps "
+                         "down (after a dwell of consecutive ticks)")
+    ap.add_argument("--degrade-low", type=int, default=4,
+                    help="queue depth at/below which it steps back up")
+    ap.add_argument("--persist-dir", default=None, metavar="PATH",
+                    help="crash-safe durability: spill + WAL under PATH; "
+                         "recover with ReverseKRanksEngine.restore(PATH)")
+    ap.add_argument("--drain-s", type=float, default=5.0,
+                    help="graceful-shutdown bound: how long SIGTERM/"
+                         "SIGINT waits for queued requests before "
+                         "shedding the remainder")
     ap.add_argument("--update-stream", action="store_true",
                     help="replay streaming item inserts/deletes while "
                          "serving, with background rebuild + hot-swap")
@@ -192,6 +264,12 @@ def main():
     res = eng.query_batch(qs[:B], k=args.k, c=args.c)
     jax.block_until_ready(res.indices)
 
+    persister = None
+    if args.persist_dir:
+        persister = IndexPersister(args.persist_dir)
+        eng.attach_persister(persister)
+        print(f"persistence: spill + WAL under {args.persist_dir} "
+              f"(recover with ReverseKRanksEngine.restore(...))")
     maint = None
     if args.update_stream:
         maint = MaintenanceLoop(
@@ -203,15 +281,38 @@ def main():
     if args.audit_fraction > 0:
         auditor = QualityAuditor(eng, fraction=args.audit_fraction,
                                  seed=args.seed)
+    degrade = None
+    if args.degrade:
+        degrade = DegradeController(
+            DegradePolicy(high_depth=args.degrade_high,
+                          low_depth=args.degrade_low),
+            backend=eng._backend)      # cache auto-discovered for rung 3
+
+    # graceful shutdown: first SIGTERM/SIGINT stops the submit loop; the
+    # scheduler then drains for at most --drain-s and sheds the rest with
+    # reason "shutdown"; a final spill lands before exit 0
+    stop = threading.Event()
+
+    def _on_signal(signum, frame):
+        if not stop.is_set():
+            print(f"\nsignal {signal.Signals(signum).name}: draining "
+                  f"(bounded {args.drain_s:.0f}s), then exiting 0")
+        stop.set()
+
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        signal.signal(sig, _on_signal)
+
     ukey = jax.random.PRNGKey(args.seed + 17)
     rng = np.random.default_rng(args.seed + 17)
     try:
         with MicroBatcher(eng, max_batch=B, max_wait_ms=args.max_wait_ms,
                           max_depth=args.max_depth,
-                          auditor=auditor) as mb:
+                          auditor=auditor, degrade=degrade) as mb:
             t0 = time.time()
             futs, accepted = [], []
             for i, q in enumerate(qs):
+                if stop.is_set():
+                    break
                 if args.stats_every and i and i % args.stats_every == 0:
                     line = f"  [{i}/{args.queries}] {mb.stats()}"
                     if auditor is not None and auditor.scored:
@@ -234,21 +335,51 @@ def main():
                                       replace=False)
                     eng.delete_items(drop)
                 try:
-                    futs.append(mb.submit(q, args.k, args.c))
+                    futs.append(mb.submit(q, args.k, args.c,
+                                          deadline_ms=args.deadline_ms))
                     accepted.append(i)
-                except QueueFull:
+                except (QueueFull, DeadlineExceeded):
                     pass        # fail-fast back-pressure; counted in stats
-            results = [f.result() for f in futs]
+            # pair each resolved result with ITS query index; shed
+            # futures (deadline, shutdown drain, degrade-level-3 misses)
+            # raise typed errors and are counted, never torn. A signal —
+            # whether it landed during submission or while waiting here —
+            # triggers ONE bounded drain: queued requests past --drain-s
+            # are shed with reason "shutdown" (close is idempotent; the
+            # context manager's second close is a no-op).
+            results, shed, drained = [], 0, False
+            for j, f in enumerate(futs):
+                if stop.is_set() and not drained:
+                    mb.close(drain_s=args.drain_s)
+                    drained = True
+                try:
+                    results.append((accepted[j], f.result()))
+                except (QueueFull, DeadlineExceeded, SchedulerClosed):
+                    shed += 1
             elapsed = time.time() - t0
             st = mb.stats()
             epochs = sorted({t.epoch for t in mb.tick_log})
     finally:
         if maint is not None:
             maint.close()
+        if persister is not None:
+            # final durable point: mutations since the last spill were
+            # already WAL-durable; this collapses them into one spill
+            try:
+                persister.spill(eng.current_snapshot(),
+                                next_item_id=eng._next_item_id,
+                                build_key=eng.build_key)
+            except OSError:
+                print("  WARNING: final spill failed; the WAL still "
+                      "holds the mutations since the last spill")
+            persister.close()
     print(f"serve: {elapsed/max(len(results), 1)*1e3:.2f} ms/query wall "
           f"({eng.backend_name} backend, max_batch={B}, "
           f"max_wait_ms={args.max_wait_ms})")
-    print(f"  ticks: {st}")
+    print(f"  ticks: {st}" + (f"  shed futures: {shed}" if shed else ""))
+    if degrade is not None and degrade.transitions:
+        print(f"  degrade ladder: level now {degrade.level}, "
+              f"transitions {degrade.transitions}")
     if args.update_stream:
         print(f"  update stream: final epoch {eng.epoch}, "
               f"{len(maint.rebuilds)} rebuild(s), epochs served {epochs}, "
@@ -273,6 +404,9 @@ def main():
                       f, indent=2, default=str)
         print(f"  metrics snapshot → {args.metrics_json}")
 
+    if stop.is_set():
+        print("shutdown complete (drained, final state spilled); exit 0")
+        return
     if args.eval_exact:
         # update-stream results span epochs; score POST-CHURN queries
         # against the FINAL live item set (a fresh engine pass, so every
@@ -286,10 +420,9 @@ def main():
                 (qs[i], jax.tree_util.tree_map(lambda x, i=i: x[i], post))
                 for i in range(n_eval)]
         else:
-            # pair each served result with ITS query (back-pressure may
-            # have rejected some submissions)
-            eval_pairs = [(qs[accepted[j]], results[j])
-                          for j in range(n_eval)]
+            # pair each served result with ITS query (back-pressure,
+            # deadlines, or degrade sheds may have dropped some)
+            eval_pairs = [(qs[i0], r) for i0, r in results[:n_eval]]
         accs, ratios = [], []
         for q_i, r in eval_pairs:
             truth = np.asarray(exact_ranks(users, eval_items, q_i))

@@ -31,6 +31,7 @@ auditor's gauges are the quality half of the same dashboard.
 """
 from __future__ import annotations
 
+import logging
 import random
 import threading
 from collections import deque
@@ -39,6 +40,7 @@ from typing import Optional
 import numpy as np
 
 from repro.obs import registry as obs
+from repro.serve import faults
 
 
 class QualityAuditor:
@@ -98,8 +100,14 @@ class QualityAuditor:
             "rolling mean certified r_up - r_lo over selected users")
         self._m_backlog = reg.gauge(
             "audit_backlog", "sampled queries awaiting exact re-scoring")
-        self._thread = threading.Thread(target=self._loop, daemon=True,
+        self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="quality-auditor")
+        # Liveness read at scrape time via callback — a dead scorer
+        # thread cannot leave a stale "alive" value behind.
+        self._m_alive = reg.gauge(
+            "audit_thread_alive",
+            "1 while the auditor's scoring thread is running",
+            set_fn=self._thread.is_alive)
         self._thread.start()
 
     # --------------------------------------------------------- serving API
@@ -180,6 +188,20 @@ class QualityAuditor:
         self.close()
 
     # ------------------------------------------------------------- scoring
+    def _run(self):
+        """Thread body: `_loop` + last-resort visibility (cf.
+        `MaintenanceLoop._run`): an exception escaping `_loop` — i.e.
+        outside the per-item scoring try/except — is logged once, then
+        the thread dies VISIBLY (`audit_thread_alive` flips to 0 at the
+        next scrape) instead of vanishing."""
+        try:
+            self._loop()
+        except Exception:
+            logging.getLogger(__name__).exception(
+                "quality auditor thread died; online quality gauges are "
+                "FROZEN (audit_thread_alive gauge is now 0)")
+            raise
+
     def _loop(self):
         while True:
             with self._cond:
@@ -190,6 +212,18 @@ class QualityAuditor:
                 item = self._pending.popleft()
                 self._m_backlog.set(len(self._pending))
                 self._in_flight = 1
+            if faults.ACTIVE is not None:
+                # chaos site outside the per-item try/except: a raise
+                # here kills the thread (liveness-gauge regression test).
+                # _in_flight is restored so flush() cannot hang forever
+                # on a dead scorer.
+                try:
+                    faults.fire("audit.loop")
+                except BaseException:
+                    with self._cond:
+                        self._in_flight = 0
+                        self._cond.notify_all()
+                    raise
             try:
                 self._score(*item)
             except Exception:

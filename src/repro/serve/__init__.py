@@ -12,17 +12,33 @@ Two pieces, composable with any engine backend:
               plus a cross-tick LRU of per-query results keyed by
               (query bytes, k, c).
 
+Robustness layer (PR 9), also here:
+
+  faults    — deterministic fault injection at named sites (chaos tests,
+              `perf_engine --faults`); disabled = one flag check.
+  degrade   — `DegradePolicy` / `DegradeController`: the certified
+              degrade ladder the scheduler steps down under sustained
+              overload (and back up with hysteresis).
+
 Typical serving stack (hot-query dedupe under micro-batching)::
 
     eng = ReverseKRanksEngine.build(users, items, cfg, key,
                                     backend="cached:fused")
     with MicroBatcher(eng, max_batch=16, max_wait_ms=2.0) as mb:
-        fut = mb.submit(q, k=10, c=2.0)
+        fut = mb.submit(q, k=10, c=2.0, deadline_ms=50.0)
         res = fut.result()                 # per-query QueryResult
 """
+# faults first: stdlib-only, imported by scheduler/maintenance/persist —
+# loading it before cache keeps the partial-package window trivial
+from repro.serve import faults
 from repro.serve.cache import CachingBackend
-from repro.serve.scheduler import (MicroBatcher, QueueFull, ServeStats,
-                                   TickStats, pad_block)
+from repro.serve.degrade import DegradeController, DegradePolicy
+from repro.serve.scheduler import (DeadlineExceeded, MicroBatcher,
+                                   QueueFull, REJECT_REASONS,
+                                   SchedulerClosed, ServeStats, TickStats,
+                                   pad_block)
 
-__all__ = ["CachingBackend", "MicroBatcher", "QueueFull", "ServeStats",
-           "TickStats", "pad_block"]
+__all__ = ["CachingBackend", "DeadlineExceeded", "DegradeController",
+           "DegradePolicy", "MicroBatcher", "QueueFull", "REJECT_REASONS",
+           "SchedulerClosed", "ServeStats", "TickStats", "faults",
+           "pad_block"]

@@ -169,6 +169,10 @@ class CachingBackend(BK.QueryBackend):
     def check_users_shape(self, n):
         return self.inner.check_users_shape(n)
 
+    def degrade(self, level):
+        """Ladder levels act on the wrapped execution backend."""
+        self.inner.degrade(level)
+
     def _check_epoch(self, rt: RankTable, users: jax.Array,
                      delta=None) -> None:
         """Cached results are only valid for the index GENERATION they
@@ -201,6 +205,23 @@ class CachingBackend(BK.QueryBackend):
             self.evictions += 1
             self._m_evictions.inc()
         self._m_size.set(len(self._lru))
+
+    def lookup_only(self, rt, users, row, *, k, c, delta=None):
+        """LRU probe WITHOUT dispatch (degrade rung 3, cache-only
+        serving — repro.serve.degrade): the cached per-query QueryResult
+        if this exact (query, k, c) is live for the CURRENT index
+        generation, else None. Never touches the inner backend."""
+        self._check_epoch(rt, users, delta)
+        key = (self._key_bytes(np.asarray(row)), int(k), float(c))
+        cached = self._lru.get(key)
+        if cached is None:
+            self.misses += 1
+            self._m_misses.inc()
+            return None
+        self._lru.move_to_end(key)
+        self.hits += 1
+        self._m_hits.inc()
+        return cached
 
     # -------------------------------------------------------------- query
     def query_batch(self, rt, users, qs, *, k, c, delta=None):

@@ -63,6 +63,29 @@ snapshots dispatch through plain `engine.query_batch`.
 Per-tick stats (`TickStats`) record queue depth at dispatch, fill ratio,
 and per-request latency; `MicroBatcher.stats()` aggregates them into
 p50/p99 latency for the serving dashboards.
+
+Deadlines, reject reasons, degrade (PR 9)
+-----------------------------------------
+`submit(..., deadline_ms=)` attaches a latency budget: an already-expired
+submit is rejected at admission, and every tick cut SWEEPS the queue
+first, failing expired requests with `DeadlineExceeded` BEFORE they
+occupy a tick slot (a request that cannot possibly meet its deadline
+must not displace one that can). Every rejection carries a reason label
+on the `serve_rejected_total{reason=...}` registry counter: `queue_full`
+(max_depth back-pressure), `deadline` (expired at admission or in the
+sweep), `shutdown` (submit after close, or queue shed past the bounded
+drain of `close(drain_s=...)`), and `degraded` (cache-only rung misses,
+see below). `submit` after `close()` raises the typed `SchedulerClosed`
+instead of hanging, and `close()` is idempotent.
+
+Passing `degrade=DegradeController(...)` (repro.serve.degrade) arms the
+certified degrade ladder: the controller observes queue depth at every
+tick cut and the tick dispatches at its current rung — rung 2 widens the
+served contract to c_eff = c · widen_c (still a certified
+c_eff-approximation, recorded in `TickStats.degrade_level` and audited
+at c_eff), rung 3 serves LRU hits only and sheds misses. Fault-injection
+sites `serve.dispatch` / `serve.slow_tick` (repro.serve.faults) live at
+the top of the dispatch path, one flag check when disabled.
 """
 from __future__ import annotations
 
@@ -79,6 +102,7 @@ import numpy as np
 
 from repro.obs import registry as obs
 from repro.obs import trace
+from repro.serve import faults
 
 
 def pad_block(qs: jax.Array, max_batch: int) -> jax.Array:
@@ -123,6 +147,22 @@ class QueueFull(RuntimeError):
     """`submit` rejected: the queue is at `max_depth` (back-pressure)."""
 
 
+class SchedulerClosed(RuntimeError):
+    """`submit` after `close()`: the scheduler is shut down (reject
+    reason `shutdown`). A RuntimeError subclass so pre-PR-9 callers
+    catching the old untyped close error keep working."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request's `deadline_ms` budget expired before dispatch —
+    at admission, in the per-tick queue sweep, or as a queued casualty
+    of a bounded drain (reject reason `deadline`)."""
+
+# Reject-reason label values on serve_rejected_total{reason=...}; the
+# catalog is closed so dashboards can enumerate it.
+REJECT_REASONS = ("queue_full", "deadline", "shutdown", "degraded")
+
+
 @dataclasses.dataclass(frozen=True)
 class TickStats:
     """One dispatched tick, as observed by the scheduler."""
@@ -140,6 +180,11 @@ class TickStats:
     # recompile-storm signature the elastic backend exists to kill, and
     # exactly what its p99 spike looks like to a dashboard.
     compiles: int = 0
+    # Deadline sweeps attributed to this tick's cut (expired requests
+    # shed from the queue before the tick was formed), and the degrade
+    # rung the tick was dispatched at (0 = normal; repro.serve.degrade).
+    expired: int = 0
+    degrade_level: int = 0
     # A terminal record (batch == 0) is flushed at close() when rejects
     # arrived after the last dispatched tick — every rejection is
     # attributed to exactly one TickStats.
@@ -157,23 +202,28 @@ class ServeStats:
     p99_ms: float
     rejected: int = 0          # submits rejected by the max_depth bound
     depth_hwm: int = 0         # queue-depth high-watermark
+    expired: int = 0           # requests shed by deadline (admission+sweep)
 
     def __str__(self):
         return (f"{self.requests} reqs / {self.ticks} ticks  "
                 f"fill {self.mean_fill:.2f}  depth {self.mean_queue_depth:.1f}"
                 f" (hwm {self.depth_hwm})  rej {self.rejected}"
+                f"  exp {self.expired}"
                 f"  p50 {self.p50_ms:.2f} ms  p99 {self.p99_ms:.2f} ms")
 
 
 class _Request:
-    __slots__ = ("q", "k", "c", "future", "t_submit")
+    __slots__ = ("q", "k", "c", "future", "t_submit", "t_deadline")
 
-    def __init__(self, q, k, c):
+    def __init__(self, q, k, c, deadline_ms=None):
         self.q = q
         self.k = int(k)
         self.c = float(c)
         self.future: Future = Future()
         self.t_submit = time.monotonic()
+        # absolute monotonic deadline; None = no latency budget
+        self.t_deadline = (None if deadline_ms is None
+                           else self.t_submit + float(deadline_ms) / 1e3)
 
     @property
     def key(self):
@@ -197,7 +247,7 @@ class MicroBatcher:
 
     def __init__(self, engine, *, max_batch: int = 16,
                  max_wait_ms: float = 2.0, max_depth: Optional[int] = None,
-                 auditor=None):
+                 auditor=None, degrade=None):
         # Width 1 is rejected, not padded around: the module's partial-tick
         # bit-identity argument needs every dispatch ≥ 2 wide (matvec
         # lowering caveat, module doc), and a max_batch=1 scheduler could
@@ -218,11 +268,22 @@ class MicroBatcher:
         # resolved request is OFFERED to it with the pinned snapshot; the
         # auditor samples and re-scores off-thread, never blocking ticks.
         self.auditor = auditor
+        # Optional degrade-ladder controller (repro.serve.degrade): asked
+        # for the current rung at every tick cut; None = always rung 0.
+        self.degrade = degrade
         reg = obs.get_default()
         self._m_submitted = reg.counter(
             "serve_requests_total", "requests accepted by submit()")
         self._m_rejected = reg.counter(
             "serve_rejected_total", "submits rejected by back-pressure")
+        # Per-reason reject counters (same metric name, a `reason` label
+        # per REJECT_REASONS value; the unlabelled aggregate above stays
+        # for pre-PR-9 dashboards).
+        self._m_reject_reason = {
+            reason: reg.counter(
+                "serve_rejected_total", "rejects by reason",
+                labels={"reason": reason})
+            for reason in REJECT_REASONS}
         self._m_ticks = reg.counter(
             "serve_ticks_total", "dispatched micro-batch ticks")
         self._m_compiles = reg.counter(
@@ -238,18 +299,23 @@ class MicroBatcher:
         self._queue: Deque[_Request] = deque()
         self._cond = threading.Condition()
         self._stop = False
+        self._closed = False        # close() already ran (idempotency)
+        self._drain_deadline = None  # monotonic bound on close() draining
         self._flush = False
         self._busy = False          # a tick is being dispatched right now
         self._ticks: List[TickStats] = []
         self._rejected_total = 0
         self._rejected_since_tick = 0
+        self._expired_total = 0
+        self._expired_since_tick = 0
         self._depth_hwm = 0
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name="microbatcher")
         self._thread.start()
 
     # ------------------------------------------------------------- client
-    def submit(self, q: jax.Array, k: int, c: float) -> Future:
+    def submit(self, q: jax.Array, k: int, c: float,
+               deadline_ms: Optional[float] = None) -> Future:
         """Enqueue one (d,) query; resolves to its per-query QueryResult
         with HOST (numpy) leaves, leading batch axis already squeezed —
         serving results are client-bound, so the tick is transferred once
@@ -257,19 +323,40 @@ class MicroBatcher:
 
         With `max_depth` set, a submit that finds the queue at the bound
         raises `QueueFull` immediately (fail-fast back-pressure) instead
-        of accepting work the scheduler cannot keep up with."""
+        of accepting work the scheduler cannot keep up with.
+
+        `deadline_ms` attaches a latency budget relative to NOW: a
+        non-positive budget is rejected at admission with
+        `DeadlineExceeded`, and a queued request whose budget expires
+        before its tick is cut is failed by the per-tick sweep (its
+        Future raises `DeadlineExceeded`). After `close()`, submits
+        raise `SchedulerClosed` (reject reason `shutdown`)."""
         q = jnp.asarray(q)
         if q.ndim != 1:
             raise ValueError(f"submit expects a (d,) query; got {q.shape}")
-        req = _Request(q, k, c)
+        if deadline_ms is not None and deadline_ms <= 0:
+            # already expired at admission: shed before it can take a
+            # queue slot, let alone a tick slot
+            with self._cond:
+                self._expired_total += 1
+                self._expired_since_tick += 1
+            self._m_reject_reason["deadline"].inc()
+            raise DeadlineExceeded(
+                f"deadline_ms={deadline_ms} already expired at submit")
+        req = _Request(q, k, c, deadline_ms=deadline_ms)
         with self._cond:
             if self._stop:
-                raise RuntimeError("MicroBatcher is closed")
+                # Not counted into _rejected_total: the dispatcher has
+                # (or will have) exited, so no terminal TickStats could
+                # attribute it — the labelled counter is the record.
+                self._m_reject_reason["shutdown"].inc()
+                raise SchedulerClosed("MicroBatcher is closed")
             if (self.max_depth is not None
                     and len(self._queue) >= self.max_depth):
                 self._rejected_total += 1
                 self._rejected_since_tick += 1
                 self._m_rejected.inc()
+                self._m_reject_reason["queue_full"].inc()
                 raise QueueFull(
                     f"queue at max_depth={self.max_depth}; request rejected "
                     "(fail-fast back-pressure — retry with backoff)")
@@ -289,10 +376,21 @@ class MicroBatcher:
                 self._cond.wait(timeout=0.05)
             self._flush = False
 
-    def close(self) -> None:
-        """Drain the queue, then stop the dispatcher thread."""
+    def close(self, drain_s: Optional[float] = None) -> None:
+        """Drain the queue, then stop the dispatcher thread. Idempotent —
+        a second close() returns immediately.
+
+        `drain_s` bounds the drain: queued requests still undispatched
+        when the budget runs out are shed (`SchedulerClosed`, reject
+        reason `shutdown`) instead of holding up shutdown behind a slow
+        engine. The default None drains fully, as before."""
         with self._cond:
+            if self._closed:
+                return
+            self._closed = True
             self._stop = True
+            if drain_s is not None:
+                self._drain_deadline = time.monotonic() + float(drain_s)
             self._cond.notify_all()
         self._thread.join()
 
@@ -307,9 +405,10 @@ class MicroBatcher:
         with self._cond:            # one atomic snapshot of ticks+counters
             ticks = list(self._ticks)
             rejected, hwm = self._rejected_total, self._depth_hwm
+            expired = self._expired_total
         if not ticks:
             return ServeStats(0, 0, 0.0, 0.0, 0.0, 0.0, rejected=rejected,
-                              depth_hwm=hwm)
+                              depth_hwm=hwm, expired=expired)
         # The terminal rejection record (batch == 0, no latencies) is an
         # accounting tick: it carries rejects into the aggregate but must
         # not skew the dispatch-shape means or crash the percentiles.
@@ -328,6 +427,7 @@ class MicroBatcher:
             p99_ms=float(np.percentile(lats, 99)) if lats.size else 0.0,
             rejected=rejected,
             depth_hwm=hwm,
+            expired=expired,
         )
 
     @property
@@ -349,63 +449,159 @@ class MicroBatcher:
                 return r.key
         return None
 
+    def _sweep_expired(self, now: float) -> List[_Request]:
+        """Remove deadline-expired requests from the queue (lock held).
+        Returns the shed requests — their futures are failed OUTSIDE the
+        lock (`_fail_expired`), so a future callback can never deadlock
+        against the scheduler."""
+        if not any(r.t_deadline is not None and now >= r.t_deadline
+                   for r in self._queue):
+            return []
+        keep: Deque[_Request] = deque()
+        dead: List[_Request] = []
+        for r in self._queue:
+            if r.t_deadline is not None and now >= r.t_deadline:
+                dead.append(r)
+            else:
+                keep.append(r)
+        self._queue = keep
+        self._expired_total += len(dead)
+        self._expired_since_tick += len(dead)
+        return dead
+
+    def _fail_expired(self, reqs: List[_Request]) -> None:
+        for r in reqs:
+            self._m_reject_reason["deadline"].inc()
+            if not r.future.cancelled():
+                r.future.set_exception(DeadlineExceeded(
+                    "deadline expired before dispatch (per-tick sweep)"))
+
+    def _fail_drained(self, reqs: List[_Request]) -> None:
+        for r in reqs:
+            self._m_reject_reason["shutdown"].inc()
+            if not r.future.cancelled():
+                r.future.set_exception(SchedulerClosed(
+                    "scheduler closed before dispatch (bounded drain)"))
+
     def _loop(self):
         while True:
+            expired: List[_Request] = []
+            drained: List[_Request] = []
+            reqs = None
+            terminal = False
             with self._cond:
                 while not self._queue and not self._stop:
                     self._cond.wait()
-                if not self._queue:         # stop requested, queue drained
-                    # Rejects that arrived AFTER the last tick was cut
-                    # would otherwise vanish (they are only read at the
-                    # next cut, and there is no next cut): flush them
-                    # into a terminal accounting record so ServeStats
-                    # and tick_log stay complete under close().
-                    tail = self._rejected_since_tick
-                    self._rejected_since_tick = 0
-                    if tail:
-                        self._ticks.append(TickStats(
-                            batch=0, queue_depth=0, fill_ratio=0.0,
-                            wait_ms=0.0, latencies_ms=(), rejected=tail))
-                    return
-                head = self._queue[0]
-                deadline = head.t_submit + self.max_wait_ms / 1e3
-                while (self._full_key() is None
-                       and not (self._stop or self._flush)):
-                    remaining = deadline - time.monotonic()
-                    if remaining <= 0:
-                        break
-                    self._cond.wait(timeout=remaining)
-                # a full group anywhere in the queue outranks the partial
-                # head tick; the head still dispatches by its deadline
-                key = self._full_key() or self._queue[0].key
-                reqs, rest = [], deque()
-                while self._queue:
-                    r = self._queue.popleft()
-                    if r.key == key and len(reqs) < self.max_batch:
-                        reqs.append(r)
-                    else:
-                        rest.append(r)
-                depth = len(reqs) + len(rest)
-                self._queue = rest
-                rejected = self._rejected_since_tick
-                self._rejected_since_tick = 0
-                self._busy = True
+                now = time.monotonic()
+                # Deadline sweep FIRST: an expired request must not be
+                # chosen as the head nor occupy a tick slot.
+                expired += self._sweep_expired(now)
+                if (self._stop and self._queue
+                        and self._drain_deadline is not None
+                        and now >= self._drain_deadline):
+                    # bounded drain exhausted: shed the remainder so
+                    # close(drain_s=...) returns promptly; the sheds flow
+                    # into the terminal accounting record below
+                    drained = list(self._queue)
+                    self._queue.clear()
+                    self._rejected_total += len(drained)
+                    self._rejected_since_tick += len(drained)
+                if not self._queue:
+                    if self._stop:      # stop requested, queue drained
+                        # Rejects/expiries that arrived AFTER the last
+                        # tick was cut would otherwise vanish (they are
+                        # only read at the next cut, and there is no next
+                        # cut): flush them into a terminal accounting
+                        # record so ServeStats and tick_log stay complete
+                        # under close().
+                        tail = self._rejected_since_tick
+                        self._rejected_since_tick = 0
+                        tail_exp = self._expired_since_tick
+                        self._expired_since_tick = 0
+                        if tail or tail_exp:
+                            self._ticks.append(TickStats(
+                                batch=0, queue_depth=0, fill_ratio=0.0,
+                                wait_ms=0.0, latencies_ms=(),
+                                rejected=tail, expired=tail_exp))
+                        terminal = True
+                    # else: the sweep emptied the queue mid-serve — fail
+                    # the shed futures below and go back to waiting
+                else:
+                    head = self._queue[0]
+                    deadline = head.t_submit + self.max_wait_ms / 1e3
+                    while (self._full_key() is None
+                           and not (self._stop or self._flush)):
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0:
+                            break
+                        self._cond.wait(timeout=remaining)
+                    # late sweep: a request whose budget ran out DURING
+                    # the coalescing wait must not take a tick slot
+                    expired += self._sweep_expired(time.monotonic())
+                    if self._queue:
+                        # a full group anywhere in the queue outranks the
+                        # partial head tick; the head still dispatches by
+                        # its deadline
+                        key = self._full_key() or self._queue[0].key
+                        reqs, rest = [], deque()
+                        while self._queue:
+                            r = self._queue.popleft()
+                            if r.key == key and len(reqs) < self.max_batch:
+                                reqs.append(r)
+                            else:
+                                rest.append(r)
+                        depth = len(reqs) + len(rest)
+                        self._queue = rest
+                        rejected = self._rejected_since_tick
+                        self._rejected_since_tick = 0
+                        n_expired = self._expired_since_tick
+                        self._expired_since_tick = 0
+                        # degrade rung for this tick, from the queue
+                        # depth observed at the cut (hysteresis inside
+                        # the controller — repro.serve.degrade)
+                        level = (self.degrade.on_tick_cut(depth)
+                                 if self.degrade is not None else 0)
+                        self._busy = True
+            if expired:
+                self._fail_expired(expired)
+            if drained:
+                self._fail_drained(drained)
+            if terminal:
+                return
+            if reqs is None:
+                continue
             try:
-                self._dispatch(reqs, depth, rejected)
+                self._dispatch(reqs, depth, rejected, n_expired, level)
             finally:
                 with self._cond:
                     self._busy = False
                     self._cond.notify_all()
 
-    def _dispatch(self, reqs: List[_Request], depth: int, rejected: int = 0):
+    def _dispatch(self, reqs: List[_Request], depth: int, rejected: int = 0,
+                  expired: int = 0, level: int = 0):
         t_dispatch = time.monotonic()
         k, c = reqs[0].key
+        # rung 2+ of the degrade ladder dispatches at a WIDENED contract:
+        # the result is a valid c_eff-approximation, reported as such
+        # (TickStats.degrade_level) and audited at c_eff (module doc)
+        c_eff = (self.degrade.widened_c(c)
+                 if self.degrade is not None else c)
+        if (level >= 3 and self.degrade is not None
+                and self.degrade.cache is not None
+                and getattr(self.engine, "current_snapshot", None)
+                is not None):
+            self._dispatch_cache_only(reqs, depth, rejected, expired,
+                                      level, t_dispatch)
+            return
         epoch = None
         snap = None
         programs_before = _program_count()
         sp = trace.span("serve.tick", batch=len(reqs), depth=depth, k=k)
         try:
             with sp:
+                if faults.ACTIVE is not None:
+                    faults.fire("serve.slow_tick")
+                    faults.fire("serve.dispatch")
                 if trace.is_enabled():
                     # retroactive cross-thread spans: each request's
                     # admission → dispatch queue wait, timed from its
@@ -424,9 +620,9 @@ class MicroBatcher:
                     snap = snap_fn()
                     epoch = getattr(snap, "epoch", None)
                     sp.set(epoch=epoch)
-                    res = self.engine.query_batch_at(snap, qs, k=k, c=c)
+                    res = self.engine.query_batch_at(snap, qs, k=k, c=c_eff)
                 else:
-                    res = self.engine.query_batch(qs, k=k, c=c)
+                    res = self.engine.query_batch(qs, k=k, c=c_eff)
                 # One transfer for the whole tick: futures resolve to HOST
                 # (numpy) QueryResults — per-request row views are
                 # zero-copy, where B×fields device slices would dominate
@@ -436,11 +632,12 @@ class MicroBatcher:
             for r in reqs:
                 if not r.future.cancelled():
                     r.future.set_exception(e)
-            # This tick records no TickStats — re-credit the rejects it
-            # was carrying so the NEXT cut (or the terminal flush at
-            # close) attributes them instead of dropping them.
+            # This tick records no TickStats — re-credit the rejects and
+            # expiries it was carrying so the NEXT cut (or the terminal
+            # flush at close) attributes them instead of dropping them.
             with self._cond:
                 self._rejected_since_tick += rejected
+                self._expired_since_tick += expired
             return
         now = time.monotonic()
         tick = TickStats(
@@ -449,7 +646,8 @@ class MicroBatcher:
             wait_ms=(t_dispatch - reqs[0].t_submit) * 1e3,
             latencies_ms=tuple((now - r.t_submit) * 1e3 for r in reqs),
             rejected=rejected, epoch=epoch,
-            compiles=max(0, _program_count() - programs_before))
+            compiles=max(0, _program_count() - programs_before),
+            expired=expired, degrade_level=level)
         # Record the tick BEFORE resolving futures: a client that wakes
         # from f.result() must already see it in stats()/tick_log.
         with self._cond:
@@ -467,5 +665,78 @@ class MicroBatcher:
             if not r.future.cancelled():
                 r.future.set_result(per_q)
             if self.auditor is not None:
-                self.auditor.observe(np.asarray(r.q), per_q, k=k, c=c,
+                # audited at the contract actually served (c_eff on
+                # degraded ticks) — the accuracy gauge judges the
+                # relaxed, REPORTED contract, not the requested one
+                self.auditor.observe(np.asarray(r.q), per_q, k=k, c=c_eff,
+                                     snapshot=snap)
+
+    def _dispatch_cache_only(self, reqs: List[_Request], depth: int,
+                             rejected: int, expired: int, level: int,
+                             t_dispatch: float):
+        """Degrade rung 3: answer LRU hits against the pinned snapshot,
+        shed misses with `QueueFull` (reject reason `degraded`).
+
+        A hit is an exact per-query result computed earlier in the SAME
+        index generation — the cache invalidates on any snapshot change
+        (`CachingBackend._check_epoch`), so its certified (r↓, r↑) bounds
+        are as valid as at first compute. Misses shed instead of
+        dispatching: rung 3 exists to take the rank table out of the
+        serving path entirely."""
+        cache = self.degrade.cache
+        k, c = reqs[0].key
+        c_eff = self.degrade.widened_c(c)
+        snap = self.engine.current_snapshot()
+        epoch = getattr(snap, "epoch", None)
+        rt, users, delta = snap.rank_table, snap.query_users(), snap.corr
+        hits: List[Tuple[_Request, object, float]] = []
+        misses: List[_Request] = []
+        with trace.span("serve.cache_only", batch=len(reqs), depth=depth,
+                        k=k, epoch=epoch, level=level):
+            for r in reqs:
+                row = np.asarray(jax.device_get(r.q))
+                # entries may have been cached at the base contract or at
+                # the rung-2 widened one — a hit at either serves
+                res, c_hit = None, c
+                for c_try in ((c, c_eff) if c_eff != c else (c,)):
+                    res = cache.lookup_only(rt, users, row, k=k, c=c_try,
+                                            delta=delta)
+                    if res is not None:
+                        c_hit = c_try
+                        break
+                if res is None:
+                    misses.append(r)
+                else:
+                    hits.append((r, jax.device_get(res), c_hit))
+        with self._cond:
+            self._rejected_total += len(misses)
+        now = time.monotonic()
+        tick = TickStats(
+            batch=len(hits), queue_depth=depth,
+            fill_ratio=len(hits) / self.max_batch,
+            wait_ms=(t_dispatch - reqs[0].t_submit) * 1e3,
+            latencies_ms=tuple((now - r.t_submit) * 1e3
+                               for r, _, _ in hits),
+            rejected=rejected + len(misses), epoch=epoch,
+            expired=expired, degrade_level=level)
+        with self._cond:
+            self._ticks.append(tick)
+        self._m_ticks.inc()
+        self._m_depth.set(depth)
+        self._m_fill.set(tick.fill_ratio)
+        if misses:
+            self._m_rejected.inc(len(misses))
+            self._m_reject_reason["degraded"].inc(len(misses))
+        for r in misses:
+            if not r.future.cancelled():
+                r.future.set_exception(QueueFull(
+                    "shed at degrade level 3 (cache-only serving): "
+                    "no cached result for this query"))
+        for r, host, c_hit in hits:
+            self._m_wait.observe((t_dispatch - r.t_submit) * 1e3)
+            self._m_latency.observe((now - r.t_submit) * 1e3)
+            if not r.future.cancelled():
+                r.future.set_result(host)
+            if self.auditor is not None:
+                self.auditor.observe(np.asarray(r.q), host, k=k, c=c_hit,
                                      snapshot=snap)

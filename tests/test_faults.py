@@ -1,0 +1,355 @@
+"""Chaos suite (PR 9): deterministic fault injection, deadline admission,
+typed shutdown, thread-death visibility, backoff recovery, and the
+certified degrade ladder.
+
+Every test runs with `faults.clear()` guaranteed afterwards (autouse
+fixture), and against a FRESH default metrics registry — injected chaos
+must never leak into another test, and callback gauges
+(`*_thread_alive`) must bind to THIS test's threads, not a previous
+test's dead ones.
+
+Run the suite alone with `pytest -m faults` (the CI chaos job).
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.engine import ReverseKRanksEngine
+from repro.core.types import RankTableConfig
+from repro.index import MaintenanceLoop, MaintenancePolicy
+from repro.obs import registry as obs
+from repro.obs.audit import QualityAuditor
+from repro.serve import (DeadlineExceeded, DegradeController, DegradePolicy,
+                         MicroBatcher, QueueFull, SchedulerClosed, faults)
+from tests.conftest import make_problem
+
+pytestmark = pytest.mark.faults
+
+K, C = 7, 2.0
+MAX_BATCH = 4
+
+
+@pytest.fixture(autouse=True)
+def chaos_hygiene():
+    """Fresh registry + guaranteed faults.clear() per test."""
+    old = obs.get_default()
+    obs.set_default(obs.MetricsRegistry())
+    try:
+        yield
+    finally:
+        faults.clear()
+        obs.set_default(old)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_problem(jax.random.PRNGKey(42), n=256, m=128, d=16)
+
+
+def _engine(problem, backend="dense"):
+    users, items = problem
+    cfg = RankTableConfig(tau=16, omega=4, s=16)
+    return ReverseKRanksEngine.build(users, items, cfg,
+                                     jax.random.PRNGKey(1), backend=backend)
+
+
+# ---------------------------------------------------------------- the plan
+def test_plan_is_deterministic_per_site():
+    """Same seed ⇒ the same fire pattern at a site, independent of how
+    often OTHER sites are evaluated (per-site RNG streams)."""
+    def pattern(extra_noise_evals):
+        faults.install(faults.FaultPlan(seed=3, rules=[
+            faults.FaultRule("serve.dispatch", mode="raise", rate=0.3),
+            faults.FaultRule("serve.slow_tick", mode="sleep", rate=0.5),
+        ]))
+        out = []
+        for i in range(64):
+            for _ in range(extra_noise_evals * (i % 3)):
+                faults.should_fire("serve.slow_tick")   # perturb ANOTHER site
+            out.append(faults.should_fire("serve.dispatch"))
+        faults.clear()
+        return out
+
+    a, b = pattern(0), pattern(5)
+    assert a == b
+    assert any(a) and not all(a)        # rate 0.3 actually thins the stream
+
+
+def test_plan_parse_grammar():
+    plan = faults.FaultPlan.parse(
+        "index.rebuild:raise:1.0:2, serve.slow_tick:sleep:0.1::25", seed=7)
+    assert plan.seed == 7
+    r = plan.rules["index.rebuild"]
+    assert (r.mode, r.rate, r.max_fires) == ("raise", 1.0, 2)
+    s = plan.rules["serve.slow_tick"]
+    assert (s.mode, s.rate, s.max_fires, s.latency_ms) == \
+        ("sleep", 0.1, None, 25.0)
+
+
+def test_plan_rejects_typos():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        faults.FaultRule("serve.dispach")
+    with pytest.raises(ValueError, match="unknown fault mode"):
+        faults.FaultRule("serve.dispatch", mode="explode")
+    with pytest.raises(ValueError, match="rate"):
+        faults.FaultRule("serve.dispatch", rate=1.5)
+    with pytest.raises(ValueError, match="duplicate"):
+        faults.FaultPlan(rules=[faults.FaultRule("serve.dispatch"),
+                                faults.FaultRule("serve.dispatch")])
+    with pytest.raises(ValueError, match="bad fault spec"):
+        faults.FaultPlan.parse("just-a-site")
+
+
+def test_disabled_is_a_noop():
+    faults.clear()
+    assert faults.ACTIVE is None
+    faults.fire("serve.dispatch")               # must not raise
+    assert faults.should_fire("persist.spill") is False
+
+
+def test_max_fires_and_after():
+    plan = faults.install(faults.FaultPlan(seed=0, rules=[
+        faults.FaultRule("serve.dispatch", mode="raise", max_fires=2,
+                         after=1)]))
+    fired = [faults.should_fire("serve.dispatch") for _ in range(6)]
+    assert fired == [False, True, True, False, False, False]
+    assert plan.fires["serve.dispatch"] == 2
+    assert plan.evaluations["serve.dispatch"] == 6
+
+
+# --------------------------------------------------- deadlines & shutdown
+def test_deadline_rejected_at_admission(problem):
+    eng = _engine(problem)
+    with MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=1.0) as mb:
+        with pytest.raises(DeadlineExceeded):
+            mb.submit(problem[1][0], K, C, deadline_ms=0.0)
+        assert mb.stats().expired == 1
+
+
+def test_deadline_sweep_shed_before_tick(problem):
+    """A queued request whose budget expires during coalescing is failed
+    by the sweep with the TYPED error, and never occupies a tick slot."""
+    eng = _engine(problem)
+    users, items = problem
+    with MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=200.0) as mb:
+        doomed = mb.submit(items[0], K, C, deadline_ms=5.0)
+        time.sleep(0.03)                # let the budget lapse in-queue
+        # a FULL group of fresh requests forces a tick cut; the sweep
+        # runs first and sheds the expired head
+        ok = [mb.submit(items[i + 1], K, C) for i in range(MAX_BATCH)]
+        with pytest.raises(DeadlineExceeded):
+            doomed.result(timeout=5)
+        for f in ok:
+            assert f.result(timeout=5).indices.shape == (K,)
+    st = mb.stats()
+    assert st.expired == 1
+    assert st.requests == MAX_BATCH     # the expired one never dispatched
+    assert sum(t.expired for t in mb.tick_log) == 1
+
+
+def test_submit_after_close_raises_typed(problem):
+    eng = _engine(problem)
+    mb = MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=0.5)
+    f = mb.submit(problem[1][0], K, C)
+    mb.close()
+    mb.close()                          # idempotent double-close
+    assert f.result(timeout=5).indices.shape == (K,)
+    with pytest.raises(SchedulerClosed):
+        mb.submit(problem[1][1], K, C)
+
+
+def test_close_racing_inflight_tick_leaves_no_torn_future(problem):
+    """close(drain_s=) while ticks are slow (injected latency): every
+    accepted future must terminate — a result or a TYPED exception,
+    never pending forever — and every shed must be accounted."""
+    eng = _engine(problem)
+    users, items = problem
+    faults.install(faults.FaultPlan(seed=0, rules=[
+        faults.FaultRule("serve.slow_tick", mode="sleep", rate=1.0,
+                         latency_ms=40.0)]))
+    mb = MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=0.5)
+    futs = [mb.submit(items[i % items.shape[0]], K, C) for i in range(24)]
+    closer = threading.Thread(target=lambda: mb.close(drain_s=0.06))
+    closer.start()
+    closer.join(timeout=30)
+    assert not closer.is_alive()
+    resolved = shed = 0
+    for f in futs:
+        assert f.done(), "future left pending after close()"
+        try:
+            r = f.result(timeout=0)
+        except SchedulerClosed:
+            shed += 1
+        else:
+            resolved += 1
+            assert r.indices.shape == (K,)
+    assert resolved + shed == len(futs)
+    assert shed >= 1                    # the bounded drain actually shed
+    st = mb.stats()
+    assert st.rejected == shed
+    # every rejection is attributed to exactly one TickStats record
+    assert sum(t.rejected for t in mb.tick_log) == st.rejected
+
+
+def test_dispatch_fault_fails_tick_typed_and_recovers(problem):
+    """An injected dispatch failure fails that tick's futures with
+    `InjectedFault` (typed, all of them, none torn); later ticks serve
+    normally and the failed tick's reject accounting is re-credited."""
+    eng = _engine(problem)
+    users, items = problem
+    faults.install(faults.FaultPlan(seed=0, rules=[
+        faults.FaultRule("serve.dispatch", mode="raise", max_fires=1)]))
+    with MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=0.5) as mb:
+        bad = [mb.submit(items[i], K, C) for i in range(MAX_BATCH)]
+        for f in bad:
+            with pytest.raises(faults.InjectedFault):
+                f.result(timeout=10)
+        good = [mb.submit(items[i], K, C) for i in range(MAX_BATCH)]
+        for f in good:
+            assert f.result(timeout=10).indices.shape == (K,)
+    assert sum(t.rejected for t in mb.tick_log) == mb.stats().rejected
+
+
+# --------------------------------------------------- thread-death gauges
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_maintenance_thread_death_flips_liveness_gauge(problem):
+    """A fault OUTSIDE the rebuild try/except kills the loop thread; the
+    callback gauge must read 0 at the next scrape (no silent death)."""
+    eng = _engine(problem)
+    faults.install(faults.FaultPlan(seed=0, rules=[
+        faults.FaultRule("maintenance.loop", mode="raise", max_fires=1)]))
+    ml = MaintenanceLoop(eng, poll_ms=5.0)
+    assert ml._m_alive.value == 1.0
+    ml.wake()
+    ml._thread.join(timeout=10)
+    assert not ml._thread.is_alive()
+    assert ml._m_alive.value == 0.0     # scrape-time callback, not stale
+
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_audit_thread_death_flips_liveness_gauge():
+    faults.install(faults.FaultPlan(seed=0, rules=[
+        faults.FaultRule("audit.loop", mode="raise", max_fires=1)]))
+    aud = QualityAuditor(engine=object(), fraction=1.0, seed=0)
+    assert aud._m_alive.value == 1.0
+    assert aud.observe(np.zeros(4, np.float32), None, k=K, c=C)
+    aud._thread.join(timeout=10)
+    assert not aud._thread.is_alive()
+    assert aud._m_alive.value == 0.0
+    # the fault restored _in_flight, so flush() terminates instead of
+    # hanging on the dead scorer
+    assert aud.flush(timeout=1.0)
+
+
+def test_maintenance_backoff_and_recovery_without_restart(problem):
+    """Two injected rebuild failures: the loop logs, backs off (capped
+    exponential), keeps serving, and the consecutive-failures gauge
+    returns to 0 on the third (successful) attempt — no restart."""
+    eng = _engine(problem)
+    users, items = problem
+    faults.install(faults.FaultPlan(seed=0, rules=[
+        faults.FaultRule("index.rebuild", mode="raise", max_fires=2)]))
+    with MaintenanceLoop(
+            eng, policy=MaintenancePolicy(max_delta_ratio=0.01,
+                                          min_interval_s=0.0),
+            poll_ms=5.0, failure_backoff_s=0.02, max_backoff_s=0.05) as ml:
+        eng.insert_items(items[:8] * 1.1)      # cross the rebuild trigger
+        deadline = time.monotonic() + 30.0
+        while time.monotonic() < deadline and not (
+                ml.rebuilds and ml.consecutive_failures == 0):
+            ml.wake()
+            time.sleep(0.01)
+        assert len(ml.failures) == 2
+        assert all(isinstance(e, faults.InjectedFault) for e in ml.failures)
+        assert len(ml.rebuilds) >= 1
+        assert ml.consecutive_failures == 0     # recovered, same process
+        assert ml._m_consec.value == 0.0
+        assert ml._thread.is_alive()
+        # the old snapshot kept serving THROUGH the failures
+        res = eng.query_batch(items[:2], k=K, c=C)
+        assert np.all(np.asarray(res.r_lo) <= np.asarray(res.r_up))
+
+
+# ------------------------------------------------------ the degrade ladder
+def test_degrade_ladder_hysteresis_and_widened_c():
+    dc = DegradeController(DegradePolicy(high_depth=8, low_depth=2,
+                                         dwell_ticks=2, widen_c=1.5))
+    assert dc.effective_max == 2        # no cache ⇒ rung 3 unreachable
+    assert dc.on_tick_cut(10) == 0      # one hot tick is not a trend
+    assert dc.on_tick_cut(10) == 1      # dwell met: step down
+    assert dc.widened_c(C) == C         # rung 1 is contract-free
+    dc.on_tick_cut(10)
+    assert dc.on_tick_cut(10) == 2
+    assert dc.widened_c(C) == C * 1.5   # rung 2 serves c_eff, explicitly
+    dc.on_tick_cut(10)
+    assert dc.on_tick_cut(10) == 2      # topped out without a cache
+    assert dc.on_tick_cut(5) == 2       # hysteresis band holds the level
+    dc.on_tick_cut(1)
+    assert dc.on_tick_cut(1) == 1       # recovery is as deliberate
+    dc.on_tick_cut(1)
+    assert dc.on_tick_cut(1) == 0
+    assert dc.transitions == [(0, 1), (1, 2), (2, 1), (1, 0)]
+
+
+def test_degrade_single_burst_cannot_thrash():
+    dc = DegradeController(DegradePolicy(high_depth=8, low_depth=2,
+                                         dwell_ticks=3))
+    for depth in (20, 5, 20, 5, 20, 5):     # bursty, never sustained
+        assert dc.on_tick_cut(depth) == 0
+    assert dc.transitions == []
+
+
+def test_degrade_cache_only_serves_hits_sheds_misses(problem):
+    """Rung 3: an LRU hit resolves (certified result computed earlier in
+    the same epoch), a miss sheds with the `degraded` reject reason."""
+    eng = _engine(problem, backend="cached:dense")
+    users, items = problem
+    hot, cold = items[0], items[1]
+    # warm the LRU at the base contract through the real serving path
+    want = eng.query(hot, k=K, c=C)
+    dc = DegradeController(DegradePolicy(high_depth=50, low_depth=1,
+                                         dwell_ticks=50),
+                           backend=eng._backend)
+    assert dc.cache is not None         # auto-discovered from the chain
+    assert dc.effective_max == 3
+    dc.level = 3                        # pin rung 3; the wide dwell window
+    # keeps on_tick_cut from stepping during the test
+    with MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=20.0,
+                      degrade=dc) as mb:
+        f_hit = mb.submit(hot, K, C)
+        f_miss = mb.submit(cold, K, C)
+        got = f_hit.result(timeout=10)
+        np.testing.assert_array_equal(np.asarray(got.indices),
+                                      np.asarray(want.indices))
+        assert np.all(np.asarray(got.r_lo) <= np.asarray(got.r_up))
+        with pytest.raises(QueueFull, match="degrade level 3"):
+            f_miss.result(timeout=10)
+    log = mb.tick_log
+    assert any(t.degrade_level == 3 for t in log)
+    assert sum(t.rejected for t in log) == mb.stats().rejected == 1
+
+
+def test_degraded_tick_recorded_at_widened_contract(problem):
+    """Rung 2 under real dispatch: the tick record carries the rung, and
+    results are still valid certified bounds (at c_eff)."""
+    eng = _engine(problem)
+    users, items = problem
+    dc = DegradeController(DegradePolicy(high_depth=2, low_depth=1,
+                                         dwell_ticks=1, max_level=2,
+                                         widen_c=2.0))
+    with MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=30.0,
+                      degrade=dc) as mb:
+        # two bursts deep enough to step 0→1→2 (dwell 1), then serve
+        for _ in range(3):
+            futs = [mb.submit(items[i], K, C) for i in range(MAX_BATCH)]
+            for f in futs:
+                r = f.result(timeout=10)
+                assert np.all(np.asarray(r.r_lo) <= np.asarray(r.r_up))
+    levels = [t.degrade_level for t in mb.tick_log]
+    assert max(levels) == 2
+    assert dc.widened_c(C) == 2.0 * C

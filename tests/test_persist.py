@@ -1,0 +1,257 @@
+"""Crash-safe persistence tests (PR 9): bitwise restore round-trips per
+storage spec, torn-spill fallback, WAL corruption detection, degraded
+(never crashed) serving on WAL write failure, and replay divergence.
+
+The durability model under test (src/repro/index/persist.py): the
+durable point is the newest checksum-valid spill plus its WAL prefix.
+A torn TAIL (crash mid-append, nothing intact after it) truncates to the
+prefix; corruption with intact records AFTER it, an unknown op, or a
+replay that diverges from the recorded effect all raise `PersistError` —
+recovery must fall back to rebuilding from the master copy rather than
+ever serving a wrong answer from a bad WAL.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.engine import ReverseKRanksEngine
+from repro.core.types import RankTableConfig
+from repro.index import IndexPersister, PersistError
+from repro.index.persist import SPILL_MAGIC
+from repro.obs import registry as obs
+from repro.serve import faults
+from tests.conftest import make_problem
+
+pytestmark = pytest.mark.faults
+
+K, C = 7, 2.0
+
+
+@pytest.fixture(autouse=True)
+def chaos_hygiene():
+    old = obs.get_default()
+    obs.set_default(obs.MetricsRegistry())
+    try:
+        yield
+    finally:
+        faults.clear()
+        obs.set_default(old)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_problem(jax.random.PRNGKey(42), n=192, m=96, d=12)
+
+
+def _build(problem, spec="f32"):
+    users, items = problem
+    cfg = RankTableConfig(tau=16, omega=4, s=16, storage_dtype=spec)
+    return ReverseKRanksEngine.build(users, items, cfg,
+                                     jax.random.PRNGKey(1))
+
+
+def _mutate_a(eng, problem):
+    users, items = problem
+    ids = eng.insert_items(items[:5] * 1.05)
+    eng.delete_items([int(ids[1])])
+    eng.upsert_users(users[:2] * 1.2, indices=np.array([0, 7]))
+    return ids
+
+
+def _mutate_b(eng, problem):
+    users, items = problem
+    eng.upsert_users(users[3:5] * 0.9)          # append two new users
+    eng.delete_users([2])
+
+
+def _assert_same_engine(got, want, problem):
+    """Bitwise equality of the restored engine against the reference: the
+    lineage counters, the as-stored rank-table bytes, and every field of
+    a served batch."""
+    users, items = problem
+    assert got.current_snapshot().epoch == want.current_snapshot().epoch
+    assert got._next_item_id == want._next_item_id
+    rt_g, rt_w = got.rank_table, want.rank_table
+    for f in rt_w._fields:
+        a, b = getattr(rt_g, f), getattr(rt_w, f)
+        assert (a is None) == (b is None), f"rank-table field {f!r}"
+        if a is not None:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"rank-table field {f!r}")
+    np.testing.assert_array_equal(np.asarray(got.users),
+                                  np.asarray(want.users))
+    qs = items[:4] * 1.01
+    rg = got.query_batch(qs, k=K, c=C)
+    rw = want.query_batch(qs, k=K, c=C)
+    for f in rw._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(rg, f)), np.asarray(getattr(rw, f)),
+            err_msg=f"query field {f!r} differs after restore")
+
+
+def _spill_paths(d):
+    return sorted(os.path.join(d, fn) for fn in os.listdir(d)
+                  if fn.startswith("spill-"))
+
+
+def _wal_paths(d):
+    return sorted(os.path.join(d, fn) for fn in os.listdir(d)
+                  if fn.startswith("wal-"))
+
+
+def _truncate(path, keep=None):
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(size // 2 if keep is None else keep)
+
+
+# ------------------------------------------------------------ round trips
+@pytest.mark.parametrize("spec", ["f32", "bf16", "int8"])
+def test_restore_is_bitwise_after_mutations(tmp_path, problem, spec):
+    eng = _build(problem, spec)
+    eng.attach_persister(IndexPersister(tmp_path))
+    _mutate_a(eng, problem)
+    _mutate_b(eng, problem)
+    got = ReverseKRanksEngine.restore(tmp_path)
+    _assert_same_engine(got, eng, problem)
+
+
+def test_restore_after_rebuild_and_postspill_mutations(tmp_path, problem):
+    """A rebuild spills the new epoch and rotates the WAL inside the
+    locked swap, so mutations on either side of it land in exactly one
+    durable point — the round-trip stays bitwise across the rotation."""
+    eng = _build(problem)
+    eng.attach_persister(IndexPersister(tmp_path))
+    _mutate_a(eng, problem)
+    eng.rebuild(reason="test")
+    _mutate_b(eng, problem)
+    assert len(_spill_paths(tmp_path)) == 2     # baseline + rebuild epoch
+    got = ReverseKRanksEngine.restore(tmp_path)
+    _assert_same_engine(got, eng, problem)
+    # durability re-arms on the restored engine too
+    got.attach_persister(IndexPersister(tmp_path))
+    _mutate_b(got, problem)
+    again = ReverseKRanksEngine.restore(tmp_path)
+    _assert_same_engine(again, got, problem)
+
+
+# -------------------------------------------------------- torn/corrupt IO
+def test_torn_newest_spill_falls_back_to_previous_durable_point(
+        tmp_path, problem):
+    eng = _build(problem)
+    eng.attach_persister(IndexPersister(tmp_path))
+    _mutate_a(eng, problem)
+    eng.rebuild(reason="test")                  # second durable point
+    _truncate(_spill_paths(tmp_path)[-1])       # crash mid-spill
+    # reference: the same lineage at the PREVIOUS durable point —
+    # baseline + WAL replay of _mutate_a, no rebuild
+    ref = _build(problem)
+    _mutate_a(ref, problem)
+    got = ReverseKRanksEngine.restore(tmp_path)
+    _assert_same_engine(got, ref, problem)
+
+
+def test_no_valid_spill_raises_rebuild_from_master(tmp_path, problem):
+    eng = _build(problem)
+    eng.attach_persister(IndexPersister(tmp_path))
+    eng.rebuild(reason="test")
+    for p in _spill_paths(tmp_path):
+        _truncate(p, keep=len(SPILL_MAGIC) + 3)
+    with pytest.raises(PersistError, match="rebuild from the master"):
+        ReverseKRanksEngine.restore(tmp_path)
+
+
+def test_torn_wal_tail_accepts_prefix(tmp_path, problem):
+    """A crash mid-append tears the LAST record: the intact prefix is the
+    durable point (accepted with a warning), the torn tail is dropped."""
+    eng = _build(problem)
+    eng.attach_persister(IndexPersister(tmp_path))
+    _mutate_a(eng, problem)                     # prefix records
+    eng.delete_users([4])                       # final record → torn
+    wal = _wal_paths(tmp_path)[-1]
+    _truncate(wal, keep=os.path.getsize(wal) - 5)
+    ref = _build(problem)
+    _mutate_a(ref, problem)
+    got = ReverseKRanksEngine.restore(tmp_path)
+    _assert_same_engine(got, ref, problem)
+
+
+def test_corrupt_wal_interior_raises(tmp_path, problem):
+    """Corruption with an INTACT record after it is not a torn tail — the
+    op sequence is untrustworthy, and loading must refuse rather than
+    replay around the hole."""
+    eng = _build(problem)
+    eng.attach_persister(IndexPersister(tmp_path))
+    _mutate_a(eng, problem)                     # several records
+    wal = _wal_paths(tmp_path)[-1]
+    with open(wal, "r+b") as f:                 # flip a payload byte of
+        f.seek(16 + 5)                          # record 0 (16 B header)
+        b = f.read(1)
+        f.seek(16 + 5)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with pytest.raises(PersistError):
+        ReverseKRanksEngine.restore(tmp_path)
+
+
+def test_replay_divergence_raises(tmp_path, problem):
+    """A WAL whose recorded insert ids disagree with what replay assigns
+    is a corrupted/foreign log — refuse, never serve mismatched ids."""
+    users, items = problem
+    eng = _build(problem)
+    p = IndexPersister(tmp_path)
+    eng.attach_persister(p)
+    eng.insert_items(items[:2] * 1.03)
+    p.append("insert_items", {"vectors": np.asarray(items[2:3] * 1.01),
+                              "ids": np.array([4242], np.int64)})
+    with pytest.raises(PersistError, match="diverged"):
+        ReverseKRanksEngine.restore(tmp_path)
+
+
+def test_unknown_wal_op_rejected_at_append(tmp_path):
+    p = IndexPersister(tmp_path)
+    with pytest.raises(ValueError, match="unknown WAL op"):
+        p.append("drop_everything", {})
+
+
+# ------------------------------------------------------ injected failures
+def test_wal_write_failure_degrades_then_spill_rearms(tmp_path, problem):
+    """An injected WAL write error: serving continues, durability drops
+    to the last spill (the failed-and-after mutations are NOT durable),
+    and the next rebuild's spill re-arms logging."""
+    eng = _build(problem)
+    p = IndexPersister(tmp_path)
+    eng.attach_persister(p)
+    faults.install(faults.FaultPlan(seed=0, rules=[
+        faults.FaultRule("persist.wal_write", mode="raise", max_fires=1)]))
+    _mutate_a(eng, problem)                     # first append dies
+    assert p._wal_broken
+    assert p._m_wal_errors.value >= 1
+    res = eng.query_batch(problem[1][:2], k=K, c=C)     # still serving
+    assert np.all(np.asarray(res.r_lo) <= np.asarray(res.r_up))
+    # the lost tail is EXPLICIT: restore sees only the baseline spill
+    got = ReverseKRanksEngine.restore(tmp_path)
+    assert got.current_snapshot().epoch == 0
+    eng.rebuild(reason="re-baseline")           # spill re-arms the WAL
+    assert not p._wal_broken
+    _mutate_b(eng, problem)                     # durable again
+    _assert_same_engine(ReverseKRanksEngine.restore(tmp_path), eng,
+                        problem)
+
+
+def test_injected_torn_spill_falls_back(tmp_path, problem):
+    """The persist.spill torn-mode fault writes a half spill exactly as a
+    crash mid-spill would; recovery detects it by checksum and falls back
+    to the previous durable point."""
+    eng = _build(problem)
+    faults.install(faults.FaultPlan(seed=0, rules=[
+        faults.FaultRule("persist.spill", mode="torn", after=1,
+                         max_fires=1)]))
+    eng.attach_persister(IndexPersister(tmp_path))  # baseline spill intact
+    _mutate_a(eng, problem)
+    eng.rebuild(reason="test")                  # this spill is torn
+    ref = _build(problem)
+    _mutate_a(ref, problem)
+    got = ReverseKRanksEngine.restore(tmp_path)
+    _assert_same_engine(got, ref, problem)
