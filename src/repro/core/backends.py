@@ -132,6 +132,29 @@ class QueryBackend:
         r_lo, r_up, est = self.bound_ranks(rt, users, qs)
         return self.select(rt, r_lo, r_up, est, k=k, c=c)
 
+    def dispatch_device(self, rt: RankTable, users, qs, *, k: int, c: float,
+                        delta: Optional[DeltaCorrection] = None
+                        ) -> QueryResult:
+        """Serving-path dispatch entry (PR 10): take a HOST (numpy) query
+        block, stage it to the device in ONE transfer, and return the
+        tick's QueryResult as DEVICE HANDLES with no host sync — JAX
+        async dispatch means the arrays are unmaterialized futures the
+        caller materializes later (`jax.device_get` on a completion
+        thread, never on the dispatch thread). The base implementation
+        delegates to `query_batch`, which already returns unblocked
+        device arrays; backends with a donation story override to route
+        through a buffer-donating compiled entry (`ElasticBackend`), so
+        the tick's input buffer is recycled instead of re-allocated.
+
+        Contract: results are BIT-IDENTICAL to `query_batch` on the same
+        block — this entry changes where buffers live, never values."""
+        qs = jnp.asarray(qs)            # one H2D for the whole tick
+        if delta is None:
+            # no delta kwarg on the static path (same compatibility
+            # contract as engine.query_batch_at)
+            return self.query_batch(rt, users, qs, k=k, c=c)
+        return self.query_batch(rt, users, qs, k=k, c=c, delta=delta)
+
 
 _REGISTRY: Dict[str, Type[QueryBackend]] = {}
 

@@ -236,12 +236,14 @@ def _slice_corr(corr: DeltaCorrection, start, size: int) -> DeltaCorrection:
 
 
 # ------------------------------------------------------- the ONE program
-@functools.partial(jax.jit,
-                   static_argnames=("tile", "use_kernel", "m_kernel", "k"))
-def _elastic_query(rt: RankTable, users, qs: jax.Array, n_valid: jax.Array,
-                   corr: Optional[DeltaCorrection], c: jax.Array, *,
-                   tile: int, use_kernel: bool, m_kernel: int, k: int
-                   ) -> QueryResult:
+_STATIC_ARGS = ("tile", "use_kernel", "m_kernel", "k")
+
+
+def _elastic_query_impl(rt: RankTable, users, qs: jax.Array,
+                        n_valid: jax.Array,
+                        corr: Optional[DeltaCorrection], c: jax.Array, *,
+                        tile: int, use_kernel: bool, m_kernel: int, k: int
+                        ) -> QueryResult:
     """The compile-once program: fori_loop over tiles → sentinel mask →
     shared §4.3 selection → pad-count correction. ONE jit region — unlike
     the delta path's deliberate two-region split (`query_batch_delta`),
@@ -304,6 +306,30 @@ def _elastic_query(rt: RankTable, users, qs: jax.Array, n_valid: jax.Array,
     over_prn = pad * (sentinel > res.R_up_k).astype(jnp.int32)
     return res._replace(n_accepted=res.n_accepted - over_acc,
                         n_pruned=res.n_pruned - over_prn)
+
+
+_elastic_query = jax.jit(_elastic_query_impl, static_argnames=_STATIC_ARGS)
+
+
+def _serve_donate_args() -> tuple:
+    """Buffer donation for the SERVING entry: the scheduler's per-tick
+    query block is staged into a fresh device buffer each tick and never
+    read after dispatch, so on accelerators XLA may reuse its memory for
+    outputs. On CPU donation is a no-op that warns per call — alias the
+    plain entry instead (same jit object: zero extra compiles)."""
+    try:
+        if jax.default_backend() in ("gpu", "cuda", "rocm", "tpu"):
+            return ("qs",)
+    except Exception:  # pragma: no cover - backend probe must never fail
+        pass
+    return ()
+
+
+_SERVE_DONATE = _serve_donate_args()
+_elastic_query_serve = (
+    jax.jit(_elastic_query_impl, static_argnames=_STATIC_ARGS,
+            donate_argnames=_SERVE_DONATE)
+    if _SERVE_DONATE else _elastic_query)
 
 
 # -------------------------------------------------------- observability
@@ -464,20 +490,15 @@ class ElasticBackend(BK.QueryBackend):
         return value
 
     # -------------------------------------------------------------- query
-    def query_batch(self, rt, users, qs, *, k, c, delta=None):
+    def _query_via(self, program, rt, users, qs, *, k, c, delta):
+        """Shared dispatch body for `query_batch` (plain jit entry) and
+        `dispatch_device` (donating serve entry): padded operands → the
+        compile-once program → eager slice epilogue."""
         n = users.shape[0]
-        if self._mode is None or k > n:
-            # k > n: the shared selection (partition at k−1) needs k ≤ n
-            # of REAL rows for the sentinel proof; hand the degenerate
-            # case to the inner backend for identical error behavior
-            if delta is None:
-                return self.inner.query_batch(rt, users, qs, k=k, c=c)
-            return self.inner.query_batch(rt, users, qs, k=k, c=c,
-                                          delta=delta)
         rt_p, users_p, corr_p = self._padded_operands(rt, users, delta)
         m_kernel = int(rt.m) if self._mode == "fused" else -1
         with trace.span("elastic.dispatch", n=n, batch=qs.shape[0], k=k):
-            res = _elastic_query(
+            res = program(
                 rt_p, users_p, qs, jnp.asarray(n, jnp.int32), corr_p,
                 jnp.float32(c), tile=self.tile,
                 use_kernel=self._mode == "fused", m_kernel=m_kernel,
@@ -490,6 +511,36 @@ class ElasticBackend(BK.QueryBackend):
         # a retrace of the query program — folding it in would key the
         # one compiled program on n and undo the whole point.
         return res._replace(r_lo=res.r_lo[:, :n], r_up=res.r_up[:, :n])
+
+    def query_batch(self, rt, users, qs, *, k, c, delta=None):
+        n = users.shape[0]
+        if self._mode is None or k > n:
+            # k > n: the shared selection (partition at k−1) needs k ≤ n
+            # of REAL rows for the sentinel proof; hand the degenerate
+            # case to the inner backend for identical error behavior
+            if delta is None:
+                return self.inner.query_batch(rt, users, qs, k=k, c=c)
+            return self.inner.query_batch(rt, users, qs, k=k, c=c,
+                                          delta=delta)
+        return self._query_via(_elastic_query, rt, users, qs,
+                               k=k, c=c, delta=delta)
+
+    def dispatch_device(self, rt, users, qs, *, k, c, delta=None):
+        """Serving dispatch (PR 10): one H2D for the tick's host query
+        block, then the DONATING jit entry — the block's device buffer is
+        tick-private (freshly staged here, never reused by the caller),
+        so on accelerators XLA reclaims it for outputs. Values are
+        bit-identical to `query_batch`: same compiled computation, only
+        buffer residency differs (on CPU it IS the same jit entry)."""
+        qs = jnp.asarray(qs)            # the tick's single H2D
+        n = users.shape[0]
+        if self._mode is None or k > n:
+            if delta is None:
+                return self.inner.dispatch_device(rt, users, qs, k=k, c=c)
+            return self.inner.dispatch_device(rt, users, qs, k=k, c=c,
+                                              delta=delta)
+        return self._query_via(_elastic_query_serve, rt, users, qs,
+                               k=k, c=c, delta=delta)
 
 
 @BK.register_wrapper("elastic")

@@ -289,6 +289,34 @@ class ReverseKRanksEngine:
             return self._backend.query_batch(snap.rank_table, users, qs,
                                              k=k, c=c, delta=snap.corr)
 
+    def dispatch_batch_at(self, snap: IndexSnapshot, qs, k: int,
+                          c: float) -> QueryResult:
+        """Non-blocking serving twin of `query_batch_at` (PR 10): a HOST
+        (numpy) query block in, DEVICE-HANDLE QueryResult out. Routed
+        through the backend's donation-safe `dispatch_device` entry — one
+        H2D stages the tick, the computation is dispatched async, and no
+        host sync happens on this thread; the scheduler's completion
+        stage performs the tick's single D2H. Results are bit-identical
+        to `query_batch_at` on the same block."""
+        if qs.ndim != 2:
+            raise ValueError(
+                f"dispatch_batch_at expects (B, d) queries; got {qs.shape}")
+        users = snap.query_users()
+        reg = obs.get_default()
+        reg.counter("engine_queries_total",
+                    "queries executed (batch-expanded)").inc(qs.shape[0])
+        if snap.corr is None:
+            return self._backend.dispatch_device(snap.rank_table, users,
+                                                 qs, k=k, c=c)
+        reg.counter("engine_delta_queries_total",
+                    "queries served through delta corrections"
+                    ).inc(qs.shape[0])
+        with trace.span("engine.delta_correct", batch=qs.shape[0],
+                        epoch=snap.epoch):
+            return self._backend.dispatch_device(snap.rank_table, users,
+                                                 qs, k=k, c=c,
+                                                 delta=snap.corr)
+
     def query_batch(self, qs: jax.Array, k: int, c: float) -> QueryResult:
         """Batched queries: qs is (B, d); every field gains a leading B
         axis. One table pass serves the whole batch (see module doc)."""

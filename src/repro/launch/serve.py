@@ -104,6 +104,36 @@ Thread health: `maintenance_thread_alive` / `audit_thread_alive` are
 callback gauges — 0 at scrape time means the background thread died (a
 traceback was logged once); `maintenance_consecutive_failures` returning
 to 0 after a rebuild failure means the loop recovered on its own.
+
+Ops runbook (PR 10 — overlapped pipeline)
+-----------------------------------------
+--pipeline-depth N   how many dispatched ticks may be in flight at once
+                     (default 2, double-buffered): the scheduler cuts
+                     and launches tick t+1 while tick t's results are
+                     still on device; a separate completion stage does
+                     the tick's SINGLE blocking D2H off the dispatch
+                     path and resolves futures from there. Queries stay
+                     host-resident from submit to batch assembly (one
+                     H2D per tick, donated on accelerator backends), so
+                     `submit` never touches the device; under a caching
+                     backend an exact LRU hit resolves AT ADMISSION
+                     without occupying a queue or tick slot
+                     (`serve_admission_hits_total`). Results are
+                     bit-identical at every depth — 1 is the synchronous
+                     schedule (stop-and-wait), worth choosing on
+                     single-core CPU hosts where there is no transfer
+                     latency to hide and eager tick cutting only adds
+                     tail latency; ≥ 2 pays off where dispatch and D2H
+                     are genuinely asynchronous (GPU/TPU).
+Saturation           find this host's throughput knee (the offered load
+                     where p99 > 2×p50) with the offered-load ramp:
+                     `python -m benchmarks.perf_engine --serve
+                     --saturate [--json out.json]` — per-arm knee QPS
+                     and overlap efficiency land in the JSON; watch
+                     `serve_inflight_ticks` (gauge), `serve_transfer_ms`
+                     (the completion stage's D2H histogram) and the
+                     `ovl {..}` overlap-efficiency field in the stats
+                     line during a live run.
 """
 from __future__ import annotations
 
@@ -170,6 +200,10 @@ def main():
     ap.add_argument("--max-depth", type=int, default=None,
                     help="admission bound: submits beyond this queue depth "
                          "fail fast with QueueFull (default: unbounded)")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="ticks allowed in flight at once (PR 10): 1 = "
+                         "synchronous stop-and-wait, 2 = double-buffered "
+                         "overlap of dispatch and completion (default)")
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-request deadline: queued requests past it "
                          "are shed (DeadlineExceeded) instead of served "
@@ -307,7 +341,8 @@ def main():
     try:
         with MicroBatcher(eng, max_batch=B, max_wait_ms=args.max_wait_ms,
                           max_depth=args.max_depth,
-                          auditor=auditor, degrade=degrade) as mb:
+                          auditor=auditor, degrade=degrade,
+                          pipeline_depth=args.pipeline_depth) as mb:
             t0 = time.time()
             futs, accepted = [], []
             for i, q in enumerate(qs):

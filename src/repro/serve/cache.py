@@ -39,6 +39,7 @@ bounds, not (B, n)).
 """
 from __future__ import annotations
 
+import threading
 import weakref
 from collections import OrderedDict
 from typing import Optional
@@ -115,6 +116,12 @@ class CachingBackend(BK.QueryBackend):
                                   else int(quantize_key_bits))
         self._lru: "OrderedDict[tuple, QueryResult]" = OrderedDict()
         self._epoch: Optional[tuple] = None
+        # LRU/epoch state is touched from the scheduler's dispatcher
+        # thread AND (since PR 10) from client threads probing on the
+        # admission path (`MicroBatcher.submit` → `lookup_only`) — an
+        # RLock because `query_batch`'s guarded insert loop calls the
+        # guarded `_insert`.
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -159,8 +166,9 @@ class CachingBackend(BK.QueryBackend):
         return self.inner.bound_ranks(rt, users, qs)
 
     def clear(self) -> None:
-        self._lru.clear()
-        self._epoch = None
+        with self._lock:
+            self._lru.clear()
+            self._epoch = None
 
     def build_index(self, users, items, cfg, key):
         """Builds run on the wrapped backend's substrate."""
@@ -198,55 +206,91 @@ class CachingBackend(BK.QueryBackend):
             self._epoch = tuple(weakref.ref(a) for a in arrays)
 
     def _insert(self, key: tuple, res: QueryResult) -> None:
-        self._lru[key] = res
-        self._lru.move_to_end(key)
-        while len(self._lru) > self.capacity:
-            self._lru.popitem(last=False)
-            self.evictions += 1
-            self._m_evictions.inc()
-        self._m_size.set(len(self._lru))
+        with self._lock:
+            self._lru[key] = res
+            self._lru.move_to_end(key)
+            while len(self._lru) > self.capacity:
+                self._lru.popitem(last=False)
+                self.evictions += 1
+                self._m_evictions.inc()
+            self._m_size.set(len(self._lru))
 
-    def lookup_only(self, rt, users, row, *, k, c, delta=None):
-        """LRU probe WITHOUT dispatch (degrade rung 3, cache-only
-        serving — repro.serve.degrade): the cached per-query QueryResult
+    def lookup_only(self, rt, users, row, *, k, c, delta=None,
+                    record_miss: bool = True):
+        """LRU probe WITHOUT dispatch: the cached per-query QueryResult
         if this exact (query, k, c) is live for the CURRENT index
-        generation, else None. Never touches the inner backend."""
-        self._check_epoch(rt, users, delta)
-        key = (self._key_bytes(np.asarray(row)), int(k), float(c))
-        cached = self._lru.get(key)
-        if cached is None:
-            self.misses += 1
-            self._m_misses.inc()
-            return None
-        self._lru.move_to_end(key)
-        self.hits += 1
+        generation, else None. Never touches the inner backend. Two
+        callers (repro.serve): the cache-only degrade rung 3, and the
+        scheduler's ADMISSION path (PR 10 — a hit resolves at submit and
+        never occupies a tick slot). The admission path passes
+        `record_miss=False`: its misses go on to dispatch through
+        `query_batch`, which counts them — double-counting would skew the
+        hit-rate dashboards."""
+        with self._lock:
+            self._check_epoch(rt, users, delta)
+            key = (self._key_bytes(np.asarray(row)), int(k), float(c))
+            cached = self._lru.get(key)
+            if cached is None:
+                if record_miss:
+                    self.misses += 1
+                    self._m_misses.inc()
+                return None
+            self._lru.move_to_end(key)
+            self.hits += 1
         self._m_hits.inc()
         return cached
 
     # -------------------------------------------------------------- query
-    def query_batch(self, rt, users, qs, *, k, c, delta=None):
-        self._check_epoch(rt, users, delta)
-        rows = np.asarray(jax.device_get(qs))
+    def _lookup_batch(self, rt, users, rows, *, k, c, delta):
+        """Shared lookup phase over HOST query rows: per-row LRU probe
+        under the lock. Returns (keys, per_query, miss_order) — the
+        dispatch entries (`query_batch`, `dispatch_device`) execute the
+        deduped miss block their own way and hand the result to
+        `_finish_batch`."""
         with trace.span("cache.lookup", batch=rows.shape[0]) as sp:
-            keys = [(self._key_bytes(rows[i]), int(k), float(c))
-                    for i in range(rows.shape[0])]
+            with self._lock:
+                self._check_epoch(rt, users, delta)
+                keys = [(self._key_bytes(rows[i]), int(k), float(c))
+                        for i in range(rows.shape[0])]
 
-            per_query: list = [None] * len(keys)
-            miss_order: "OrderedDict[tuple, int]" = OrderedDict()
-            for i, key in enumerate(keys):
-                cached = self._lru.get(key)
-                if cached is not None:
-                    self._lru.move_to_end(key)
-                    per_query[i] = cached
-                    self.hits += 1
-                else:
-                    miss_order.setdefault(key, i)  # dedupe: first occurrence
-                    self.misses += 1
+                per_query: list = [None] * len(keys)
+                miss_order: "OrderedDict[tuple, int]" = OrderedDict()
+                for i, key in enumerate(keys):
+                    cached = self._lru.get(key)
+                    if cached is not None:
+                        self._lru.move_to_end(key)
+                        per_query[i] = cached
+                        self.hits += 1
+                    else:
+                        miss_order.setdefault(key, i)  # dedupe: first seen
+                        self.misses += 1
             n_miss = len(keys) - sum(r is not None for r in per_query)
             sp.set(hits=len(keys) - n_miss, misses=n_miss)
         self._m_hits.inc(len(keys) - n_miss)
         self._m_misses.inc(n_miss)
+        return keys, per_query, miss_order
 
+    def _finish_batch(self, keys, per_query, miss_order, res):
+        """Insert the miss block's per-query slices and assemble the
+        tick's stacked QueryResult (tick-local results survive assembly
+        even when the LRU is smaller than the tick's own unique-miss
+        count)."""
+        if miss_order:
+            fresh = {}
+            for j, key in enumerate(miss_order):
+                one = jax.tree_util.tree_map(lambda x, j=j: x[j], res)
+                fresh[key] = one
+                self._insert(key, one)
+            for i, key in enumerate(keys):
+                if per_query[i] is None:
+                    per_query[i] = fresh[key]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_query)
+
+    def query_batch(self, rt, users, qs, *, k, c, delta=None):
+        rows = np.asarray(jax.device_get(qs))
+        keys, per_query, miss_order = self._lookup_batch(
+            rt, users, rows, k=k, c=c, delta=delta)
+        res = None
         if miss_order:
             idx = list(miss_order.values())
             block = qs[jnp.asarray(idx)]
@@ -261,18 +305,29 @@ class CachingBackend(BK.QueryBackend):
             else:
                 res = self.inner.query_batch(rt, users, block, k=k, c=c,
                                              delta=delta)
-            # Tick-local results survive assembly even when the LRU is
-            # smaller than the tick's own unique-miss count.
-            fresh = {}
-            for j, key in enumerate(miss_order):
-                one = jax.tree_util.tree_map(lambda x, j=j: x[j], res)
-                fresh[key] = one
-                self._insert(key, one)
-            for i, key in enumerate(keys):
-                if per_query[i] is None:
-                    per_query[i] = fresh[key]
+        return self._finish_batch(keys, per_query, miss_order, res)
 
-        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_query)
+    def dispatch_device(self, rt, users, qs, *, k, c, delta=None):
+        """Serving entry (PR 10): HOST query rows in, device handles out.
+        Keying needs host bytes — exactly what the scheduler now keeps —
+        so the lookup pays zero transfers; only the deduped MISS block is
+        gathered host-side and staged by the inner `dispatch_device`'s
+        single H2D. Hits are device-resident cached per-query results, so
+        the assembled stack is device handles either way, with no host
+        sync on this path. Values are bit-identical to `query_batch`
+        (same miss block bytes, same inner computation)."""
+        rows = np.asarray(jax.device_get(qs))   # no-op for host arrays
+        keys, per_query, miss_order = self._lookup_batch(
+            rt, users, rows, k=k, c=c, delta=delta)
+        res = None
+        if miss_order:
+            idx = list(miss_order.values())
+            block = rows[idx]
+            if len(idx) < _MIN_DISPATCH <= len(keys):
+                block = np.concatenate([block, block[-1:]])
+            res = self.inner.dispatch_device(rt, users, block, k=k, c=c,
+                                             delta=delta)
+        return self._finish_batch(keys, per_query, miss_order, res)
 
 
 @BK.register_wrapper("cached")

@@ -18,6 +18,12 @@ Sites (the catalog; also ROADMAP "Robustness"):
                        `InjectedFault` (typed, never torn)
   serve.slow_tick      same place, mode="sleep" — injected dispatch latency
                        (deadline pressure without load)
+  serve.transfer       inside the scheduler's COMPLETION stage (PR 10),
+                       before the tick's single D2H `jax.device_get` — a
+                       raise fails exactly that tick's futures with
+                       `InjectedFault` while later in-flight ticks keep
+                       completing; mode="sleep" models a slow host
+                       read-back (transfer-bound deadline pressure)
   index.rebuild        top of `ReverseKRanksEngine.rebuild` — a failing
                        Algorithm-1 build (exercises the maintenance loop's
                        backoff + recovery)
@@ -80,6 +86,7 @@ from repro.obs import registry as obs
 SITES = (
     "serve.dispatch",
     "serve.slow_tick",
+    "serve.transfer",
     "index.rebuild",
     "index.publish",
     "maintenance.loop",

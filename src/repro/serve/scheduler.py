@@ -84,8 +84,45 @@ tick cut and the tick dispatches at its current rung — rung 2 widens the
 served contract to c_eff = c · widen_c (still a certified
 c_eff-approximation, recorded in `TickStats.degrade_level` and audited
 at c_eff), rung 3 serves LRU hits only and sheds misses. Fault-injection
-sites `serve.dispatch` / `serve.slow_tick` (repro.serve.faults) live at
-the top of the dispatch path, one flag check when disabled.
+sites `serve.dispatch` / `serve.slow_tick` / `serve.transfer`
+(repro.serve.faults) live at the top of the dispatch and completion
+paths, one flag check each when disabled.
+
+Overlapped pipeline (PR 10)
+---------------------------
+The hot path is DOUBLE-BUFFERED: a dispatch stage (the dispatcher
+thread) and a completion stage (a second thread) connected by a bounded
+in-flight queue of ≤ `pipeline_depth` ticks. JAX dispatch is async — the
+engine call returns unmaterialized device arrays immediately — so the
+old stop-and-wait loop (`device_get` inline in the dispatch path) left
+the accelerator idle for the whole host side of every tick: D2H readback,
+per-request view splitting, future resolution, stats. Now the dispatcher
+cuts and dispatches tick t+1 while tick t's device work is still in
+flight; the completion stage performs each tick's SINGLE blocking D2H
+(`serve.transfer` span) off the dispatch path and resolves futures from
+there, in dispatch (FIFO) order.
+
+Data stays device-resident end-to-end: `submit` keeps queries as HOST
+numpy (no per-request H2D), tick assembly stacks and edge-pads in numpy,
+and the whole tick pays exactly one H2D through the engine's
+`dispatch_batch_at` → backend `dispatch_device` entry (which on
+accelerators donates the tick-private block buffer back to XLA). When
+the engine's backend composes a `CachingBackend`, the LRU lookup is
+folded into the ADMISSION path: a `submit` whose exact (query, k, c) is
+cached for the live snapshot resolves immediately and never occupies a
+queue or tick slot (`ServeStats.admission_hits`).
+
+Results are BIT-IDENTICAL to synchronous dispatch — the pipeline moves
+buffers and threads, never values — and every PR 9 invariant holds with
+ticks in flight: a completion-stage failure (e.g. an injected
+`serve.transfer` fault) fails exactly that tick's futures typed and
+re-credits its reject/expiry attribution to the next cut or the terminal
+flush; `close(drain_s=...)` bounds the drain with ≥ 1 tick in flight and
+never tears a future; `pipeline_depth=1` degenerates to the synchronous
+schedule (the A/B baseline `benchmarks/perf_engine.py --serve
+--saturate` measures overlap against). `TickStats.inflight` records the
+pipeline occupancy at each dispatch; `ServeStats.overlap_efficiency` is
+the fraction of ticks that actually overlapped another.
 """
 from __future__ import annotations
 
@@ -188,6 +225,12 @@ class TickStats:
     # A terminal record (batch == 0) is flushed at close() when rejects
     # arrived after the last dispatched tick — every rejection is
     # attributed to exactly one TickStats.
+    # Pipeline observability (PR 10): the tick's single D2H readback
+    # time in the completion stage, and the in-flight tick count at the
+    # moment this tick was dispatched (self included — 1 means it did
+    # not overlap anything; ≥ 2 is the pipelined steady state).
+    transfer_ms: float = 0.0
+    inflight: int = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -203,12 +246,19 @@ class ServeStats:
     rejected: int = 0          # submits rejected by the max_depth bound
     depth_hwm: int = 0         # queue-depth high-watermark
     expired: int = 0           # requests shed by deadline (admission+sweep)
+    # PR 10: submits resolved from the LRU on the admission path (their
+    # latencies are pooled into the percentiles; they occupy no tick),
+    # and the fraction of dispatched ticks that overlapped ≥ 1 other
+    # in-flight tick (the pipeline's utilization signal).
+    admission_hits: int = 0
+    overlap_efficiency: float = 0.0
 
     def __str__(self):
         return (f"{self.requests} reqs / {self.ticks} ticks  "
                 f"fill {self.mean_fill:.2f}  depth {self.mean_queue_depth:.1f}"
                 f" (hwm {self.depth_hwm})  rej {self.rejected}"
-                f"  exp {self.expired}"
+                f"  exp {self.expired}  adm {self.admission_hits}"
+                f"  ovl {self.overlap_efficiency:.2f}"
                 f"  p50 {self.p50_ms:.2f} ms  p99 {self.p99_ms:.2f} ms")
 
 
@@ -216,9 +266,9 @@ class _Request:
     __slots__ = ("q", "k", "c", "future", "t_submit", "t_deadline")
 
     def __init__(self, q, k, c, deadline_ms=None):
-        self.q = q
-        self.k = int(k)
-        self.c = float(c)
+        self.q = q                      # HOST numpy row (PR 10): queries
+        self.k = int(k)                 # stay host-side until the tick's
+        self.c = float(c)               # single H2D at assembly
         self.future: Future = Future()
         self.t_submit = time.monotonic()
         # absolute monotonic deadline; None = no latency budget
@@ -228,6 +278,32 @@ class _Request:
     @property
     def key(self):
         return (self.k, self.c)
+
+
+class _InflightTick:
+    """One dispatched-but-uncompleted tick: the unit the completion stage
+    consumes. `res` holds the engine call's UNMATERIALIZED device arrays
+    (JAX async dispatch) — nothing here has blocked on the device yet."""
+
+    __slots__ = ("reqs", "res", "snap", "epoch", "k", "c_eff", "depth",
+                 "rejected", "expired", "level", "t_dispatch", "compiles",
+                 "inflight")
+
+    def __init__(self, reqs, res, snap, epoch, k, c_eff, depth, rejected,
+                 expired, level, t_dispatch, compiles):
+        self.reqs = reqs
+        self.res = res
+        self.snap = snap
+        self.epoch = epoch
+        self.k = k
+        self.c_eff = c_eff
+        self.depth = depth
+        self.rejected = rejected
+        self.expired = expired
+        self.level = level
+        self.t_dispatch = t_dispatch
+        self.compiles = compiles
+        self.inflight = 1       # occupancy at dispatch; set at append
 
 
 class MicroBatcher:
@@ -247,7 +323,7 @@ class MicroBatcher:
 
     def __init__(self, engine, *, max_batch: int = 16,
                  max_wait_ms: float = 2.0, max_depth: Optional[int] = None,
-                 auditor=None, degrade=None):
+                 auditor=None, degrade=None, pipeline_depth: int = 2):
         # Width 1 is rejected, not padded around: the module's partial-tick
         # bit-identity argument needs every dispatch ≥ 2 wide (matvec
         # lowering caveat, module doc), and a max_batch=1 scheduler could
@@ -260,10 +336,17 @@ class MicroBatcher:
             raise ValueError(f"max_wait_ms must be >= 0, got {max_wait_ms}")
         if max_depth is not None and max_depth < 1:
             raise ValueError(f"max_depth must be >= 1, got {max_depth}")
+        if pipeline_depth < 1:
+            raise ValueError(
+                f"pipeline_depth must be >= 1, got {pipeline_depth}")
         self.engine = engine
         self.max_batch = int(max_batch)
         self.max_wait_ms = float(max_wait_ms)
         self.max_depth = None if max_depth is None else int(max_depth)
+        # Ticks allowed in flight (dispatched, not yet completed): 1 is
+        # the synchronous schedule, 2 the double-buffered default — the
+        # completion stage of tick t overlaps the device work of t+1.
+        self.pipeline_depth = int(pipeline_depth)
         # Optional shadow auditor (repro.obs.audit.QualityAuditor): every
         # resolved request is OFFERED to it with the pinned snapshot; the
         # auditor samples and re-scores off-thread, never blocking ticks.
@@ -296,6 +379,14 @@ class MicroBatcher:
             "serve_request_latency_ms", "submit → resolve latency")
         self._m_wait = reg.histogram(
             "serve_queue_wait_ms", "submit → dispatch queue wait")
+        self._m_inflight = reg.gauge(
+            "serve_inflight_ticks",
+            "ticks dispatched but not yet completed")
+        self._m_transfer = reg.histogram(
+            "serve_transfer_ms", "per-tick D2H readback time")
+        self._m_admission = reg.counter(
+            "serve_admission_hits_total",
+            "submits resolved from the LRU at admission")
         self._queue: Deque[_Request] = deque()
         self._cond = threading.Condition()
         self._stop = False
@@ -309,9 +400,33 @@ class MicroBatcher:
         self._expired_total = 0
         self._expired_since_tick = 0
         self._depth_hwm = 0
+        # The pipeline's bounded in-flight queue: dispatch appends,
+        # completion peeks/pops FIFO (so futures resolve in dispatch
+        # order and flush() sees a tick until it is fully resolved).
+        self._inflight: Deque[_InflightTick] = deque()
+        self._complete_stop = False
+        self._admission_hits = 0
+        self._admission_lat: List[float] = []
+        # Admission-path LRU (PR 10): when the engine's backend composes
+        # a CachingBackend AND the engine is snapshot-versioned, submit
+        # probes the cache first — a hit resolves immediately and never
+        # occupies a queue or tick slot.
+        self._admission_cache = None
+        if getattr(engine, "current_snapshot", None) is not None:
+            bk = getattr(engine, "_backend", None)
+            if bk is not None:
+                try:
+                    from repro.serve.degrade import find_cache
+                    self._admission_cache = find_cache(bk)
+                except Exception:
+                    self._admission_cache = None
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name="microbatcher")
+        self._complete_thread = threading.Thread(
+            target=self._completion_loop, daemon=True,
+            name="microbatcher-complete")
         self._thread.start()
+        self._complete_thread.start()
 
     # ------------------------------------------------------------- client
     def submit(self, q: jax.Array, k: int, c: float,
@@ -330,10 +445,20 @@ class MicroBatcher:
         `DeadlineExceeded`, and a queued request whose budget expires
         before its tick is cut is failed by the per-tick sweep (its
         Future raises `DeadlineExceeded`). After `close()`, submits
-        raise `SchedulerClosed` (reject reason `shutdown`)."""
-        q = jnp.asarray(q)
+        raise `SchedulerClosed` (reject reason `shutdown`).
+
+        PR 10: the query is kept as HOST numpy until tick assembly (no
+        per-submit H2D), and when the engine's backend composes a
+        CachingBackend an exact LRU hit for the live snapshot resolves
+        the Future right here — it never occupies a queue or tick slot
+        (`ServeStats.admission_hits`)."""
+        q = np.asarray(jax.device_get(q))
         if q.ndim != 1:
             raise ValueError(f"submit expects a (d,) query; got {q.shape}")
+        if q.dtype == np.float64:
+            # mirror jnp.asarray's default-dtype conversion (x64 off) so
+            # host-resident submission changes no tick bytes
+            q = q.astype(np.float32)
         if deadline_ms is not None and deadline_ms <= 0:
             # already expired at admission: shed before it can take a
             # queue slot, let alone a tick slot
@@ -343,6 +468,10 @@ class MicroBatcher:
             self._m_reject_reason["deadline"].inc()
             raise DeadlineExceeded(
                 f"deadline_ms={deadline_ms} already expired at submit")
+        if self._admission_cache is not None and not self._stop:
+            fut = self._admission_probe(q, int(k), float(c))
+            if fut is not None:
+                return fut
         req = _Request(q, k, c, deadline_ms=deadline_ms)
         with self._cond:
             if self._stop:
@@ -366,13 +495,47 @@ class MicroBatcher:
         self._m_submitted.inc()
         return req.future
 
+    def _admission_probe(self, q: np.ndarray, k: int,
+                         c: float) -> Optional[Future]:
+        """LRU probe on the admission path: a resolved Future when the
+        exact (query, k, c) is cached for the live snapshot, else None
+        (the request then takes the normal queue path). Misses are not
+        counted against the cache's hit-rate (`record_miss=False`) —
+        they go on to dispatch through the backend, which counts them.
+        Probe failures (e.g. an engine mid-teardown) degrade to the
+        queue path rather than failing the submit."""
+        t0 = time.monotonic()
+        try:
+            snap = self.engine.current_snapshot()
+            res = self._admission_cache.lookup_only(
+                snap.rank_table, snap.query_users(), q, k=k, c=c,
+                delta=snap.corr, record_miss=False)
+        except Exception:
+            return None
+        if res is None:
+            return None
+        host = jax.device_get(res)
+        lat_ms = (time.monotonic() - t0) * 1e3
+        with self._cond:
+            self._admission_hits += 1
+            self._admission_lat.append(lat_ms)
+        self._m_submitted.inc()
+        self._m_admission.inc()
+        self._m_latency.observe(lat_ms)
+        fut: Future = Future()
+        fut.set_result(host)
+        if self.auditor is not None:
+            self.auditor.observe(np.asarray(q), host, k=k, c=c,
+                                 snapshot=snap)
+        return fut
+
     def flush(self) -> None:
         """Dispatch everything queued without waiting out `max_wait_ms`,
         and block until all accepted requests have resolved."""
         with self._cond:
             self._flush = True
             self._cond.notify_all()
-            while self._queue or self._busy:
+            while self._queue or self._busy or self._inflight:
                 self._cond.wait(timeout=0.05)
             self._flush = False
 
@@ -393,6 +556,11 @@ class MicroBatcher:
                 self._drain_deadline = time.monotonic() + float(drain_s)
             self._cond.notify_all()
         self._thread.join()
+        # The dispatcher's exit signalled the completion stage to drain
+        # the remaining in-flight ticks and flush the terminal record;
+        # joining it makes close() a full barrier (every accepted Future
+        # resolved, every reject attributed) exactly as before.
+        self._complete_thread.join()
 
     def __enter__(self):
         return self
@@ -401,20 +569,25 @@ class MicroBatcher:
         self.close()
 
     def stats(self) -> ServeStats:
-        """Aggregate tick statistics (p50/p99 over request latencies)."""
+        """Aggregate tick statistics (p50/p99 over request latencies,
+        admission-path hits pooled in)."""
         with self._cond:            # one atomic snapshot of ticks+counters
             ticks = list(self._ticks)
             rejected, hwm = self._rejected_total, self._depth_hwm
             expired = self._expired_total
-        if not ticks:
+            adm = self._admission_hits
+            adm_lat = list(self._admission_lat)
+        if not ticks and not adm_lat:
             return ServeStats(0, 0, 0.0, 0.0, 0.0, 0.0, rejected=rejected,
-                              depth_hwm=hwm, expired=expired)
+                              depth_hwm=hwm, expired=expired,
+                              admission_hits=adm)
         # The terminal rejection record (batch == 0, no latencies) is an
         # accounting tick: it carries rejects into the aggregate but must
         # not skew the dispatch-shape means or crash the percentiles.
         dispatched = [t for t in ticks if t.batch > 0]
         lats = np.concatenate(
-            [np.asarray(t.latencies_ms, dtype=float) for t in ticks])
+            [np.asarray(t.latencies_ms, dtype=float) for t in ticks]
+            + [np.asarray(adm_lat, dtype=float)])
         return ServeStats(
             ticks=len(ticks),
             requests=int(lats.size),
@@ -428,6 +601,10 @@ class MicroBatcher:
             rejected=rejected,
             depth_hwm=hwm,
             expired=expired,
+            admission_hits=adm,
+            overlap_efficiency=(
+                float(np.mean([t.inflight > 1 for t in dispatched]))
+                if dispatched else 0.0),
         )
 
     @property
@@ -508,60 +685,70 @@ class MicroBatcher:
                     self._rejected_since_tick += len(drained)
                 if not self._queue:
                     if self._stop:      # stop requested, queue drained
-                        # Rejects/expiries that arrived AFTER the last
-                        # tick was cut would otherwise vanish (they are
-                        # only read at the next cut, and there is no next
-                        # cut): flush them into a terminal accounting
-                        # record so ServeStats and tick_log stay complete
-                        # under close().
-                        tail = self._rejected_since_tick
-                        self._rejected_since_tick = 0
-                        tail_exp = self._expired_since_tick
-                        self._expired_since_tick = 0
-                        if tail or tail_exp:
-                            self._ticks.append(TickStats(
-                                batch=0, queue_depth=0, fill_ratio=0.0,
-                                wait_ms=0.0, latencies_ms=(),
-                                rejected=tail, expired=tail_exp))
+                        # Hand off to the completion stage: in-flight
+                        # ticks may still fail and re-credit their
+                        # reject/expiry attribution, so the terminal
+                        # accounting record is flushed THERE, after the
+                        # pipeline drains (`_completion_loop`).
+                        self._complete_stop = True
+                        self._cond.notify_all()
                         terminal = True
                     # else: the sweep emptied the queue mid-serve — fail
                     # the shed futures below and go back to waiting
                 else:
-                    head = self._queue[0]
-                    deadline = head.t_submit + self.max_wait_ms / 1e3
-                    while (self._full_key() is None
-                           and not (self._stop or self._flush)):
-                        remaining = deadline - time.monotonic()
-                        if remaining <= 0:
+                    # Pipeline back-pressure: at most `pipeline_depth`
+                    # ticks in flight; completion pops wake this wait. A
+                    # bounded drain that expires while waiting falls
+                    # through (reqs stays None) to the top-of-loop shed
+                    # instead of cutting past the depth bound.
+                    while len(self._inflight) >= self.pipeline_depth:
+                        if (self._stop and self._drain_deadline is not None
+                                and time.monotonic()
+                                >= self._drain_deadline):
                             break
-                        self._cond.wait(timeout=remaining)
-                    # late sweep: a request whose budget ran out DURING
-                    # the coalescing wait must not take a tick slot
-                    expired += self._sweep_expired(time.monotonic())
-                    if self._queue:
-                        # a full group anywhere in the queue outranks the
-                        # partial head tick; the head still dispatches by
-                        # its deadline
-                        key = self._full_key() or self._queue[0].key
-                        reqs, rest = [], deque()
-                        while self._queue:
-                            r = self._queue.popleft()
-                            if r.key == key and len(reqs) < self.max_batch:
-                                reqs.append(r)
-                            else:
-                                rest.append(r)
-                        depth = len(reqs) + len(rest)
-                        self._queue = rest
-                        rejected = self._rejected_since_tick
-                        self._rejected_since_tick = 0
-                        n_expired = self._expired_since_tick
-                        self._expired_since_tick = 0
-                        # degrade rung for this tick, from the queue
-                        # depth observed at the cut (hysteresis inside
-                        # the controller — repro.serve.degrade)
-                        level = (self.degrade.on_tick_cut(depth)
-                                 if self.degrade is not None else 0)
-                        self._busy = True
+                        self._cond.wait(timeout=0.05)
+                    if len(self._inflight) < self.pipeline_depth:
+                        # a budget may have lapsed during the slot wait
+                        expired += self._sweep_expired(time.monotonic())
+                    if (len(self._inflight) < self.pipeline_depth
+                            and self._queue):
+                        head = self._queue[0]
+                        deadline = head.t_submit + self.max_wait_ms / 1e3
+                        while (self._full_key() is None
+                               and not (self._stop or self._flush)):
+                            remaining = deadline - time.monotonic()
+                            if remaining <= 0:
+                                break
+                            self._cond.wait(timeout=remaining)
+                        # late sweep: a request whose budget ran out
+                        # DURING the coalescing wait must not take a
+                        # tick slot
+                        expired += self._sweep_expired(time.monotonic())
+                        if self._queue:
+                            # a full group anywhere in the queue outranks
+                            # the partial head tick; the head still
+                            # dispatches by its deadline
+                            key = self._full_key() or self._queue[0].key
+                            reqs, rest = [], deque()
+                            while self._queue:
+                                r = self._queue.popleft()
+                                if (r.key == key
+                                        and len(reqs) < self.max_batch):
+                                    reqs.append(r)
+                                else:
+                                    rest.append(r)
+                            depth = len(reqs) + len(rest)
+                            self._queue = rest
+                            rejected = self._rejected_since_tick
+                            self._rejected_since_tick = 0
+                            n_expired = self._expired_since_tick
+                            self._expired_since_tick = 0
+                            # degrade rung for this tick, from the queue
+                            # depth observed at the cut (hysteresis
+                            # inside the controller — repro.serve.degrade)
+                            level = (self.degrade.on_tick_cut(depth)
+                                     if self.degrade is not None else 0)
+                            self._busy = True
             if expired:
                 self._fail_expired(expired)
             if drained:
@@ -577,8 +764,27 @@ class MicroBatcher:
                     self._busy = False
                     self._cond.notify_all()
 
+    def _assemble_block(self, reqs: List[_Request]) -> np.ndarray:
+        """Host-side tick assembly (PR 10): stack and edge-pad the HOST
+        query rows in numpy, so the whole tick pays exactly ONE H2D
+        (inside the backend's `dispatch_device`) instead of per-submit
+        transfers plus a device-side pad. Pad semantics match
+        `pad_block` exactly — same bytes, so bit-identity to the
+        synchronous path is preserved."""
+        qs = np.stack([r.q for r in reqs])
+        b = qs.shape[0]
+        if b < self.max_batch:
+            qs = np.concatenate(
+                [qs, np.broadcast_to(qs[-1:],
+                                     (self.max_batch - b, qs.shape[1]))])
+        return qs
+
     def _dispatch(self, reqs: List[_Request], depth: int, rejected: int = 0,
                   expired: int = 0, level: int = 0):
+        """DISPATCH stage: assemble, stage, and launch the tick's device
+        work, then hand an `_InflightTick` to the completion stage — no
+        host sync on this thread (the JAX dispatch returns unmaterialized
+        device arrays; `_complete` performs the single blocking D2H)."""
         t_dispatch = time.monotonic()
         k, c = reqs[0].key
         # rung 2+ of the degrade ladder dispatches at a WIDENED contract:
@@ -610,24 +816,27 @@ class MicroBatcher:
                     for r in reqs:
                         trace.event("serve.queue_wait", r.t_submit,
                                     t_dispatch - r.t_submit, k=k)
-                qs = pad_block(jnp.stack([r.q for r in reqs]),
-                               self.max_batch)
+                qs = self._assemble_block(reqs)
                 # Pin ONE index snapshot for the whole tick (module doc):
                 # a hot-swap concurrent with this dispatch lands between
                 # ticks, never inside one.
                 snap_fn = getattr(self.engine, "current_snapshot", None)
+                dispatch_fn = getattr(self.engine, "dispatch_batch_at",
+                                      None)
                 if snap_fn is not None:
                     snap = snap_fn()
                     epoch = getattr(snap, "epoch", None)
                     sp.set(epoch=epoch)
-                    res = self.engine.query_batch_at(snap, qs, k=k, c=c_eff)
+                    if dispatch_fn is not None:
+                        # the serving entry: one H2D, device handles out,
+                        # donation-safe on accelerators
+                        res = dispatch_fn(snap, qs, k=k, c=c_eff)
+                    else:
+                        res = self.engine.query_batch_at(
+                            snap, jnp.asarray(qs), k=k, c=c_eff)
                 else:
-                    res = self.engine.query_batch(qs, k=k, c=c_eff)
-                # One transfer for the whole tick: futures resolve to HOST
-                # (numpy) QueryResults — per-request row views are
-                # zero-copy, where B×fields device slices would dominate
-                # the tick cost.
-                host = jax.device_get(res)
+                    res = self.engine.query_batch(jnp.asarray(qs), k=k,
+                                                  c=c_eff)
         except Exception as e:                    # propagate to every caller
             for r in reqs:
                 if not r.future.cancelled():
@@ -639,15 +848,90 @@ class MicroBatcher:
                 self._rejected_since_tick += rejected
                 self._expired_since_tick += expired
             return
+        # Compile attribution is sampled HERE, not in the completion
+        # stage: tracing/compilation happens synchronously on this
+        # thread, so the delta cleanly brackets this tick's dispatch even
+        # with other ticks in flight.
+        tick = _InflightTick(
+            reqs, res, snap, epoch, k, c_eff, depth, rejected, expired,
+            level, t_dispatch,
+            compiles=max(0, _program_count() - programs_before))
+        with self._cond:
+            self._inflight.append(tick)
+            tick.inflight = len(self._inflight)
+            self._m_inflight.set(len(self._inflight))
+            self._cond.notify_all()
+
+    # --------------------------------------------------------- completion
+    def _completion_loop(self):
+        """COMPLETION stage: consume in-flight ticks FIFO, each with one
+        blocking D2H, and resolve futures — entirely off the dispatch
+        path. Exits after the dispatcher signals `_complete_stop` and the
+        pipeline drains, flushing the terminal accounting record last (a
+        completion-stage failure re-credits rejects, so the terminal
+        flush must come after the final tick settles)."""
+        while True:
+            with self._cond:
+                while not self._inflight and not self._complete_stop:
+                    self._cond.wait()
+                if not self._inflight:          # stopping and drained
+                    tail = self._rejected_since_tick
+                    self._rejected_since_tick = 0
+                    tail_exp = self._expired_since_tick
+                    self._expired_since_tick = 0
+                    if tail or tail_exp:
+                        self._ticks.append(TickStats(
+                            batch=0, queue_depth=0, fill_ratio=0.0,
+                            wait_ms=0.0, latencies_ms=(),
+                            rejected=tail, expired=tail_exp))
+                    self._cond.notify_all()
+                    return
+                # PEEK, don't pop: flush()/close() must keep seeing the
+                # tick until its futures are resolved.
+                tick = self._inflight[0]
+            self._complete(tick)
+            with self._cond:
+                self._inflight.popleft()
+                self._m_inflight.set(len(self._inflight))
+                self._cond.notify_all()
+
+    def _complete(self, t: _InflightTick):
+        reqs = t.reqs
+        t_transfer = time.monotonic()
+        try:
+            with trace.span("serve.transfer", batch=len(reqs),
+                            epoch=t.epoch, inflight=t.inflight):
+                if faults.ACTIVE is not None:
+                    faults.fire("serve.transfer")
+                # THE one blocking D2H per tick: futures resolve to HOST
+                # (numpy) QueryResults — per-request row views are
+                # zero-copy, where B×fields device slices would dominate
+                # the tick cost. A deferred dispatch error (async
+                # runtime) also surfaces here and is failed typed below.
+                host = jax.device_get(t.res)
+        except Exception as e:
+            # Fail exactly THIS tick's futures; later in-flight ticks
+            # keep completing. Reject/expiry attribution re-credits to
+            # the next cut or the terminal flush (PR 9 invariant: every
+            # reject lands in exactly one TickStats).
+            for r in reqs:
+                if not r.future.cancelled():
+                    r.future.set_exception(e)
+            with self._cond:
+                self._rejected_since_tick += t.rejected
+                self._expired_since_tick += t.expired
+            return
         now = time.monotonic()
+        transfer_ms = (now - t_transfer) * 1e3
         tick = TickStats(
-            batch=len(reqs), queue_depth=depth,
+            batch=len(reqs), queue_depth=t.depth,
             fill_ratio=len(reqs) / self.max_batch,
-            wait_ms=(t_dispatch - reqs[0].t_submit) * 1e3,
+            wait_ms=(t.t_dispatch - reqs[0].t_submit) * 1e3,
             latencies_ms=tuple((now - r.t_submit) * 1e3 for r in reqs),
-            rejected=rejected, epoch=epoch,
-            compiles=max(0, _program_count() - programs_before),
-            expired=expired, degrade_level=level)
+            rejected=t.rejected, epoch=t.epoch,
+            compiles=t.compiles,
+            expired=t.expired, degrade_level=t.level,
+            transfer_ms=transfer_ms, inflight=t.inflight)
         # Record the tick BEFORE resolving futures: a client that wakes
         # from f.result() must already see it in stats()/tick_log.
         with self._cond:
@@ -655,10 +939,11 @@ class MicroBatcher:
         self._m_ticks.inc()
         if tick.compiles:
             self._m_compiles.inc(tick.compiles)
-        self._m_depth.set(depth)
+        self._m_depth.set(t.depth)
         self._m_fill.set(tick.fill_ratio)
+        self._m_transfer.observe(transfer_ms)
         for r in reqs:
-            self._m_wait.observe((t_dispatch - r.t_submit) * 1e3)
+            self._m_wait.observe((t.t_dispatch - r.t_submit) * 1e3)
             self._m_latency.observe((now - r.t_submit) * 1e3)
         for i, r in enumerate(reqs):              # pad rows masked out here
             per_q = jax.tree_util.tree_map(lambda x, i=i: x[i], host)
@@ -668,8 +953,8 @@ class MicroBatcher:
                 # audited at the contract actually served (c_eff on
                 # degraded ticks) — the accuracy gauge judges the
                 # relaxed, REPORTED contract, not the requested one
-                self.auditor.observe(np.asarray(r.q), per_q, k=k, c=c_eff,
-                                     snapshot=snap)
+                self.auditor.observe(np.asarray(r.q), per_q, k=t.k,
+                                     c=t.c_eff, snapshot=t.snap)
 
     def _dispatch_cache_only(self, reqs: List[_Request], depth: int,
                              rejected: int, expired: int, level: int,
@@ -694,7 +979,7 @@ class MicroBatcher:
         with trace.span("serve.cache_only", batch=len(reqs), depth=depth,
                         k=k, epoch=epoch, level=level):
             for r in reqs:
-                row = np.asarray(jax.device_get(r.q))
+                row = np.asarray(r.q)       # host already (PR 10 submit)
                 # entries may have been cached at the base contract or at
                 # the rung-2 widened one — a hit at either serves
                 res, c_hit = None, c
@@ -707,7 +992,16 @@ class MicroBatcher:
                 if res is None:
                     misses.append(r)
                 else:
-                    hits.append((r, jax.device_get(res), c_hit))
+                    hits.append((r, res, c_hit))
+            if hits:
+                # ONE D2H for the whole rung-3 tick (the per-request
+                # device_get here was measurable: B blocking transfers
+                # per tick, exactly the pattern PR 10 removes). Cached
+                # entries are device-resident per-query QueryResults;
+                # device_get over the list batches them.
+                hosts = jax.device_get([res for _, res, _ in hits])
+                hits = [(r, h, c_hit) for (r, _, c_hit), h
+                        in zip(hits, hosts)]
         with self._cond:
             self._rejected_total += len(misses)
         now = time.monotonic()

@@ -202,7 +202,9 @@ def test_dispatch_fault_fails_tick_typed_and_recovers(problem):
     users, items = problem
     faults.install(faults.FaultPlan(seed=0, rules=[
         faults.FaultRule("serve.dispatch", mode="raise", max_fires=1)]))
-    with MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=0.5) as mb:
+    # a wide coalescing window keeps each MAX_BATCH burst in ONE tick even
+    # when the pipelined dispatcher (PR 10) is warm enough to cut early
+    with MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=50.0) as mb:
         bad = [mb.submit(items[i], K, C) for i in range(MAX_BATCH)]
         for f in bad:
             with pytest.raises(faults.InjectedFault):
@@ -353,3 +355,108 @@ def test_degraded_tick_recorded_at_widened_contract(problem):
     levels = [t.degrade_level for t in mb.tick_log]
     assert max(levels) == 2
     assert dc.widened_c(C) == 2.0 * C
+
+
+# ------------------------------------------- overlapped pipeline (PR 10)
+def test_cache_only_rung_batches_device_get(problem, monkeypatch):
+    """Rung 3 resolves ALL its LRU hits through ONE batched
+    `jax.device_get` — the per-request blocking transfer is gone."""
+    eng = _engine(problem, backend="cached:dense")
+    users, items = problem
+    hots = [items[i] for i in range(3)]
+    wants = [eng.query(h, k=K, c=C) for h in hots]     # warm the LRU
+    dc = DegradeController(DegradePolicy(high_depth=50, low_depth=1,
+                                         dwell_ticks=50),
+                           backend=eng._backend)
+    dc.level = 3                        # pin rung 3 (cache-only)
+    with MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=150.0,
+                      degrade=dc) as mb:
+        mb._admission_cache = None      # force hits down to the tick path
+        futs = [mb.submit(h, K, C) for h in hots]
+        calls = []
+        real = jax.device_get
+
+        def counting(x):
+            calls.append(x)
+            return real(x)
+
+        monkeypatch.setattr(jax, "device_get", counting)
+        got = [f.result(timeout=30) for f in futs]
+        monkeypatch.undo()
+    for g, w in zip(got, wants):
+        np.testing.assert_array_equal(np.asarray(g.indices),
+                                      np.asarray(w.indices))
+    assert len(calls) == 1, f"expected ONE batched D2H, saw {len(calls)}"
+    assert isinstance(calls[0], list) and len(calls[0]) == len(hots)
+
+
+def test_transfer_fault_fails_only_that_tick_and_recredits(problem):
+    """An injected `serve.transfer` failure (the completion stage's D2H)
+    fails exactly that tick's futures with `InjectedFault`; its reject
+    and expiry accounting is re-credited so conservation still holds,
+    and later ticks serve normally."""
+    eng = _engine(problem)
+    users, items = problem
+    faults.install(faults.FaultPlan(seed=0, rules=[
+        faults.FaultRule("serve.transfer", mode="raise", max_fires=1)]))
+    # wide coalescing window: each MAX_BATCH burst forms ONE tick
+    with MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=50.0) as mb:
+        # two requests whose budget lapses in-queue: swept before any
+        # cut, charged to the next DISPATCHED tick — which will fault
+        doomed = [mb.submit(items[9 + i], K, C, deadline_ms=1e-3)
+                  for i in range(2)]
+        time.sleep(0.01)
+        bad = [mb.submit(items[i], K, C) for i in range(MAX_BATCH)]
+        for f in doomed:
+            with pytest.raises(DeadlineExceeded):
+                f.result(timeout=10)
+        for f in bad:
+            with pytest.raises(faults.InjectedFault):
+                f.result(timeout=10)
+        good = [mb.submit(items[i], K, C) for i in range(MAX_BATCH)]
+        for f in good:
+            assert f.result(timeout=10).indices.shape == (K,)
+    st = mb.stats()
+    assert st.expired == 2
+    # the faulted tick re-credited its expiries: they land on exactly one
+    # surviving record, and reject conservation holds
+    assert sum(t.expired for t in mb.tick_log) == 2
+    assert sum(t.rejected for t in mb.tick_log) == st.rejected
+    assert sum(1 for t in mb.tick_log if t.batch > 0) == 1
+
+
+@pytest.mark.concurrency
+def test_close_with_two_ticks_in_flight_no_torn_futures(problem):
+    """close(drain_s=) while TWO ticks are in flight (slow transfer,
+    pipeline_depth=2): every accepted future terminates with a result or
+    a typed error — never pending — and shed accounting is exact."""
+    eng = _engine(problem)
+    users, items = problem
+    faults.install(faults.FaultPlan(seed=0, rules=[
+        faults.FaultRule("serve.transfer", mode="sleep", rate=1.0,
+                         latency_ms=50.0)]))
+    mb = MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=0.5,
+                      pipeline_depth=2)
+    futs = [mb.submit(items[i % items.shape[0]], K, C) for i in range(24)]
+    closer = threading.Thread(target=lambda: mb.close(drain_s=0.08))
+    closer.start()
+    closer.join(timeout=60)
+    assert not closer.is_alive()
+    resolved = shed = 0
+    for f in futs:
+        assert f.done(), "future left pending after close()"
+        try:
+            r = f.result(timeout=0)
+        except SchedulerClosed:
+            shed += 1
+        else:
+            resolved += 1
+            assert r.indices.shape == (K,)
+    assert resolved + shed == len(futs)
+    assert shed >= 1
+    st = mb.stats()
+    assert st.rejected == shed
+    assert sum(t.rejected for t in mb.tick_log) == st.rejected
+    # the pipeline genuinely overlapped while draining
+    assert max((t.inflight for t in mb.tick_log if t.batch > 0),
+               default=0) >= 2

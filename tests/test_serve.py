@@ -509,3 +509,199 @@ else:  # pragma: no cover - optional dep absent
     @pytest.mark.skip(reason="hypothesis not installed (optional test extra)")
     def test_random_arrival_patterns():
         pass
+
+
+# ---------------------------------------------- overlapped pipeline (PR 10)
+class _SlowLeaf:
+    """A host-readback leaf whose materialization sleeps: models a device
+    result whose D2H is slow, so the completion stage lags dispatch and
+    ticks verifiably pile up in flight — without touching real devices."""
+
+    def __init__(self, arr, delay_s):
+        self.arr = np.asarray(arr)
+        self.delay_s = float(delay_s)
+
+    def __array__(self, dtype=None, copy=None):
+        time.sleep(self.delay_s)
+        return np.asarray(self.arr, dtype)
+
+
+class _EchoResult(tuple):
+    pass
+
+
+from typing import NamedTuple as _NamedTuple
+
+
+class _Echo(_NamedTuple):
+    rows: object
+
+
+class _SlowReadbackEngine:
+    """Duck engine: dispatch is instant (async-dispatch analogue), the
+    result's host readback sleeps `delay_s`. Echoes the query block so
+    per-request results identify their query."""
+
+    def __init__(self, delay_s=0.03):
+        self.delay_s = float(delay_s)
+        self.calls = 0
+
+    def query_batch(self, qs, *, k, c):
+        self.calls += 1
+        return _Echo(_SlowLeaf(np.asarray(qs), self.delay_s))
+
+
+def _pipe_engine(problem, rank_table, backend, storage="float32"):
+    users, items = problem
+    cfg = RankTableConfig(tau=16, omega=4, s=8, storage_dtype=storage)
+    rt = (rank_table if storage == "float32"
+          else build_rank_table(users, items, cfg, jax.random.PRNGKey(1)))
+    return ReverseKRanksEngine(users=users, rank_table=rt, config=cfg,
+                               backend=backend)
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+@pytest.mark.parametrize("storage", ["float32", "int8"])
+@pytest.mark.parametrize("size", [3, 2 * MAX_BATCH + 3])
+def test_pipelined_vs_sync_bit_identity(problem, rank_table, backend,
+                                        storage, size):
+    """The tentpole contract: the double-buffered pipeline returns
+    results bit-identical to the synchronous schedule (pipeline_depth=1)
+    AND to direct query_batch, per backend × storage spec, for partial
+    and multi-tick request streams."""
+    eng = _pipe_engine(problem, rank_table, backend, storage)
+    users, items = problem
+    base = items[(1 + jnp.arange(size) * 7) % items.shape[0]]
+    qs = base * (1.0 + 1e-4 * jax.random.normal(
+        jax.random.PRNGKey(11), base.shape, jnp.float32))
+    direct = eng.query_batch(qs, k=K, c=C)
+
+    def run(depth):
+        with MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=25.0,
+                          pipeline_depth=depth) as mb:
+            futs = [mb.submit(q, K, C) for q in qs]
+            return [f.result(timeout=120) for f in futs]
+
+    piped, sync = run(2), run(1)
+    for i, (p, s) in enumerate(zip(piped, sync)):
+        want = jax.tree_util.tree_map(lambda x, i=i: x[i], direct)
+        assert_bitwise(p, want)
+        assert_bitwise(p, s)
+
+
+def test_pipeline_depth_validation(problem, rank_table):
+    eng = _engine(problem, rank_table, "dense")
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        MicroBatcher(eng, max_batch=MAX_BATCH, pipeline_depth=0)
+
+
+@pytest.mark.concurrency
+def test_pipeline_overlaps_ticks_and_bounds_inflight():
+    """With a slow completion stage, the dispatcher keeps cutting ticks
+    until `pipeline_depth` are in flight — and never past it; the
+    synchronous schedule (depth 1) never overlaps."""
+    d = 8
+    qs = np.random.default_rng(0).standard_normal(
+        (4 * MAX_BATCH, d)).astype(np.float32)
+
+    def run(depth):
+        eng = _SlowReadbackEngine(delay_s=0.03)
+        with MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=1.0,
+                          pipeline_depth=depth) as mb:
+            futs = [mb.submit(q, K, C) for q in qs]
+            for i, f in enumerate(futs):
+                got = f.result(timeout=60)
+                np.testing.assert_array_equal(got.rows, qs[i])
+        return mb.tick_log, mb.stats()
+
+    log2, st2 = run(2)
+    assert max(t.inflight for t in log2) == 2      # overlapped, bounded
+    assert st2.overlap_efficiency > 0.0
+    log1, st1 = run(1)
+    assert max(t.inflight for t in log1) == 1      # sync baseline
+    assert st1.overlap_efficiency == 0.0
+
+
+@pytest.mark.concurrency
+def test_futures_resolve_in_dispatch_order():
+    """Completion consumes in-flight ticks FIFO: futures resolve in
+    submission order even with several ticks in flight."""
+    d = 8
+    qs = np.random.default_rng(1).standard_normal(
+        (3 * MAX_BATCH, d)).astype(np.float32)
+    order: list = []
+    eng = _SlowReadbackEngine(delay_s=0.02)
+    with MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=1.0,
+                      pipeline_depth=3) as mb:
+        futs = []
+        for i, q in enumerate(qs):
+            f = mb.submit(q, K, C)
+            f.add_done_callback(lambda _, i=i: order.append(i))
+            futs.append(f)
+        for f in futs:
+            f.result(timeout=60)
+    assert order == sorted(order)
+
+
+@pytest.mark.concurrency
+def test_deadline_under_overlap_only_sheds_undispatched():
+    """A request whose budget lapses while its tick is IN FLIGHT still
+    resolves (dispatched = committed); one that lapses in the queue
+    behind a busy pipeline is swept with the typed error."""
+    d = 8
+    qs = np.random.default_rng(2).standard_normal(
+        (MAX_BATCH + 1, d)).astype(np.float32)
+    eng = _SlowReadbackEngine(delay_s=0.05)
+    with MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=1.0,
+                      pipeline_depth=1) as mb:
+        # full tick: cuts immediately, completes after ~50 ms — well past
+        # its 20 ms budgets, but dispatch already committed it
+        committed = [mb.submit(q, K, C, deadline_ms=20.0)
+                     for q in qs[:MAX_BATCH]]
+        # straggler: queued behind the busy pipeline, budget lapses there
+        from repro.serve import DeadlineExceeded
+        doomed = mb.submit(qs[-1], K, C, deadline_ms=10.0)
+        for i, f in enumerate(committed):
+            np.testing.assert_array_equal(f.result(timeout=60).rows, qs[i])
+        with pytest.raises(DeadlineExceeded):
+            doomed.result(timeout=60)
+    st = mb.stats()
+    assert st.expired == 1
+    assert sum(t.expired for t in mb.tick_log) == 1
+
+
+def test_admission_hit_resolves_without_tick(problem, rank_table):
+    """PR 10 admission path: an exact LRU hit resolves at submit —
+    bitwise the cached result — occupying no queue or tick slot."""
+    eng = _engine(problem, rank_table, "cached:dense")
+    users, items = problem
+    hot = items[0] * 1.0001
+    want = eng.query(hot, k=K, c=C)
+    with MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=5.0) as mb:
+        before = mb._m_admission.value    # registry counter is process-global
+        f = mb.submit(hot, K, C)
+        got = f.result(timeout=10)
+        assert_bitwise(got, want)
+        st = mb.stats()
+        after = mb._m_admission.value
+    assert st.admission_hits == 1
+    assert st.requests == 1
+    assert mb.tick_log == []            # never became a tick
+    assert after == before + 1.0
+
+
+def test_admission_miss_takes_normal_path(problem, rank_table):
+    """A cold query under a cached backend still coalesces into a tick,
+    and the NEXT ask of the same query hits at admission."""
+    eng = _engine(problem, rank_table, "cached:dense")
+    users, items = problem
+    q = items[3] * 1.0001
+    with MicroBatcher(eng, max_batch=MAX_BATCH, max_wait_ms=5.0) as mb:
+        first = mb.submit(q, K, C).result(timeout=60)
+        mb.flush()
+        second = mb.submit(q, K, C).result(timeout=60)
+        st = mb.stats()
+    assert_bitwise(second, first)
+    assert st.admission_hits == 1
+    assert st.requests == 2
+    assert sum(t.batch for t in mb.tick_log) == 1
